@@ -1,0 +1,56 @@
+"""Paper Table 2: computation/communication costs of FedPM with the full
+Hessian vs the FOOF approximation.
+
+Measures construction time, inversion time (Cholesky vs Newton–Schulz vs
+the fused Pallas NS kernel in interpret mode) and the per-round
+client→server payload in bytes.  derived = payload bytes."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.inverse import inverse
+from repro.kernels.gram import ops as gram_ops
+from repro.kernels.gram.ref import gram_blocks_ref
+from repro.models.simple import LogisticModel
+from repro.utils import timeit_us
+
+from benchmarks.common import emit
+
+
+def main(d=512, t_tokens=4096, block=128):
+    rng = jax.random.PRNGKey(0)
+    # ---- FedPM w/ full Hessian on logistic regression (d² objects) ----
+    model = LogisticModel(d=d, lam=1e-3)
+    x = jax.random.normal(rng, (t_tokens, d))
+    y = jnp.sign(jax.random.normal(rng, (t_tokens,)))
+    theta = jnp.zeros(d)
+    batch = {"x": x, "y": y}
+    hess = jax.jit(model.hessian)
+    us = timeit_us(lambda: hess(theta, batch))
+    emit("cost_table2/full/construct", us, f"bytes={d*d*4}")
+    h = hess(theta, batch)
+    us = timeit_us(lambda: inverse(h, 1e-3, method="cholesky"))
+    emit("cost_table2/full/invert_cholesky", us, f"bytes={d*d*4}")
+    emit("cost_table2/full/comm", 0.0, f"bytes={d*d*4 + d*4}")
+
+    # ---- FedPM w/ FOOF (block-diagonal d·block objects) ----
+    xb = jax.random.normal(rng, (t_tokens, d))
+    gram_ref = jax.jit(lambda v: gram_blocks_ref(v, block))
+    us = timeit_us(lambda: gram_ref(xb))
+    nb = d // block
+    foof_bytes = nb * block * block * 4
+    emit("cost_table2/foof/construct_jnp", us, f"bytes={foof_bytes}")
+    us = timeit_us(lambda: gram_ops.gram(xb, block, use_pallas=True))
+    emit("cost_table2/foof/construct_pallas_interpret", us,
+         f"bytes={foof_bytes}")
+    a = gram_ref(xb) + 0.1 * jnp.eye(block)
+    us = timeit_us(lambda: inverse(a, 0.1, method="cholesky"))
+    emit("cost_table2/foof/invert_cholesky", us, f"bytes={foof_bytes}")
+    us = timeit_us(lambda: inverse(a, 0.1, method="ns", ns_iters=16))
+    emit("cost_table2/foof/invert_ns", us, f"bytes={foof_bytes}")
+    emit("cost_table2/foof/comm", 0.0, f"bytes={foof_bytes + d*4}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Paper Fig. 3: accuracy vs number of local epochs at a fixed total local
+update budget (1 epoch × 3R rounds, 3 epochs × R rounds, ...), α = 0.1.
+
+Validates: FedPM stays ahead of FedAvg/LocalNewton at every K.
+derived = best accuracy."""
+from __future__ import annotations
+
+from benchmarks.common import DNN_HP, dnn_setup, emit, run_dnn
+
+SCHEDULES = ((1, 18), (3, 6), (6, 3))     # (epochs, rounds): fixed budget
+
+
+def main():
+    setup = dnn_setup(alpha=0.1)
+    for algo in ("fedavg", "localnewton_foof", "fedpm_foof"):
+        for epochs, rounds in SCHEDULES:
+            accs, us = run_dnn(setup, algo, DNN_HP[algo], rounds,
+                               epochs=epochs)
+            emit(f"local_epochs_fig3/{algo}/E{epochs}xR{rounds}", us,
+                 f"best_acc={max(accs):.4f}")
+
+
+if __name__ == "__main__":
+    main()

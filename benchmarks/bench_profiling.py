@@ -1,0 +1,48 @@
+"""Paper Table 16 (Appendix D.5): per-round client train time, client→server
+communication volume, and state memory per method.
+
+Comm bytes are EXACT message-tree sizes (the mesh collective payloads), not
+simulated link timings (DESIGN.md §7).  derived = comm bytes/round."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.data.federated import build_round_batches, steps_per_epoch
+from repro.fl.simulate import FedSim
+from repro.utils import tree_bytes
+
+from benchmarks.common import DNN_HP, dnn_setup, emit
+
+METHODS = ("fedavg", "fedavgm", "fedprox", "scaffold", "fedadam",
+           "ltda", "fedsophia", "localnewton_foof", "fedpm_foof")
+
+
+def main(rounds=3):
+    setup = dnn_setup(alpha=0.1)
+    ds, task = setup["ds"], setup["task"]
+    k = steps_per_epoch(ds, 64) * 2
+    for algo in METHODS:
+        sim = FedSim(task, algo, DNN_HP[algo], ds.n_clients)
+        st = sim.init(jax.random.PRNGKey(0))
+        r = np.random.default_rng(0)
+        # measure message size once via a direct client call
+        batches = build_round_batches(ds, k, 64, r)
+        one = jax.tree.map(lambda x: x[0], batches)
+        cstate = jax.tree.map(lambda x: x[0], st.clients)
+        msg, _ = sim.algo.client(task, sim.hp, st.params, cstate, st.server,
+                                 one, jax.random.PRNGKey(0))
+        comm = tree_bytes(msg)
+        state_mem = tree_bytes(st.params) + tree_bytes(st.server)
+        t0 = time.perf_counter()
+        for t in range(rounds):
+            st, _ = sim.round(st, batches, jax.random.PRNGKey(t))
+        us = (time.perf_counter() - t0) / rounds * 1e6
+        emit(f"profiling_table16/{algo}", us,
+             f"comm_bytes={comm};state_bytes={state_mem}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Roofline summary (spec §g): reads the dry-run artifacts and emits one
+row per (arch × shape × mesh) with the three roofline terms, the dominant
+bottleneck and the useful-FLOPs ratio.  derived carries the terms."""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import emit
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results", "dryrun.jsonl")
+
+
+def load_results(path=RESULTS):
+    rows = []
+    if not os.path.exists(path):
+        return rows
+    with open(path) as f:
+        for line in f:
+            try:
+                rows.append(json.loads(line))
+            except json.JSONDecodeError:
+                pass
+    # dedupe: keep the last entry per (arch, shape, mesh, algo, tag)
+    seen = {}
+    for r in rows:
+        key = (r.get("arch"), r.get("shape"), r.get("mesh"),
+               r.get("algo"), r.get("tag"))
+        seen[key] = r
+    return list(seen.values())
+
+
+def main():
+    rows = load_results()
+    if not rows:
+        emit("roofline/NO_DRYRUN_RESULTS", 0.0, "run repro.launch.dryrun")
+        return
+    for r in sorted(rows, key=lambda r: (str(r.get("arch")),
+                                         str(r.get("shape")),
+                                         str(r.get("mesh")))):
+        if "skipped" in r:
+            emit(f"roofline/{r['arch']}/{r['shape']}/skip", 0.0,
+                 r["skipped"][:60])
+            continue
+        if "error" in r:
+            emit(f"roofline/{r['arch']}/{r['shape']}/{r.get('mesh')}", 0.0,
+                 "ERROR " + r["error"][:60])
+            continue
+        step_s = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        emit(f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}/{r.get('algo')}"
+             + (f"/{r['tag']}" if r.get("tag") else ""),
+             step_s * 1e6,
+             f"dom={r['dominant']};compute_s={r['compute_s']:.4f};"
+             f"memory_s={r['memory_s']:.4f};"
+             f"collective_s={r['collective_s']:.4f};"
+             f"useful={r['useful_ratio']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,107 @@
+"""Shared benchmark scaffolding.
+
+Every bench prints ``name,us_per_call,derived`` CSV rows (spec).  Sizes are
+CPU-budgeted stand-ins for the paper's setups (DESIGN.md §7): the *relative*
+claims (method ordering, heterogeneity gaps, convergence classes) are what
+each bench validates; absolute accuracies differ from CIFAR.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.algorithms import HParams
+from repro.data import (FederatedDataset, make_clustered_classification,
+                        make_libsvm_like)
+from repro.data.federated import build_round_batches, steps_per_epoch
+from repro.fl.simulate import FedSim
+from repro.fl.tasks import ConvexTask, DNNTask
+from repro.models.simple import LogisticModel, MLPModel
+
+
+def emit(name: str, us_per_call: float, derived) -> None:
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+# ------------------------------------------------------------- Test 1 ------
+
+def convex_setup(dataset="a9a", n_clients=None, seed=0):
+    data = make_libsvm_like(dataset, seed=seed)
+    n = n_clients or data["n_clients"]
+    ds = FederatedDataset.from_arrays(data, n, alpha=0.0, seed=seed,
+                                      test_frac=0.1)
+    d = data["x"].shape[1]
+    model = LogisticModel(d=d, lam=1e-3)
+    task = ConvexTask(model)
+    batches = ds.client_full_batches(k_steps=1)
+    ux = np.asarray(batches["x"][:, 0]).reshape(-1, d)
+    uy = np.asarray(batches["y"][:, 0]).reshape(-1)
+    full = {"x": jnp.asarray(ux), "y": jnp.asarray(uy)}
+    theta = jnp.zeros(d)
+    for _ in range(25):
+        theta = theta - jnp.linalg.solve(model.hessian(theta, full),
+                                         model.grad(theta, full))
+    return dict(ds=ds, model=model, task=task, batches=batches,
+                theta_star=theta, f_star=float(model.loss(theta, full)),
+                full=full, d=d)
+
+
+def run_convex(setup, algo, hp, rounds, init_scale=0.1, seed=0):
+    sim = FedSim(setup["task"], algo, hp, setup["ds"].n_clients)
+    rng = jax.random.PRNGKey(seed)
+    st = sim.init(rng)
+    st.params = setup["theta_star"] + init_scale * jax.random.normal(
+        rng, (setup["d"],))
+    errs, fgaps = [], []
+    t0 = time.perf_counter()
+    for t in range(rounds):
+        st, _ = sim.round(st, setup["batches"], jax.random.PRNGKey(t))
+        errs.append(float(jnp.linalg.norm(st.params - setup["theta_star"])))
+        fgaps.append(abs(float(setup["model"].loss(st.params, setup["full"]))
+                         - setup["f_star"]))
+    us = (time.perf_counter() - t0) / rounds * 1e6
+    return errs, fgaps, us
+
+
+# ------------------------------------------------------------- Test 2 ------
+
+DNN_HP = {
+    "fedavg": HParams(lr=0.1),
+    "fedavgm": HParams(lr=0.1, momentum=0.9),
+    "fedprox": HParams(lr=0.1, prox_mu=0.001),
+    "scaffold": HParams(lr=0.1),
+    "fedadam": HParams(lr=0.05, server_lr=0.03),
+    "ltda": HParams(lr=0.01, damping=1e-3),
+    "fedsophia": HParams(lr=0.03),
+    "localnewton_foof": HParams(lr=0.3, damping=1.0),
+    "fedpm_foof": HParams(lr=0.3, damping=1.0),
+}
+
+
+def dnn_setup(alpha=0.1, n_clients=10, n=6000, dim=64, classes=10, seed=0,
+              spread=1.6):
+    data = make_clustered_classification(n, dim, classes, seed=seed,
+                                         spread=spread)
+    ds = FederatedDataset.from_arrays(data, n_clients, alpha=alpha, seed=seed)
+    model = MLPModel(in_dim=dim, hidden=(128, 64), num_classes=classes)
+    task = DNNTask(model)
+    return dict(ds=ds, model=model, task=task, test=ds.test_batch())
+
+
+def run_dnn(setup, algo, hp, rounds, epochs=2, batch=64, seed=0):
+    ds, task = setup["ds"], setup["task"]
+    k = steps_per_epoch(ds, batch) * epochs
+    sim = FedSim(task, algo, hp, ds.n_clients)
+    st = sim.init(jax.random.PRNGKey(seed))
+    r = np.random.default_rng(seed)
+    accs = []
+    t0 = time.perf_counter()
+    for t in range(rounds):
+        batches = build_round_batches(ds, k, batch, r)
+        st, _ = sim.round(st, batches, jax.random.PRNGKey(1000 * seed + t))
+        accs.append(float(task.metric(st.params, setup["test"])))
+    us = (time.perf_counter() - t0) / rounds * 1e6
+    return accs, us

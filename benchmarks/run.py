@@ -1,0 +1,48 @@
+"""Benchmark harness entry: one bench per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (spec).  CPU-budgeted sizes; see
+benchmarks/common.py and EXPERIMENTS.md for the paper mapping:
+
+  bench_convex        → Fig. 1      bench_dnn          → Table 3
+  bench_local_epochs  → Fig. 3      bench_sampling     → Fig. 6
+  bench_foof_samples  → Fig. 7      bench_cost         → Table 2
+  bench_femnist       → Table 15 (FEMNIST, writer-partitioned + sampling)
+  bench_profiling     → Table 16    bench_roofline     → §Roofline (dry-run)
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (bench_convex, bench_cost, bench_dnn,
+                            bench_femnist, bench_foof_samples,
+                            bench_local_epochs, bench_profiling,
+                            bench_roofline, bench_sampling)
+    print("name,us_per_call,derived")
+    benches = [
+        ("convex", lambda: bench_convex.main(rounds=10)),
+        ("dnn", lambda: bench_dnn.main(rounds=10)),
+        ("local_epochs", bench_local_epochs.main),
+        ("sampling", lambda: bench_sampling.main(rounds=10)),
+        ("foof_samples", lambda: bench_foof_samples.main(rounds=8)),
+        ("femnist", lambda: bench_femnist.main(rounds=8)),
+        ("cost", bench_cost.main),
+        ("profiling", bench_profiling.main),
+        ("roofline", bench_roofline.main),
+    ]
+    failed = []
+    for name, fn in benches:
+        try:
+            fn()
+        except Exception as e:                      # keep the harness going
+            failed.append(name)
+            print(f"{name},0.0,ERROR:{type(e).__name__}:{e}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

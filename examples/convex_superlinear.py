@@ -1,0 +1,48 @@
+"""Paper Test 1 (Fig. 1): superlinear convergence of FedPM on strongly
+convex logistic regression with exact Hessians, K = 1.
+
+    PYTHONPATH=src python examples/convex_superlinear.py [--dataset a9a|w8a]
+
+Prints ‖θ_t − θ*‖ per round for 9 methods; FedPM and FedNL coincide
+(Eq. 9 ≡ Eq. 6) and contract superlinearly, LocalNewton plateaus at the
+bias of its locally preconditioned mixing, FO methods crawl.
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.common import convex_setup, run_convex
+from repro.core.algorithms import HParams
+
+METHODS = {
+    "psgd": HParams(lr=0.5),
+    "fedavg": HParams(lr=0.5),
+    "fedavgm": HParams(lr=0.5, momentum=0.9),
+    "scaffold": HParams(lr=0.5),
+    "fedadam": HParams(lr=0.3, server_lr=0.05),
+    "fednl": HParams(lr=1.0, damping=0.0),
+    "fedns": HParams(lr=1.0, damping=1e-3),
+    "localnewton": HParams(lr=1.0, damping=0.0),
+    "fedpm": HParams(lr=1.0, damping=0.0),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="a9a", choices=["a9a", "w8a"])
+    ap.add_argument("--rounds", type=int, default=10)
+    args = ap.parse_args()
+    setup = convex_setup(args.dataset)
+    print(f"dataset={args.dataset} d={setup['d']} "
+          f"clients={setup['ds'].n_clients} f*={setup['f_star']:.6f}")
+    print(f"{'method':12s} " + " ".join(f"r{t:<8d}" for t in
+                                        range(args.rounds)))
+    for algo, hp in METHODS.items():
+        errs, _, _ = run_convex(setup, algo, hp, args.rounds)
+        print(f"{algo:12s} " + " ".join(f"{e:<9.2e}" for e in errs))
+
+
+if __name__ == "__main__":
+    main()

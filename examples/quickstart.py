@@ -1,0 +1,42 @@
+"""Quickstart: federated training with FedPM vs FedAvg in ~30 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Ten clients hold strongly heterogeneous (Dirichlet α=0.1) shards of a
+synthetic 10-class problem; FedPM's preconditioned mixing converges in far
+fewer rounds than FedAvg's simple mixing.
+"""
+import jax
+import numpy as np
+
+from repro.core.algorithms import HParams
+from repro.data import FederatedDataset, make_clustered_classification
+from repro.data.federated import build_round_batches, steps_per_epoch
+from repro.fl.simulate import FedSim
+from repro.fl.tasks import DNNTask
+from repro.models.simple import MLPModel
+
+
+def main(rounds: int = 10, n_clients: int = 10, alpha: float = 0.1):
+    data = make_clustered_classification(6000, 64, 10, seed=0, spread=2.0)
+    ds = FederatedDataset.from_arrays(data, n_clients, alpha=alpha, seed=0)
+    task = DNNTask(MLPModel(in_dim=64, hidden=(128, 64), num_classes=10))
+    test = ds.test_batch()
+    k = steps_per_epoch(ds, 64) * 2              # 2 local epochs per round
+
+    for algo, hp in [("fedavg", HParams(lr=0.1)),
+                     ("fedpm_foof", HParams(lr=0.3, damping=1.0))]:
+        sim = FedSim(task, algo, hp, n_clients)
+        st = sim.init(jax.random.PRNGKey(0))
+        r = np.random.default_rng(0)
+        print(f"\n== {algo} (α={alpha}, {n_clients} clients, K={k}) ==")
+        for t in range(rounds):
+            batches = build_round_batches(ds, k, 64, r)
+            st, m = sim.round(st, batches, jax.random.PRNGKey(t))
+            acc = float(task.metric(st.params, test))
+            print(f"round {t:2d}  client_loss={float(m['client_loss']):.3f}"
+                  f"  test_acc={acc:.3f}")
+
+
+if __name__ == "__main__":
+    main()

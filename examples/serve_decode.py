@@ -1,0 +1,80 @@
+"""Batched serving: prefill a batch of prompts, then decode new tokens
+against the KV/SSM cache — the serve_step the decode_32k/long_500k dry-run
+shapes lower at production scale.
+
+    PYTHONPATH=src python examples/serve_decode.py --arch mamba2-1.3b
+    PYTHONPATH=src python examples/serve_decode.py --arch gemma3-12b
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_NAMES, get_config
+from repro.data import make_lm_tokens
+from repro.models import transformer as T
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo-1b", choices=ARCH_NAMES)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=96)
+    ap.add_argument("--max-new", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=True)
+    if cfg.frontend != "none":
+        raise SystemExit("serve example uses token-input archs; "
+                         "pick a dense/ssm/hybrid/moe arch")
+    rng = jax.random.PRNGKey(0)
+    params = T.init_params(cfg, rng)
+    total = args.prompt_len + args.max_new
+    prompts = jnp.asarray(make_lm_tokens(
+        cfg.vocab_size, args.batch * args.prompt_len, seed=0)).reshape(
+        args.batch, args.prompt_len)
+
+    # ---- prefill ----
+    prefill = jax.jit(lambda p, b: T.prefill(cfg, p, b))
+    t0 = time.time()
+    x_last, cache = prefill(params, {"tokens": prompts})
+    cache = jax.tree.map(  # grow seq dims to the serving horizon
+        lambda leaf: _grow(leaf, args.prompt_len, total), cache)
+    logits = (x_last @ params["head"]["w"]).astype(jnp.float32)
+    next_tok = jnp.argmax(logits[:, 0], axis=-1)[:, None]
+    jax.block_until_ready(next_tok)
+    t_prefill = time.time() - t0
+    print(f"arch={cfg.name}  prefill {args.batch}×{args.prompt_len} tokens "
+          f"in {t_prefill*1e3:.0f} ms")
+
+    # ---- decode loop ----
+    decode = jax.jit(lambda p, c, b, pos: T.decode_step(cfg, p, c, b, pos))
+    out = [next_tok]
+    t0 = time.time()
+    for i in range(args.max_new - 1):
+        pos = jnp.int32(args.prompt_len + i)
+        logits, cache = decode(params, cache, {"tokens": out[-1]}, pos)
+        nxt = jnp.argmax(logits[:, 0, :cfg.vocab_size], axis=-1)[:, None]
+        out.append(nxt.astype(jnp.int32))
+    jax.block_until_ready(out[-1])
+    dt = time.time() - t0
+    toks = args.batch * (args.max_new - 1)
+    gen = np.asarray(jnp.concatenate(out, axis=1))
+    print(f"decoded {toks} tokens in {dt:.2f}s "
+          f"({toks/dt:.1f} tok/s on 1 CPU core)")
+    print("first continuation:", gen[0][:16].tolist())
+
+
+def _grow(leaf, have, want):
+    for axis in range(leaf.ndim):
+        if leaf.shape[axis] == have:
+            pads = [(0, 0)] * leaf.ndim
+            pads[axis] = (0, want - have)
+            return jnp.pad(leaf, pads)
+    return leaf
+
+
+if __name__ == "__main__":
+    main()

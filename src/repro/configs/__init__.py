@@ -1,0 +1,41 @@
+"""Architecture registry: ``get_config("<arch-id>")``.
+
+Each module defines ``CONFIG`` with the exact assigned spec (source cited in
+``source=``).  ``get_config(name, reduced=True)`` returns the CPU smoke
+variant.
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.models.config import ModelConfig, InputShape, INPUT_SHAPES
+
+_ARCH_MODULES = {
+    "command-r-35b": "command_r_35b",
+    "gemma3-12b": "gemma3_12b",
+    "qwen3-moe-30b-a3b": "qwen3_moe_30b_a3b",
+    "deepseek-v2-236b": "deepseek_v2_236b",
+    "llama3-405b": "llama3_405b",
+    "olmo-1b": "olmo_1b",
+    "mamba2-1.3b": "mamba2_1_3b",
+    "musicgen-medium": "musicgen_medium",
+    "zamba2-7b": "zamba2_7b",
+    "qwen2-vl-72b": "qwen2_vl_72b",
+}
+
+ARCH_NAMES = tuple(_ARCH_MODULES)
+
+
+def get_config(name: str, *, reduced: bool = False) -> ModelConfig:
+    if name not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {name!r}; choose from {ARCH_NAMES}")
+    mod = importlib.import_module(f"repro.configs.{_ARCH_MODULES[name]}")
+    cfg = mod.CONFIG
+    return cfg.reduced() if reduced else cfg
+
+
+def shape_supported(cfg: ModelConfig, shape_name: str) -> bool:
+    """long_500k only for sub-quadratic archs (DESIGN.md §5 skips)."""
+    if shape_name == "long_500k":
+        return cfg.subquadratic
+    return True

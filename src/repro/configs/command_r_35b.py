@@ -1,0 +1,12 @@
+"""Command R 35B — dense GQA, no-bias [hf:CohereForAI/c4ai-command-r-v01]."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="command-r-35b", family="dense",
+    num_layers=40, d_model=8192, num_heads=64, num_kv_heads=8,
+    d_ff=22528, vocab_size=256000,
+    use_bias=False, norm="layernorm", rope_theta=8e6,
+    fsdp_mode="cols",     # §Perf B2: weight-gather FSDP placement
+    seq_parallel=True,    # §Perf B3: seq-sharded residual stream
+    source="hf:CohereForAI/c4ai-command-r-v01",
+)

@@ -1,0 +1,16 @@
+"""DeepSeek-V2 236B — MLA (kv_lora=512) + MoE 2 shared + 160 routed top-6
+[arXiv:2405.04434].  (The real model's first layer is a dense MLP; we use
+the MoE block uniformly — noted in DESIGN.md §7.)"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-v2-236b", family="moe",
+    num_layers=60, d_model=5120, num_heads=128, num_kv_heads=128,
+    d_ff=1536, vocab_size=102400,
+    attention="mla", kv_lora_rank=512, q_lora_rank=1536,
+    qk_rope_dim=64, qk_nope_dim=128, v_head_dim=128, head_dim=192,
+    num_experts=160, experts_per_tok=6, num_shared_experts=2,
+    moe_shard_map=True,   # §Perf A1: locality-aware expert dispatch
+    fsdp_mode="cols",     # §Perf B2: weight-gather FSDP placement
+    source="arXiv:2405.04434",
+)

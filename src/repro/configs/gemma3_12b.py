@@ -1,0 +1,14 @@
+"""Gemma 3 12B — 5:1 local:global sliding-window attention, 128k context
+[hf:google/gemma-3-1b-pt].  Unit = 6 layers (5 sliding + 1 global); in
+long-context serving the global layers hold a capped window too, which is
+what makes long_500k decode feasible (DESIGN.md §5)."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma3-12b", family="dense",
+    num_layers=48, d_model=3840, num_heads=16, num_kv_heads=8,
+    head_dim=256, d_ff=15360, vocab_size=262144,
+    local_per_global=5, sliding_window=1024, layers_per_unit=6,
+    rope_theta=1e6, subquadratic=True, long_context_global_window=8192,
+    source="hf:google/gemma-3-1b-pt",
+)

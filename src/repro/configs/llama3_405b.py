@@ -1,0 +1,14 @@
+"""Llama 3 405B — dense GQA, 128k vocab [arXiv:2407.21783].
+Largest assigned arch; FedPM runs in fused_k1 mode only (DESIGN.md §3b
+memory wall) with FSDP param sharding over the data axis."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama3-405b", family="dense",
+    num_layers=126, d_model=16384, num_heads=128, num_kv_heads=8,
+    d_ff=53248, vocab_size=128256,
+    rope_theta=5e5,
+    fsdp_mode="cols",     # §Perf B2: weight-gather FSDP placement
+    seq_parallel=True,    # §Perf B3: seq-sharded residual stream
+    source="arXiv:2407.21783",
+)

@@ -1,0 +1,12 @@
+"""Mamba2 1.3B — SSD (state-space duality), attention-free [arXiv:2405.21060]."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-1.3b", family="ssm",
+    num_layers=48, d_model=2048, num_heads=0, num_kv_heads=0,
+    d_ff=0, vocab_size=50280,
+    attention="none", ssm_state=128, ssm_expand=2, ssm_head_dim=64,
+    subquadratic=True,
+    seq_parallel=True,    # §Perf D2: free peak-memory win (22→13 GB, same step time)
+    source="arXiv:2405.21060",
+)

@@ -1,0 +1,12 @@
+"""MusicGen medium — decoder-only over EnCodec tokens [arXiv:2306.05284].
+The EnCodec frontend is a stub per spec: input_specs() provides precomputed
+frame embeddings; the model carries 4 parallel codebook heads."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="musicgen-medium", family="audio",
+    num_layers=48, d_model=1536, num_heads=24, num_kv_heads=24,
+    d_ff=6144, vocab_size=2048,
+    num_codebooks=4, frontend="audio_stub",
+    source="arXiv:2306.05284",
+)

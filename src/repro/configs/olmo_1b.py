@@ -1,0 +1,10 @@
+"""OLMo 1B — non-parametric LayerNorm [arXiv:2402.00838]."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="olmo-1b", family="dense",
+    num_layers=16, d_model=2048, num_heads=16, num_kv_heads=16,
+    d_ff=8192, vocab_size=50304,
+    norm="nonparametric",
+    source="arXiv:2402.00838",
+)

@@ -1,0 +1,16 @@
+"""Qwen2-VL 72B — M-RoPE, dynamic resolution [arXiv:2409.12191].
+ViT frontend is a stub per spec: input_specs() provides 1024 precomputed
+patch embeddings prepended to the text tokens; positions are the 3-stream
+(t, h, w) M-RoPE ids."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-72b", family="vlm",
+    num_layers=80, d_model=8192, num_heads=64, num_kv_heads=8,
+    d_ff=29568, vocab_size=152064,
+    mrope_sections=(16, 24, 24), frontend="vision_stub", frontend_tokens=1024,
+    rope_theta=1e6,
+    fsdp_mode="cols",     # §Perf B2: weight-gather FSDP placement
+    seq_parallel=True,    # §Perf B3: seq-sharded residual stream
+    source="arXiv:2409.12191",
+)

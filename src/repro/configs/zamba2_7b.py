@@ -1,0 +1,14 @@
+"""Zamba2 7B — Mamba2 backbone + shared attention block [arXiv:2411.15242].
+81 mamba layers in units of 3; one weight-shared GQA attention block is
+applied at the head of every unit (27 applications, one set of weights)."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-7b", family="hybrid",
+    num_layers=81, d_model=3584, num_heads=32, num_kv_heads=32,
+    d_ff=14336, vocab_size=32000,
+    attention="full", ssm_state=64, ssm_expand=2, ssm_head_dim=64,
+    attn_every=3, layers_per_unit=3, subquadratic=True,
+    long_context_global_window=8192,
+    source="arXiv:2411.15242",
+)

@@ -1,0 +1,4 @@
+"""FedPM core: preconditioned mixing, FOOF, inverses, the algorithm zoo."""
+from repro.core.algorithms import ALGORITHMS, Algorithm, HParams, get_algorithm
+from repro.core.foof import mix_preconditioned, precondition_tree, GRAM_ROUTES
+from repro.core.inverse import inverse, ns_inverse, solve

@@ -1,0 +1,407 @@
+"""The FL algorithm zoo (paper Table 1 + Sec 4 comparison methods).
+
+Every algorithm is a pair of pure functions
+
+    client(task, hp, params, cstate, sstate, batches, rng) -> (msg, new_cstate)
+    server(task, hp, params, sstate, msgs, mask)   -> (new_params, sstate)
+
+vmapped over clients by ``repro.fl.simulate``.  ``batches`` has a leading
+local-step axis K.  ``msgs`` are client-stacked; ``mask`` ∈ {0,1}^N marks
+participating clients (client sampling, Appendix D.2).
+
+Categories (paper Table 1):
+  FOGM : psgd
+  FOPM : fedavg, fedavgm, fedprox, scaffold, fedadam
+  SOGM : fednl, fedns                        (flat params + full Hessian)
+  SOPM : localnewton, ltda, fedsophia        (simple mixing)
+         fedpm                               (preconditioned mixing — ours)
+
+``localnewton`` and ``fedpm`` have both a ``full`` backend (exact Hessian,
+Test 1's convex model) and a ``foof`` backend (per-layer input covariance,
+Test 2's DNNs).  FedPM with K = 1 and full Hessians is algebraically equal
+to FedNL's global update (Eq. 9 ≡ Eq. 6) — asserted in tests.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import foof as F
+from repro.core import inverse as inv
+from repro.utils import (tree_add, tree_axpy, tree_scale, tree_sub,
+                         tree_zeros_like, global_norm_clip)
+
+PyTree = Any
+
+
+@dataclass(frozen=True)
+class HParams:
+    lr: float = 0.1
+    local_steps: int = 1
+    damping: float = 1.0            # δ for SO methods ({1.0, 0.01, 1e-4} in paper)
+    clip: float | None = None       # gradient-clipping max norm
+    weight_decay: float = 0.0
+    momentum: float = 0.9           # fedavgm
+    server_lr: float = 1.0          # fedadam / scaffold global lr
+    prox_mu: float = 0.001          # fedprox
+    beta1: float = 0.9              # fedadam / fedsophia
+    beta2: float = 0.99
+    tau: float = 1e-3               # fedadam ε
+    sketch: int = 0                 # fedns sketch size (0 → d)
+    inverse_method: str = "cholesky"  # cholesky | ns | pallas_ns
+    ns_iters: int = 20
+    foof_timing: str = "end"        # grams at round "end" (paper trick) | "start"
+    sophia_gamma: float = 0.05
+
+
+@dataclass(frozen=True)
+class Algorithm:
+    name: str
+    category: str                   # FOGM | FOPM | SOGM | SOPM
+    init_server: Callable
+    init_client: Callable
+    client: Callable
+    server: Callable
+    needs_hessian: bool = False
+    needs_grams: bool = False
+
+
+def _wmean(tree_stack: PyTree, mask: jax.Array) -> PyTree:
+    wsum = jnp.maximum(jnp.sum(mask), 1.0)
+    return jax.tree.map(
+        lambda x: jnp.tensordot(mask, x, axes=1) / wsum, tree_stack)
+
+
+def _no_state(task, params):
+    return ()
+
+
+def _grad_step(task, hp, params, batch, extra=None):
+    loss, g = task.loss_grad(params, batch)
+    if extra is not None:
+        g = tree_add(g, extra)
+    if hp.weight_decay:
+        g = tree_axpy(hp.weight_decay, params, g)
+    g = global_norm_clip(g, hp.clip)
+    return tree_axpy(-hp.lr, g, params), loss
+
+
+def _sgd_local(task, hp, params, batches, extra_fn=None):
+    """K local SGD steps; extra_fn(theta) adds a correction to the grad."""
+    def step(theta, batch):
+        extra = extra_fn(theta) if extra_fn is not None else None
+        theta, loss = _grad_step(task, hp, theta, batch, extra)
+        return theta, loss
+
+    theta, losses = jax.lax.scan(step, params, batches)
+    return theta, jnp.mean(losses)
+
+
+# ================================================================= FOGM =====
+
+def _psgd_client(task, hp, params, cstate, sstate, batches, rng):
+    first = jax.tree.map(lambda x: x[0], batches)
+    _, g = task.loss_grad(params, first)
+    g = global_norm_clip(g, hp.clip)
+    return {"grad": g}, cstate
+
+
+def _psgd_server(task, hp, params, sstate, msgs, mask):
+    g = _wmean(msgs["grad"], mask)
+    return tree_axpy(-hp.lr, g, params), sstate
+
+
+# ================================================================= FOPM =====
+
+def _fedavg_client(task, hp, params, cstate, sstate, batches, rng):
+    theta, loss = _sgd_local(task, hp, params, batches)
+    return {"theta": theta, "loss": loss}, cstate
+
+
+def _fedavg_server(task, hp, params, sstate, msgs, mask):
+    return _wmean(msgs["theta"], mask), sstate
+
+
+def _fedavgm_server(task, hp, params, sstate, msgs, mask):
+    delta = tree_sub(_wmean(msgs["theta"], mask), params)
+    v = tree_axpy(hp.momentum, sstate, delta)   # v = m·v + Δ
+    return tree_add(params, v), v
+
+
+def _fedprox_client(task, hp, params, cstate, sstate, batches, rng):
+    theta0 = params
+    theta, loss = _sgd_local(
+        task, hp, params, batches,
+        extra_fn=lambda th: tree_scale(tree_sub(th, theta0), hp.prox_mu))
+    return {"theta": theta, "loss": loss}, cstate
+
+
+def _scaffold_init_client(task, params):
+    return tree_zeros_like(params)
+
+
+def _scaffold_init_server(task, params):
+    return tree_zeros_like(params)
+
+
+def _scaffold_client(task, hp, params, cstate, sstate, batches, rng):
+    # correction: g - c_i + c ; c (server control variate) rides in sstate
+    c_i, c = cstate, sstate
+    corr = tree_sub(c, c_i)
+    theta0 = params
+    theta, loss = _sgd_local(task, hp, params, batches,
+                             extra_fn=lambda th: corr)
+    k = batches_len(batches)
+    # canonical option-II update: c_i⁺ = c_i − c + (θ0 − θ_K)/(K·η)
+    c_i_new = tree_add(tree_sub(c_i, c),
+                       tree_scale(tree_sub(theta0, theta), 1.0 / (k * hp.lr)))
+    return {"theta": theta, "dc": tree_sub(c_i_new, c_i), "loss": loss}, c_i_new
+
+
+def _scaffold_server(task, hp, params, sstate, msgs, mask):
+    theta = _wmean(msgs["theta"], mask)
+    frac = jnp.sum(mask) / mask.shape[0]
+    c = tree_add(sstate, tree_scale(_wmean(msgs["dc"], mask), frac))
+    new = tree_add(params, tree_scale(tree_sub(theta, params), hp.server_lr))
+    return new, c
+
+
+def _fedadam_init_server(task, params):
+    return (tree_zeros_like(params), tree_zeros_like(params))
+
+
+def _fedadam_client(task, hp, params, cstate, sstate, batches, rng):
+    theta, loss = _sgd_local(task, hp, params, batches)
+    return {"delta": tree_sub(theta, params), "loss": loss}, cstate
+
+
+def _fedadam_server(task, hp, params, sstate, msgs, mask):
+    m, v = sstate
+    d = _wmean(msgs["delta"], mask)
+    m = tree_add(tree_scale(m, hp.beta1), tree_scale(d, 1 - hp.beta1))
+    v = jax.tree.map(lambda vv, dd: hp.beta2 * vv + (1 - hp.beta2) * dd * dd, v, d)
+    upd = jax.tree.map(lambda mm, vv: mm / (jnp.sqrt(vv) + hp.tau), m, v)
+    return tree_axpy(hp.server_lr, upd, params), (m, v)
+
+
+# ======================================================= SOGM (flat only) ===
+
+def _fednl_client(task, hp, params, cstate, sstate, batches, rng):
+    first = jax.tree.map(lambda x: x[0], batches)
+    _, g = task.loss_grad(params, first)
+    h = task.hessian(params, first)
+    return {"grad": g, "hess": h}, cstate
+
+
+def _fednl_server(task, hp, params, sstate, msgs, mask):
+    g = _wmean(msgs["grad"], mask)
+    h = _wmean(msgs["hess"], mask)
+    step = inv.solve(h, g[:, None], hp.damping, method=hp.inverse_method,
+                     ns_iters=hp.ns_iters)[:, 0]
+    return params - hp.lr * step, sstate
+
+
+def _fedns_client(task, hp, params, cstate, sstate, batches, rng):
+    first = jax.tree.map(lambda x: x[0], batches)
+    _, g = task.loss_grad(params, first)
+    h = task.hessian(params, first)
+    d = params.shape[0]
+    s = hp.sketch or d
+    # The sketch frame must be SHARED across clients (server broadcasts it);
+    # a fixed per-run test matrix stands in for that broadcast.  Orthonormal
+    # columns (QR of a gaussian): a raw square gaussian has cond ≈ d, which
+    # squares through the Nyström core solve and destroys fp32 accuracy.
+    gauss = jax.random.normal(jax.random.PRNGKey(42), (d, s))
+    omega, _ = jnp.linalg.qr(gauss)
+    return {"grad": g, "sketch": h @ omega, "omega": omega}, cstate
+
+
+def _fedns_server(task, hp, params, sstate, msgs, mask):
+    """Explicit Nyström reconstruction Ĥ = Y(ΩᵀY)⁻¹Yᵀ, then a damped solve.
+    (A Woodbury identity solve is cheaper but loses ~30% accuracy to fp32
+    cancellation at δ ≲ 1e-3 — measured; EXPERIMENTS.md §Repro notes.)"""
+    g = _wmean(msgs["grad"], mask)
+    y = _wmean(msgs["sketch"], mask)
+    omega = msgs["omega"][0]                              # shared frame
+    core = omega.T @ y
+    core = 0.5 * (core + core.T) + 1e-6 * jnp.eye(core.shape[0])
+    h_hat = y @ jnp.linalg.solve(core, y.T)
+    h_hat = 0.5 * (h_hat + h_hat.T)
+    x = inv.solve(h_hat, g[:, None], jnp.maximum(hp.damping, 1e-6),
+                  method=hp.inverse_method, ns_iters=hp.ns_iters)[:, 0]
+    return params - hp.lr * x, sstate
+
+
+# ================================================ SOPM with full Hessian ====
+
+def _newton_local(task, hp, params, batches):
+    def step(theta, batch):
+        _, g = task.loss_grad(theta, batch)
+        h = task.hessian(theta, batch)
+        d = inv.solve(h, g[:, None], hp.damping, method=hp.inverse_method,
+                      ns_iters=hp.ns_iters)[:, 0]
+        return theta - hp.lr * d, h
+
+    theta, hs = jax.lax.scan(step, params, batches)
+    return theta, jax.tree.map(lambda x: x[-1], hs)   # last-iterate Hessian
+
+
+def _localnewton_full_client(task, hp, params, cstate, sstate, batches, rng):
+    theta, _ = _newton_local(task, hp, params, batches)
+    return {"theta": theta}, cstate
+
+
+def _fedpm_full_client(task, hp, params, cstate, sstate, batches, rng):
+    theta, h_last = _newton_local(task, hp, params, batches)
+    return {"theta": theta, "precond": h_last}, cstate
+
+
+def _fedpm_full_server(task, hp, params, sstate, msgs, mask):
+    """Preconditioned mixing (Eq. 9/10): θ = (P̄)⁻¹ · mean_i P_i θ_i."""
+    pbar = _wmean(msgs["precond"], mask)
+    ptheta = _wmean(jax.vmap(lambda p, t: p @ t)(msgs["precond"], msgs["theta"]),
+                    mask)
+    theta = inv.solve(pbar, ptheta[:, None], 0.0, method=hp.inverse_method,
+                      ns_iters=hp.ns_iters)[:, 0]
+    return theta, sstate
+
+
+# ==================================================== SOPM with FOOF ========
+
+def _foof_local(task, hp, params, batches):
+    """K FOOF-preconditioned steps (Eq. 11).  Grams for preconditioning are
+    computed once at θ₀ (first batch); transmitted grams follow
+    hp.foof_timing — 'end' recomputes at θ_K (the paper's efficiency trick,
+    Sec 4.2 hyperparameter notes)."""
+    first = jax.tree.map(lambda x: x[0], batches)
+    grams0 = task.grams(params, first)
+
+    def step(theta, batch):
+        loss, g = task.loss_grad(theta, batch)
+        if hp.weight_decay:
+            g = tree_axpy(hp.weight_decay, theta, g)
+        g = global_norm_clip(g, hp.clip)
+        pre = F.precondition_tree(theta, g, grams0, damping=hp.damping,
+                                  method=hp.inverse_method,
+                                  ns_iters=hp.ns_iters)
+        return tree_axpy(-hp.lr, pre, theta), loss
+
+    theta, losses = jax.lax.scan(step, params, batches)
+    if hp.foof_timing == "end":
+        last = jax.tree.map(lambda x: x[-1], batches)
+        grams_tx = task.grams(theta, last)
+    else:
+        grams_tx = grams0
+    return theta, grams_tx, jnp.mean(losses)
+
+
+def _localnewton_foof_client(task, hp, params, cstate, sstate, batches, rng):
+    theta, _, loss = _foof_local(task, hp, params, batches)
+    return {"theta": theta, "loss": loss}, cstate
+
+
+def _fedpm_foof_client(task, hp, params, cstate, sstate, batches, rng):
+    theta, grams, loss = _foof_local(task, hp, params, batches)
+    return {"theta": theta, "grams": grams, "loss": loss}, cstate
+
+
+def _fedpm_foof_server(task, hp, params, sstate, msgs, mask):
+    """Preconditioned mixing with FOOF blocks (Eq. 12), mask-weighted."""
+    mixed = F.mix_preconditioned(msgs["theta"], msgs["grams"],
+                                 damping=hp.damping,
+                                 method=hp.inverse_method,
+                                 ns_iters=hp.ns_iters, weights=mask)
+    return mixed, sstate
+
+
+# ------------------------------------------------ diagonal SOPM baselines ---
+
+def _diag_local(task, hp, params, batches, *, sophia: bool):
+    """LTDA / FedSophia local steps with a diagonal curvature estimate
+    (squared-gradient Fisher diagonal; Sophia adds sign-bounded clipping)."""
+    def step(carry, batch):
+        theta, m, h = carry
+        loss, g = task.loss_grad(theta, batch)
+        if hp.weight_decay:
+            g = tree_axpy(hp.weight_decay, theta, g)
+        g = global_norm_clip(g, hp.clip)
+        h = jax.tree.map(lambda hh, gg: hp.beta2 * hh + (1 - hp.beta2) * gg * gg,
+                         h, g)
+        if sophia:
+            m = jax.tree.map(lambda mm, gg: hp.beta1 * mm + (1 - hp.beta1) * gg,
+                             m, g)
+            upd = jax.tree.map(
+                lambda mm, hh: jnp.clip(mm / jnp.maximum(hp.sophia_gamma * hh,
+                                                         1e-12), -1.0, 1.0),
+                m, h)
+        else:
+            upd = jax.tree.map(lambda gg, hh: gg / (jnp.sqrt(hh) + hp.damping),
+                               g, h)
+        theta = tree_axpy(-hp.lr, upd, theta)
+        return (theta, m, h), loss
+
+    z = tree_zeros_like(params)
+    (theta, _, _), losses = jax.lax.scan(step, (params, z, z), batches)
+    return theta, jnp.mean(losses)
+
+
+def _ltda_client(task, hp, params, cstate, sstate, batches, rng):
+    theta, loss = _diag_local(task, hp, params, batches, sophia=False)
+    return {"theta": theta, "loss": loss}, cstate
+
+
+def _fedsophia_client(task, hp, params, cstate, sstate, batches, rng):
+    theta, loss = _diag_local(task, hp, params, batches, sophia=True)
+    return {"theta": theta, "loss": loss}, cstate
+
+
+# ================================================================ registry ==
+
+def batches_len(batches) -> int:
+    return jax.tree.leaves(batches)[0].shape[0]
+
+
+def _alg(name, cat, client, server, init_server=_no_state,
+         init_client=_no_state, **kw) -> Algorithm:
+    return Algorithm(name=name, category=cat, client=client, server=server,
+                     init_server=init_server, init_client=init_client, **kw)
+
+
+ALGORITHMS: dict[str, Algorithm] = {
+    "psgd": _alg("psgd", "FOGM", _psgd_client, _psgd_server),
+    "fedavg": _alg("fedavg", "FOPM", _fedavg_client, _fedavg_server),
+    "fedavgm": _alg("fedavgm", "FOPM", _fedavg_client, _fedavgm_server,
+                    init_server=lambda task, p: tree_zeros_like(p)),
+    "fedprox": _alg("fedprox", "FOPM", _fedprox_client, _fedavg_server),
+    "scaffold": _alg("scaffold", "FOPM", _scaffold_client, _scaffold_server,
+                     init_server=_scaffold_init_server,
+                     init_client=_scaffold_init_client),
+    "fedadam": _alg("fedadam", "FOPM", _fedadam_client, _fedadam_server,
+                    init_server=_fedadam_init_server),
+    "fednl": _alg("fednl", "SOGM", _fednl_client, _fednl_server,
+                  needs_hessian=True),
+    "fedns": _alg("fedns", "SOGM", _fedns_client, _fedns_server,
+                  needs_hessian=True),
+    "localnewton": _alg("localnewton", "SOPM", _localnewton_full_client,
+                        _fedavg_server, needs_hessian=True),
+    "fedpm": _alg("fedpm", "SOPM", _fedpm_full_client, _fedpm_full_server,
+                  needs_hessian=True),
+    "localnewton_foof": _alg("localnewton_foof", "SOPM",
+                             _localnewton_foof_client, _fedavg_server,
+                             needs_grams=True),
+    "ltda": _alg("ltda", "SOPM", _ltda_client, _fedavg_server),
+    "fedsophia": _alg("fedsophia", "SOPM", _fedsophia_client, _fedavg_server),
+    "fedpm_foof": _alg("fedpm_foof", "SOPM", _fedpm_foof_client,
+                       _fedpm_foof_server, needs_grams=True),
+}
+
+
+def get_algorithm(name: str) -> Algorithm:
+    if name not in ALGORITHMS:
+        raise KeyError(f"unknown algorithm {name!r}; "
+                       f"choose from {sorted(ALGORITHMS)}")
+    return ALGORITHMS[name]

@@ -1,0 +1,271 @@
+"""FOOF preconditioning + FedPM preconditioned mixing over param pytrees.
+
+FOOF (Benzing 2022, paper Sec 3.3): per-layer preconditioner is the
+uncentered input covariance A_l; the update is
+    W ← W − η · (A_l + δI)⁻¹ · ∇W          (Eq. 11)
+and FedPM's server-side *preconditioned mixing* is
+    W ← (Σ_i A_i,l + NδI)⁻¹ · Σ_i (A_i,l + δI) · W_i,l      (Eq. 12)
+(δ applied on both sides so mixing of identical params is the identity —
+a property we test).
+
+Grams mirror the param tree (size-0 leaves = "no gram").  Some params share
+another param's input (e.g. MoE expert ``wi`` sees the same tokens as the
+``router``); ``GRAM_ROUTES`` redirects them to the sibling gram.  The
+embedding's gram is the exact token-frequency *diagonal* (1-D leaf).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import inverse as inv
+from repro.models.layers import is_gram
+
+PyTree = Any
+
+#: param key → sibling key whose gram (same layer inputs) should be used
+GRAM_ROUTES = {"wi": "router", "wkv_a": "wq_a", "shared_wi": "router"}
+
+
+def _resolve_gram(key: str, grams_level: dict):
+    g = grams_level.get(key)
+    if g is not None and g.size > 0:
+        return g
+    route = GRAM_ROUTES.get(key)
+    if route is not None:
+        g2 = grams_level.get(route)
+        if g2 is not None and g2.size > 0:
+            return g2
+    return None
+
+
+def _align_gram(a: jax.Array, lead_w: tuple) -> jax.Array:
+    """Insert axes so gram [..., nb, bs, bs] broadcasts over w's leading dims
+    (e.g. an expert axis that the pooled gram lacks)."""
+    a_lead = a.shape[:-3]
+    missing = len(lead_w) - len(a_lead)
+    if missing > 0:
+        a = a.reshape(*a_lead, *(1,) * missing, *a.shape[-3:])
+    return jnp.broadcast_to(a, (*lead_w, *a.shape[-3:]))
+
+
+def _blocked_apply(op_result_of, a: jax.Array, w: jax.Array) -> jax.Array:
+    """Apply a per-block [..., nb, bs, bs] operator to w [..., din, dout]
+    (din = nb·bs), broadcasting over leading dims of w."""
+    nb, bs = a.shape[-3], a.shape[-1]
+    lead_w = w.shape[:-2]
+    din, dout = w.shape[-2:]
+    assert din == nb * bs, f"gram blocks {nb}×{bs} mismatch din {din}"
+    wb = w.reshape(*lead_w, nb, bs, dout)
+    out = op_result_of(_align_gram(a, lead_w), wb)
+    return out.reshape(*lead_w, din, dout).astype(w.dtype)
+
+
+def precondition_tree(params: PyTree, grads: PyTree, grams: PyTree, *,
+                      damping: float, method: str = "cholesky",
+                      ns_iters: int = 20) -> PyTree:
+    """Return the FOOF-preconditioned gradient tree (Eq. 11 direction).
+
+    Linear params with a gram get (A+δI)⁻¹g per block; the embedding gets
+    the exact diagonal solve; everything else passes through unchanged
+    (→ plain first-order step, DESIGN.md §Arch-applicability).
+    """
+    def walk(p_level, g_level, a_level):
+        if isinstance(p_level, dict):
+            out = {}
+            for k in p_level:
+                pk, gk = p_level[k], g_level[k]
+                ak = a_level[k] if isinstance(a_level, dict) else None
+                if isinstance(pk, dict):
+                    out[k] = walk(pk, gk, ak)
+                    continue
+                a = _resolve_gram(k, a_level) if isinstance(a_level, dict) else None
+                out[k] = _precondition_leaf(pk, gk, a, damping, method, ns_iters)
+            return out
+        return jax.tree.map(lambda g: g, g_level)
+
+    return walk(params, grads, grams)
+
+
+def _precondition_leaf(p, g, a, damping, method, ns_iters):
+    if a is None or a.size == 0:
+        return g
+    if a.ndim < 3:
+        # diagonal gram (embedding): a [V]; g [V, D]
+        if a.shape[-1] == g.shape[-2]:
+            return (g.astype(jnp.float32)
+                    / (a[..., None] + damping)).astype(g.dtype)
+        return g
+    solve = partial(inv.solve, damping=damping, method=method,
+                    ns_iters=ns_iters)
+    return _blocked_apply(solve, a, g)
+
+
+def mix_preconditioned(params_stack: PyTree, grams_stack: PyTree, *,
+                       damping: float, method: str = "cholesky",
+                       ns_iters: int = 20, weights: jax.Array | None = None
+                       ) -> PyTree:
+    """FedPM server mixing (Eq. 12) over client-stacked trees.
+
+    params_stack / grams_stack have a leading client axis N.  Params with a
+    gram: θ = (Σ_i w_i A_i + δI)⁻¹ · Σ_i w_i (A_i + δI) θ_i with Σw_i = 1
+    (uniform by default; ``weights`` supports client sampling).  Others:
+    plain weighted mean (simple mixing).  Mixing identical params is the
+    identity for any SPD grams — tested property.
+    """
+    n = jax.tree.leaves(params_stack)[0].shape[0]
+    if weights is None:
+        w = jnp.full((n,), 1.0 / n, jnp.float32)
+    else:
+        w = weights / jnp.maximum(jnp.sum(weights), 1e-12)
+
+    def wmean(x):
+        return jnp.tensordot(w.astype(jnp.float32),
+                             x.astype(jnp.float32), axes=1).astype(x.dtype)
+
+    def walk(p_level, a_level):
+        if isinstance(p_level, dict):
+            out = {}
+            for k in p_level:
+                pk = p_level[k]
+                if isinstance(pk, dict):
+                    out[k] = walk(pk, a_level[k] if isinstance(a_level, dict) else None)
+                    continue
+                a = _resolve_gram(k, a_level) if isinstance(a_level, dict) else None
+                out[k] = _mix_leaf(pk, a, damping, method, ns_iters, wmean)
+            return out
+        return jax.tree.map(wmean, p_level)
+
+    return walk(params_stack, grams_stack)
+
+
+def _mix_leaf(p_stack, a_stack, damping, method, ns_iters, wmean):
+    mean = wmean(p_stack)
+    if a_stack is None or a_stack.size == 0:
+        return mean
+    if a_stack.ndim < 4:
+        # diagonal gram: [N, V]; params [N, V, D]
+        if a_stack.shape[-1] != p_stack.shape[-2]:
+            return mean
+        num = wmean((a_stack[..., None] + damping)
+                    * p_stack.astype(jnp.float32))
+        den = wmean(a_stack)[..., None] + damping
+        return (num / den).astype(p_stack.dtype)
+    # blocked matrix gram: a [N, ..., nb, bs, bs]; p [N, ..., din, dout]
+    nb, bs = a_stack.shape[-3], a_stack.shape[-1]
+    din, dout = p_stack.shape[-2:]
+    if din != nb * bs:
+        return mean
+    lead = p_stack.shape[1:-2]
+    pb = p_stack.reshape(p_stack.shape[0], *lead, nb, bs, dout).astype(jnp.float32)
+    a_b = jax.vmap(lambda a: _align_gram(a, lead))(a_stack.astype(jnp.float32))
+    ad = a_b + damping * jnp.eye(bs, dtype=jnp.float32)
+    num = wmean(ad @ pb)                                  # Σ w_i (A_i+δI)θ_i
+    abar = wmean(a_b)                                     # Σ w_i A_i
+    out = inv.solve(abar, num, damping=damping, method=method,
+                    ns_iters=ns_iters)
+    return out.reshape(*lead, din, dout).astype(p_stack.dtype)
+
+
+# ----------------------------------------------- amortized preconditioner --
+
+def invert_grams(grams: PyTree, *, damping: float, method: str = "cholesky",
+                 ns_iters: int = 20) -> PyTree:
+    """Precompute (A+δI)⁻¹ for every gram leaf (§Perf C4: the paper computes
+    FOOF matrices once per round — this is that trick as a first-class step:
+    refresh every F steps, apply the cached inverses in between)."""
+    def leaf(a):
+        if a.size == 0:
+            return a
+        if a.ndim < 3 or a.shape[-1] != a.shape[-2]:
+            return 1.0 / (a.astype(jnp.float32) + damping)   # diagonal
+        return inv.inverse(a, damping, method=method, ns_iters=ns_iters)
+
+    return jax.tree.map(leaf, grams)
+
+
+def apply_inverses(params: PyTree, grads: PyTree, inverses: PyTree) -> PyTree:
+    """Preconditioned gradients using cached inverses (pure matmuls)."""
+    def walk(p_level, g_level, i_level):
+        if isinstance(p_level, dict):
+            out = {}
+            for k in p_level:
+                pk, gk = p_level[k], g_level[k]
+                ik = i_level[k] if isinstance(i_level, dict) else None
+                if isinstance(pk, dict):
+                    out[k] = walk(pk, gk, ik)
+                    continue
+                a = _resolve_gram(k, i_level) if isinstance(i_level, dict) else None
+                out[k] = _apply_inv_leaf(pk, gk, a)
+            return out
+        return g_level
+
+    return walk(params, grads, inverses)
+
+
+def _apply_inv_leaf(p, g, ainv):
+    if ainv is None or ainv.size == 0:
+        return g
+    if ainv.ndim < 3:
+        if ainv.shape[-1] == g.shape[-2]:     # diagonal inverse [V]
+            return (g.astype(jnp.float32) * ainv[..., None]).astype(g.dtype)
+        return g
+    matmul = lambda a, w: (a @ w.astype(jnp.float32)).astype(w.dtype)
+    return _blocked_apply(matmul, ainv, g)
+
+
+# ------------------------------------------------- shard_map (psum) mixing --
+
+def mix_preconditioned_psum(params: PyTree, grams: PyTree, *, axes,
+                            damping: float, method: str = "cholesky",
+                            ns_iters: int = 20) -> PyTree:
+    """Eq. 12 inside a shard_map manual region: the client "stack" is the
+    mesh axes ``axes``; means become psums.  Semantically identical to
+    ``mix_preconditioned`` with uniform weights (tested equivalence)."""
+    axes = tuple(axes)
+
+    def pmean(x):
+        return jax.lax.pmean(x, axes)
+
+    def walk(p_level, a_level):
+        if isinstance(p_level, dict):
+            out = {}
+            for k in p_level:
+                pk = p_level[k]
+                if isinstance(pk, dict):
+                    out[k] = walk(pk, a_level[k] if isinstance(a_level, dict) else None)
+                    continue
+                a = _resolve_gram(k, a_level) if isinstance(a_level, dict) else None
+                out[k] = _mix_leaf_psum(pk, a, damping, method, ns_iters, pmean)
+            return out
+        return jax.tree.map(pmean, p_level)
+
+    return walk(params, grams)
+
+
+def _mix_leaf_psum(p, a, damping, method, ns_iters, pmean):
+    if a is None or a.size == 0:
+        return pmean(p)
+    if a.ndim < 3:
+        # diagonal gram (embedding): a [V]; p [V, D]
+        if a.shape[-1] != p.shape[-2]:
+            return pmean(p)
+        num = pmean((a[..., None] + damping) * p.astype(jnp.float32))
+        den = pmean(a)[..., None] + damping
+        return (num / den).astype(p.dtype)
+    nb, bs = a.shape[-3], a.shape[-1]
+    din, dout = p.shape[-2:]
+    if din != nb * bs:
+        return pmean(p)
+    lead = p.shape[:-2]
+    pb = p.reshape(*lead, nb, bs, dout).astype(jnp.float32)
+    a_b = _align_gram(a.astype(jnp.float32), lead)
+    ad = a_b + damping * jnp.eye(bs, dtype=jnp.float32)
+    num = pmean(ad @ pb)
+    abar = pmean(a_b)
+    out = inv.solve(abar, num, damping=damping, method=method,
+                    ns_iters=ns_iters)
+    return out.reshape(*lead, din, dout).astype(p.dtype)

@@ -1,0 +1,70 @@
+"""Damped SPD inverses for FedPM preconditioning.
+
+Two paths (DESIGN.md §4.1):
+  - ``cholesky``: dense factorization (the paper's choice; oracle here).
+  - ``ns``: Newton–Schulz iteration  X ← X(2I − AX)  — pure matmuls, the
+    TPU-native path.  The Pallas kernel in ``repro.kernels.nschulz`` computes
+    the same iteration with explicit VMEM tiling; this module is its jnp
+    reference and the dispatch point (set ``use_pallas=True``).
+
+All functions are batched over arbitrary leading dims.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def damp(a: jax.Array, damping: float) -> jax.Array:
+    n = a.shape[-1]
+    return a + damping * jnp.eye(n, dtype=a.dtype)
+
+
+def ns_inverse(a: jax.Array, iters: int = 20) -> jax.Array:
+    """Approximate A⁻¹ for SPD A via Newton–Schulz.
+
+    Init X₀ = Aᵀ/(‖A‖₁‖A‖∞) guarantees ‖I − AX₀‖ < 1; convergence is then
+    quadratic.  ``iters=20`` covers condition numbers ≳ 1e5.
+    """
+    af = a.astype(jnp.float32)
+    n1 = jnp.max(jnp.sum(jnp.abs(af), axis=-1), axis=-1)   # ‖A‖∞
+    ninf = jnp.max(jnp.sum(jnp.abs(af), axis=-2), axis=-1)  # ‖A‖₁
+    x = jnp.swapaxes(af, -1, -2) / (n1 * ninf)[..., None, None]
+    eye2 = 2.0 * jnp.eye(a.shape[-1], dtype=jnp.float32)
+
+    def body(x, _):
+        return x @ (eye2 - af @ x), None
+
+    x, _ = jax.lax.scan(body, x, None, length=iters)
+    return x.astype(a.dtype)
+
+
+def inverse(a: jax.Array, damping: float = 0.0, *, method: str = "cholesky",
+            ns_iters: int = 20) -> jax.Array:
+    ad = damp(a.astype(jnp.float32), damping)
+    if method == "ns":
+        return ns_inverse(ad, ns_iters)
+    if method == "pallas_ns":
+        from repro.kernels.nschulz import ops as _ops
+        return _ops.ns_inverse(ad, iters=ns_iters)
+    n = a.shape[-1]
+    return jnp.linalg.solve(ad, jnp.broadcast_to(jnp.eye(n, dtype=jnp.float32),
+                                                 ad.shape))
+
+
+def solve(a: jax.Array, b: jax.Array, damping: float = 0.0, *,
+          method: str = "cholesky", ns_iters: int = 20) -> jax.Array:
+    """Solve (A + δI) x = b.  a: [..., n, n]; b: [..., n, k]."""
+    ad = damp(a.astype(jnp.float32), damping)
+    bf = b.astype(jnp.float32)
+    if method in ("ns", "pallas_ns"):
+        inv = (ns_inverse(ad, ns_iters) if method == "ns"
+               else inverse(a, damping, method="pallas_ns", ns_iters=ns_iters))
+        return (inv @ bf).astype(b.dtype)
+    # broadcast batch dims (jnp.linalg.solve requires matching leading dims)
+    lead = jnp.broadcast_shapes(ad.shape[:-2], bf.shape[:-2])
+    ad = jnp.broadcast_to(ad, (*lead, *ad.shape[-2:]))
+    bf = jnp.broadcast_to(bf, (*lead, *bf.shape[-2:]))
+    return jnp.linalg.solve(ad, bf).astype(b.dtype)

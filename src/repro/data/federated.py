@@ -1,0 +1,87 @@
+"""Federated dataset container + per-round batch construction.
+
+``build_round_batches`` produces the [N, K, B, ...] pytree the simulate
+engine vmaps over.  Clients hold ragged shards (Dirichlet partition); each
+round every client samples K·B indices from its own shard (with replacement
+when the shard is small — the uniform-K requirement of a vmapped engine,
+DESIGN.md §7).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.fl.partition import dirichlet_partition, even_partition
+
+
+@dataclass
+class FederatedDataset:
+    x: np.ndarray
+    y: np.ndarray
+    shards: list                      # list of index arrays, one per client
+    test_x: np.ndarray | None = None
+    test_y: np.ndarray | None = None
+
+    @property
+    def n_clients(self) -> int:
+        return len(self.shards)
+
+    @classmethod
+    def from_arrays(cls, data: dict, n_clients: int, *, alpha: float = 0.0,
+                    seed: int = 0, test_frac: float = 0.15):
+        """alpha == 0 → homogeneous even split; alpha > 0 → Dirichlet(α)."""
+        rng = np.random.default_rng(seed)
+        x, y = data["x"], data["y"]
+        n = len(x)
+        perm = rng.permutation(n)
+        n_test = int(n * test_frac)
+        test_idx, train_idx = perm[:n_test], perm[n_test:]
+        xt, yt = x[train_idx], y[train_idx]
+        if alpha > 0:
+            labels = yt.astype(np.int64) if yt.dtype.kind in "iu" else \
+                ((yt > 0).astype(np.int64))
+            shards = dirichlet_partition(labels, n_clients, alpha, rng)
+        else:
+            shards = even_partition(len(xt), n_clients, rng)
+        return cls(x=xt, y=yt, shards=shards,
+                   test_x=x[test_idx], test_y=y[test_idx])
+
+    def test_batch(self, max_n: int = 4096) -> dict:
+        return {"x": jnp.asarray(self.test_x[:max_n]),
+                "y": jnp.asarray(self.test_y[:max_n])}
+
+    def client_full_batches(self, k_steps: int) -> dict:
+        """[N, K, M, ...] — every step sees the client's full shard (Test 1:
+        full gradients/Hessians). Requires equal shard sizes."""
+        sizes = {len(s) for s in self.shards}
+        m = min(sizes)
+        xs = np.stack([self.x[s[:m]] for s in self.shards])
+        ys = np.stack([self.y[s[:m]] for s in self.shards])
+        reps = (1, k_steps) + (1,) * self.x.ndim
+        return {"x": jnp.asarray(np.tile(xs[:, None], reps)),
+                "y": jnp.asarray(np.tile(ys[:, None],
+                                         (1, k_steps) + (1,) * (self.y.ndim)))}
+
+
+def build_round_batches(ds: FederatedDataset, steps: int, batch: int,
+                        rng: np.random.Generator) -> dict:
+    """Stochastic [N, K, B, ...] batches; replacement iff shard < K·B."""
+    n = ds.n_clients
+    need = steps * batch
+    xs, ys = [], []
+    for s in ds.shards:
+        replace = len(s) < need
+        idx = rng.choice(s, size=need, replace=replace)
+        xs.append(ds.x[idx])
+        ys.append(ds.y[idx])
+    x = np.stack(xs).reshape(n, steps, batch, *ds.x.shape[1:])
+    y = np.stack(ys).reshape(n, steps, batch, *ds.y.shape[1:])
+    return {"x": jnp.asarray(x), "y": jnp.asarray(y)}
+
+
+def steps_per_epoch(ds: FederatedDataset, batch: int) -> int:
+    """Mean shard size / batch (uniform-K approximation of 'one epoch')."""
+    mean_sz = float(np.mean([len(s) for s in ds.shards]))
+    return max(1, int(round(mean_sz / batch)))

@@ -1,0 +1,74 @@
+"""Synthetic dataset generators, statistically matched to the paper's data.
+
+The offline container has no LibSVM/CIFAR/FEMNIST; DESIGN.md §7 records the
+substitution.  Shapes/sizes follow the paper exactly:
+  w8a: d=300, 142 clients × 350 samples      a9a: d=123, 80 × 407
+  cifar10-like: 32×32×3, 10 classes          cifar100-like: 100 classes
+  femnist-like: 28×28×1, 62 classes, ragged writers
+"""
+from __future__ import annotations
+
+import numpy as np
+
+LIBSVM_SPECS = {
+    # name: (d, n_clients, samples_per_client)
+    "w8a": (300, 142, 350),
+    "a9a": (123, 80, 407),
+}
+
+
+def make_libsvm_like(name: str, seed: int = 0):
+    """Sparse-ish binary classification matching the LibSVM set's shape.
+    Features are bernoulli-gated gaussians (LibSVM a9a/w8a are sparse
+    binary); labels from a ground-truth hyperplane + 10% flip noise."""
+    d, n_clients, per = LIBSVM_SPECS[name]
+    rng = np.random.default_rng(seed)
+    n = n_clients * per
+    density = 0.15
+    x = rng.normal(size=(n, d)) * (rng.random((n, d)) < density)
+    x = x.astype(np.float32)
+    theta_star = rng.normal(size=d).astype(np.float32) / np.sqrt(d)
+    margin = x @ theta_star + 0.1 * rng.normal(size=n)
+    y = np.sign(margin).astype(np.float32)
+    y[y == 0] = 1.0
+    flip = rng.random(n) < 0.10
+    y[flip] *= -1.0
+    return {"x": x, "y": y, "n_clients": n_clients, "per_client": per}
+
+
+def make_clustered_classification(n: int, d: int, classes: int, seed: int = 0,
+                                  spread: float = 1.0):
+    """Gaussian class clusters in R^d (MLP-scale stand-in for CIFAR feats)."""
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(size=(classes, d)).astype(np.float32) * 2.0
+    y = rng.integers(0, classes, size=n)
+    x = centers[y] + spread * rng.normal(size=(n, d)).astype(np.float32)
+    return {"x": x.astype(np.float32), "y": y.astype(np.int32)}
+
+
+def make_image_classification(n: int, hw: int, ch: int, classes: int,
+                              seed: int = 0, noise: float = 0.6):
+    """Low-res images: smooth per-class templates + pixel noise (CNN-scale
+    stand-in for CIFAR10/100)."""
+    rng = np.random.default_rng(seed)
+    base = rng.normal(size=(classes, hw, hw, ch)).astype(np.float32)
+    # smooth templates so conv layers have structure to find
+    for _ in range(2):
+        base = (base + np.roll(base, 1, 1) + np.roll(base, -1, 1)
+                + np.roll(base, 1, 2) + np.roll(base, -1, 2)) / 5.0
+    y = rng.integers(0, classes, size=n)
+    x = base[y] + noise * rng.normal(size=(n, hw, hw, ch)).astype(np.float32)
+    return {"x": x.astype(np.float32), "y": y.astype(np.int32)}
+
+
+def make_lm_tokens(vocab: int, n_tokens: int, seed: int = 0,
+                   zipf_a: float = 1.2) -> np.ndarray:
+    """Zipf-distributed token stream with local bigram structure (so a small
+    LM has something learnable)."""
+    rng = np.random.default_rng(seed)
+    ranks = rng.zipf(zipf_a, size=n_tokens)
+    toks = np.minimum(ranks - 1, vocab - 1).astype(np.int32)
+    # inject bigram structure: every even position predicts (prev*7+1) % vocab
+    idx = np.arange(1, n_tokens, 2)
+    toks[idx] = (toks[idx - 1] * 7 + 1) % vocab
+    return toks

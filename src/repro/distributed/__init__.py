@@ -1,0 +1,15 @@
+"""Distribution layer: mesh axes, logical sharding rules, roofline model."""
+from repro.distributed.axes import (
+    CLIENT_AXES,
+    MODEL_AXIS,
+    POD_AXIS,
+    DATA_AXIS,
+    client_axis_size,
+)
+from repro.distributed.roofline import (
+    V5E,
+    HardwareSpec,
+    RooflineReport,
+    collective_bytes_from_hlo,
+    roofline_from_compiled,
+)

@@ -1,0 +1,26 @@
+"""Canonical mesh-axis names.
+
+The FL mapping (DESIGN.md §3): clients ARE the data-parallel axis.
+Single-pod mesh: ("data", "model"); multi-pod: ("pod", "data", "model").
+Server-side mixing = collectives over CLIENT_AXES ∩ mesh.axis_names.
+"""
+from __future__ import annotations
+
+import jax
+
+POD_AXIS = "pod"
+DATA_AXIS = "data"
+MODEL_AXIS = "model"
+#: axes that together enumerate client cohorts (present axes only are used)
+CLIENT_AXES = (POD_AXIS, DATA_AXIS)
+
+
+def present_client_axes(mesh: jax.sharding.Mesh) -> tuple[str, ...]:
+    return tuple(a for a in CLIENT_AXES if a in mesh.axis_names)
+
+
+def client_axis_size(mesh: jax.sharding.Mesh) -> int:
+    n = 1
+    for a in present_client_axes(mesh):
+        n *= mesh.shape[a]
+    return n

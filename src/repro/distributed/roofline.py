@@ -1,0 +1,173 @@
+"""Roofline model for the multi-pod dry-run (DESIGN.md §6).
+
+This container is CPU-only; TPU v5e is the compile *target*.  The three
+roofline terms are derived from the compiled artifact:
+
+  compute    = HLO_FLOPs_per_chip  / peak_flops
+  memory     = HLO_bytes_per_chip  / hbm_bw
+  collective = wire_bytes_per_chip / ici_bw
+
+``compiled.cost_analysis()`` (post-SPMD, per-partition program) supplies
+FLOPs and bytes-accessed.  Collective bytes are not in cost_analysis, so we
+parse the post-partitioning HLO text and sum the result sizes of every
+all-reduce / all-gather / reduce-scatter / all-to-all / collective-permute,
+each scaled by its ring-algorithm wire factor over its replica-group size.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1, "f8e4m3": 1, "f8e5m2fnuz": 1, "f8e4m3fnuz": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  "%ar = bf16[128,1024]{1,0} all-reduce-start(...)" or tuple results.
+_OP_RE = re.compile(
+    r"=\s*(?P<rtype>\(.*?\)|[\w\[\],{}/ ]*?)\s*"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?P<variant>-start)?\(",
+)
+_SHAPE_RE = re.compile(r"(?P<dt>[a-z]+[0-9]*[a-z0-9]*)\[(?P<dims>[0-9,]*)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareSpec:
+    name: str
+    peak_flops: float      # per chip, bf16
+    hbm_bw: float          # bytes/s per chip
+    ici_bw: float          # bytes/s per link
+
+
+# TPU v5e (per system prompt): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link.
+V5E = HardwareSpec(name="tpu_v5e", peak_flops=197e12, hbm_bw=819e9, ici_bw=50e9)
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt = m.group("dt")
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = m.group("dims")
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        # iota format [num_groups, group_size]<=[total]
+        return int(m.group(2))
+    return default
+
+
+def _wire_factor(op: str, group: int) -> float:
+    """Per-chip wire bytes ÷ result bytes for ring algorithms."""
+    g = max(group, 1)
+    if op == "all-reduce":
+        return 2.0 * (g - 1) / g
+    if op in ("all-gather", "reduce-scatter", "all-to-all"):
+        return (g - 1) / g
+    return 1.0  # collective-permute
+
+
+def collective_bytes_from_hlo(hlo_text: str, num_devices: int) -> dict:
+    """Sum per-chip collective wire bytes from post-partitioning HLO text.
+
+    Returns {'total': bytes, 'by_op': {op: bytes}, 'count': int}.
+    ``-done`` ops are skipped (their ``-start`` already counted).
+    """
+    by_op: dict[str, float] = defaultdict(float)
+    count = 0
+    for line in hlo_text.splitlines():
+        if "-done(" in line:
+            continue
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        op = m.group("op")
+        size = _shape_bytes(m.group("rtype"))
+        if size == 0:
+            continue
+        g = _group_size(line, num_devices)
+        by_op[op] += size * _wire_factor(op, g)
+        count += 1
+    return {"total": float(sum(by_op.values())), "by_op": dict(by_op), "count": count}
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    num_devices: int
+    flops_per_chip: float
+    bytes_per_chip: float
+    coll_bytes_per_chip: float
+    coll_by_op: dict
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float          # 6·N_active·D per step (global)
+    useful_ratio: float         # model_flops / (flops_per_chip · chips)
+    peak_memory_bytes: int      # per-chip peak from memory_analysis
+    hw: str
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def roofline_from_compiled(compiled, *, arch: str, shape: str, mesh_name: str,
+                           num_devices: int, model_flops: float,
+                           hw: HardwareSpec = V5E) -> RooflineReport:
+    # cost_analysis() counts while bodies ONCE (measured) — useless for
+    # scanned layer stacks.  Use the static HLO analyzer, which multiplies
+    # by known_trip_count (validated exact on nested scans).
+    from repro.distributed.hlo_analysis import analyze_hlo
+    hlo = analyze_hlo(compiled.as_text(), num_devices)
+    flops = float(hlo["flops"])
+    byts = float(hlo["hbm_bytes"])
+    coll = {"total": hlo["collective_bytes"], "by_op": hlo["collective_by_op"]}
+
+    compute_s = flops / hw.peak_flops
+    memory_s = byts / hw.hbm_bw
+    collective_s = coll["total"] / hw.ici_bw
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+
+    mem = compiled.memory_analysis()
+    peak = 0
+    for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                 "output_size_in_bytes", "generated_code_size_in_bytes"):
+        peak += int(getattr(mem, attr, 0) or 0)
+
+    total_flops = flops * num_devices
+    return RooflineReport(
+        arch=arch, shape=shape, mesh=mesh_name, num_devices=num_devices,
+        flops_per_chip=flops, bytes_per_chip=byts,
+        coll_bytes_per_chip=coll["total"], coll_by_op=coll["by_op"],
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        dominant=dominant, model_flops=model_flops,
+        useful_ratio=(model_flops / total_flops) if total_flops else 0.0,
+        peak_memory_bytes=peak, hw=hw.name,
+    )

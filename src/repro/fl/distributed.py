@@ -1,0 +1,194 @@
+"""Production FL engine for the assigned architectures (DESIGN.md §3b).
+
+Two modes:
+
+``fused_k1``  — FedPM with K = 1 collapses to the ideal global second-order
+step  θ ← θ − η·(P̄+δI)⁻¹·ḡ  with P̄/ḡ the client means (Eq. 6 ≡ Eq. 9).
+Implemented as a plain pjit step: the batch axis IS the client axis, so the
+token-contraction in each gram and the mean-loss gradient are exactly the
+client means, inserted as all-reduces by GSPMD.  No per-client parameter
+replicas → scales to llama3-405b with FSDP param sharding.
+
+``local_steps`` — K > 1 local FOOF steps per round.  shard_map *manual* over
+the client axes ("pod","data") so local gradients do NOT sync across
+clients, while the "model" axis stays under GSPMD auto-partitioning
+(tensor/expert parallelism inside each client cohort).  The round ends with
+preconditioned mixing (Eq. 12) as psums over the client axes.  Requires a
+full (model-sharded) parameter replica per cohort — the memory wall that
+rules out 405B-scale (DESIGN.md §3b).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import foof as F
+from repro.core.algorithms import HParams
+from repro.distributed.axes import present_client_axes
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.utils import tree_axpy, global_norm_clip
+
+PyTree = Any
+
+
+# ============================================================== fused K=1 ===
+
+def make_fused_k1_step(cfg: ModelConfig, hp: HParams):
+    """(params, batch) -> (params, metrics): one FedPM round, K = 1.
+
+    Under pjit with batch sharded over the client axes, every client-mean in
+    Eq. 9 is realized by a GSPMD all-reduce; the FOOF preconditioner P̄ is
+    the token-pooled gram (= mean of per-client grams for equal shards).
+    """
+
+    def step(params, batch):
+        (loss, aux), grads = jax.value_and_grad(
+            lambda p: T.loss_fn(cfg, p, batch, collect_foof=True),
+            has_aux=True)(params)
+        if hp.weight_decay:
+            grads = tree_axpy(hp.weight_decay, params, grads)
+        grads = global_norm_clip(grads, hp.clip)
+        pre = F.precondition_tree(params, grads, aux["grams"],
+                                  damping=hp.damping,
+                                  method=hp.inverse_method,
+                                  ns_iters=hp.ns_iters)
+        new_params = tree_axpy(-hp.lr, pre, params)
+        return new_params, {"loss": loss}
+
+    return step
+
+
+def make_amortized_steps(cfg: ModelConfig, hp: HParams):
+    """(refresh_step, steady_step) — §Perf C4 (the paper's once-per-round
+    FOOF trick as a first-class feature).
+
+      refresh: (params, batch) -> (params, inverses, metrics)
+               collects grams, inverts once, applies.
+      steady:  (params, inverses, batch) -> (params, metrics)
+               pure matmul preconditioning with the cached inverses.
+
+    A round with refresh interval F costs (refresh + (F−1)·steady)/F.
+    """
+
+    def refresh(params, batch):
+        (loss, aux), grads = jax.value_and_grad(
+            lambda p: T.loss_fn(cfg, p, batch, collect_foof=True),
+            has_aux=True)(params)
+        if hp.weight_decay:
+            grads = tree_axpy(hp.weight_decay, params, grads)
+        grads = global_norm_clip(grads, hp.clip)
+        inverses = F.invert_grams(aux["grams"], damping=hp.damping,
+                                  method=hp.inverse_method,
+                                  ns_iters=hp.ns_iters)
+        pre = F.apply_inverses(params, grads, inverses)
+        return tree_axpy(-hp.lr, pre, params), inverses, {"loss": loss}
+
+    def steady(params, inverses, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: T.loss_fn(cfg, p, batch)[0])(params)
+        if hp.weight_decay:
+            grads = tree_axpy(hp.weight_decay, params, grads)
+        grads = global_norm_clip(grads, hp.clip)
+        pre = F.apply_inverses(params, grads, inverses)
+        return tree_axpy(-hp.lr, pre, params), {"loss": loss}
+
+    return refresh, steady
+
+
+def abstract_inverses(cfg: ModelConfig, batch):
+    """ShapeDtypeStructs of the cached-inverse tree (mirrors grams)."""
+    def fn(params, b):
+        _, aux = T.loss_fn(cfg, params, b, collect_foof=True)
+        return F.invert_grams(aux["grams"], damping=1.0)
+    return jax.eval_shape(fn, T.abstract_params(cfg), batch)
+
+
+def make_fedavg_step(cfg: ModelConfig, hp: HParams):
+    """First-order baseline round (PSGD/FedAvg-K1): θ ← θ − η·ḡ."""
+
+    def step(params, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: T.loss_fn(cfg, p, batch)[0])(params)
+        if hp.weight_decay:
+            grads = tree_axpy(hp.weight_decay, params, grads)
+        grads = global_norm_clip(grads, hp.clip)
+        return tree_axpy(-hp.lr, grads, params), {"loss": loss}
+
+    return step
+
+
+# ============================================================ local steps ===
+
+def make_local_steps_round(cfg: ModelConfig, hp: HParams,
+                           mesh: jax.sharding.Mesh, k_steps: int):
+    """(params, batch) -> (params, metrics): one FedPM round with K > 1.
+
+    batch leaves are [B_global, ...] sharded over the client axes; inside
+    the manual region each cohort reshapes its slice into K microbatches.
+    Params must be replicated over the client axes (fsdp=False).
+    """
+    client_axes = present_client_axes(mesh)
+    n_clients = 1
+    for a in client_axes:
+        n_clients *= mesh.shape[a]
+
+    def per_client(params, batch):
+        local = jax.tree.map(
+            lambda x: x.reshape(k_steps, x.shape[0] // k_steps, *x.shape[1:]),
+            batch)
+        first = jax.tree.map(lambda x: x[0], local)
+        grams0 = T.loss_fn(cfg, params, first, collect_foof=True)[1]["grams"]
+
+        def sgd(theta, mb):
+            (loss, _), g = jax.value_and_grad(
+                lambda p: T.loss_fn(cfg, p, mb), has_aux=True)(theta)
+            if hp.weight_decay:
+                g = tree_axpy(hp.weight_decay, theta, g)
+            g = global_norm_clip(g, hp.clip)
+            pre = F.precondition_tree(theta, g, grams0, damping=hp.damping,
+                                      method=hp.inverse_method,
+                                      ns_iters=hp.ns_iters)
+            return tree_axpy(-hp.lr, pre, theta), loss
+
+        theta, losses = jax.lax.scan(sgd, params, local)
+        if hp.foof_timing == "end":
+            last = jax.tree.map(lambda x: x[-1], local)
+            grams = T.loss_fn(cfg, theta, last, collect_foof=True)[1]["grams"]
+        else:
+            grams = grams0
+        # ---- preconditioned mixing (Eq. 12) over the client axes ----
+        mixed = F.mix_preconditioned_psum(theta, grams, axes=client_axes,
+                                          damping=hp.damping,
+                                          method=hp.inverse_method,
+                                          ns_iters=hp.ns_iters)
+        return mixed, jnp.mean(losses)
+
+    def round_fn(params, batch):
+        bspecs = jax.tree.map(lambda _: P(client_axes), batch)
+        pspecs = jax.tree.map(lambda _: P(), params)
+        mixed, loss = jax.shard_map(
+            per_client, mesh=mesh, in_specs=(pspecs, bspecs),
+            out_specs=(pspecs, P()), axis_names=set(client_axes),
+            check_vma=False)(params, batch)
+        return mixed, {"loss": loss}
+
+    return round_fn
+
+
+# ============================================================== serving =====
+
+def make_decode_step(cfg: ModelConfig):
+    def step(params, cache, batch, pos):
+        return T.decode_step(cfg, params, cache, batch, pos)
+    return step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def step(params, batch):
+        return T.prefill(cfg, params, batch)
+    return step

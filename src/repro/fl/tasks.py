@@ -1,0 +1,65 @@
+"""Task adapters binding models to the algorithm interface.
+
+A *task* exposes exactly what algorithms consume:
+    loss_grad(params, batch) -> (loss, grads)
+    grams(params, batch)     -> FOOF gram tree       (SOPM/foof methods)
+    hessian(params, batch)   -> [d, d]               (flat convex only)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.simple import (CNNModel, LogisticModel, MLPModel,
+                                 ce_loss_and_grams)
+
+
+@dataclass(frozen=True)
+class ConvexTask:
+    """Test 1: logistic regression with analytic grad/Hessian, flat θ ∈ R^d."""
+    model: LogisticModel
+
+    def init(self, rng):
+        return self.model.init(rng)
+
+    def loss_grad(self, theta, batch):
+        return self.model.loss(theta, batch), self.model.grad(theta, batch)
+
+    def hessian(self, theta, batch):
+        return self.model.hessian(theta, batch)
+
+    def grams(self, theta, batch):
+        # full-Hessian task: "gram" IS the Hessian (used by foof-path tests)
+        return self.model.hessian(theta, batch)[None]   # [1, d, d] one block
+
+    def metric(self, theta, batch):
+        return self.model.accuracy(theta, batch)
+
+
+@dataclass(frozen=True)
+class DNNTask:
+    """Test 2: MLP / CNN classification with FOOF grams."""
+    model: Any   # MLPModel | CNNModel
+
+    def init(self, rng):
+        return self.model.init(rng)
+
+    def loss_grad(self, params, batch):
+        def lf(p):
+            loss, _ = ce_loss_and_grams(self.model, p, batch)
+            return loss
+        return jax.value_and_grad(lf)(params)
+
+    def grams(self, params, batch):
+        _, grams = ce_loss_and_grams(self.model, params, batch, collect=True)
+        return grams
+
+    def hessian(self, params, batch):
+        raise NotImplementedError("full Hessian only for the convex task")
+
+    def metric(self, params, batch):
+        logits, _ = self.model.apply(params, batch["x"])
+        return jnp.mean((jnp.argmax(logits, -1) == batch["y"]).astype(jnp.float32))

@@ -1,0 +1,64 @@
+"""Pallas TPU kernel: blocked FOOF gram construction  A = (1/T)·XᵀX + λI.
+
+The FedPM hot loop (DESIGN.md §4.3): every linear layer's preconditioner is
+the uncentered input covariance, block-diagonal within the layer.  This
+kernel computes the diagonal blocks A_n = X_nᵀX_n for X_n = X[:, n·bs:(n+1)·bs]
+by streaming T in tiles of ``t_block`` rows through VMEM and accumulating
+each [bs, bs] output block in fp32 on the MXU; the 1/T scale and the λI
+damping are fused into the final grid step (no extra HBM pass).
+
+Grid: (nb, T/t_block) — the token axis is the minor (sequential) dimension,
+so each output block accumulates in place across its token tiles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gram_kernel(x_ref, o_ref, *, nsteps: int, inv_t: float, damping: float):
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.float32)                    # [t_block, bs]
+    o_ref[...] += jax.lax.dot_general(
+        x, x, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)[None]
+
+    @pl.when(t == nsteps - 1)
+    def _finish():
+        bs = o_ref.shape[-1]
+        eye = jnp.eye(bs, dtype=jnp.float32)
+        o_ref[...] = o_ref[...] * inv_t + damping * eye[None]
+
+
+def gram_blocks(x: jax.Array, block: int, *, damping: float = 0.0,
+                t_block: int = 512, interpret: bool = False) -> jax.Array:
+    """x: [T, d] (d = nb·block) → [nb, block, block] fp32.
+
+    VMEM per step: t_block·block·(x dtype) + block²·4 ≤ ~6 MB at the default
+    shapes (512×1024 bf16 + 1024² fp32) — fits v5e VMEM with double buffering.
+    """
+    t, d = x.shape
+    assert d % block == 0, (d, block)
+    nb = d // block
+    tb = min(t_block, t)
+    assert t % tb == 0, (t, tb)
+    nsteps = t // tb
+
+    kernel = functools.partial(_gram_kernel, nsteps=nsteps,
+                               inv_t=1.0 / t, damping=damping)
+    return pl.pallas_call(
+        kernel,
+        grid=(nb, nsteps),
+        in_specs=[pl.BlockSpec((tb, block), lambda n, s: (s, n))],
+        out_specs=pl.BlockSpec((1, block, block), lambda n, s: (n, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, block, block), jnp.float32),
+        interpret=interpret,
+    )(x)

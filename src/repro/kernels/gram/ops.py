@@ -1,0 +1,45 @@
+"""jit'd public wrapper for the gram kernel (CPU: interpret=True)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.gram.gram import gram_blocks
+from repro.kernels.gram.ref import gram_blocks_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("block", "damping", "use_pallas"))
+def gram(x: jax.Array, block: int, *, damping: float = 0.0,
+         use_pallas: bool | None = None) -> jax.Array:
+    """Blocked FOOF gram of x [T, d] → [d/block, block, block] fp32.
+
+    Pads T to the tile size when needed (padding rows are zeros → exact:
+    the 1/T scale uses the true T via pre-scaling)."""
+    use_pallas = _on_tpu() if use_pallas is None else use_pallas
+    t, d = x.shape
+    if not use_pallas and not _interpret_ok(t, d, block):
+        return gram_blocks_ref(x, block, damping=damping)
+    tb = 512 if t >= 512 else t
+    pad = (-t) % tb
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad, d), x.dtype)])
+        # zeros contribute nothing; rescale the mean to the padded length
+        a = gram_blocks(x, block, damping=0.0, t_block=tb,
+                        interpret=not _on_tpu())
+        a = a * ((t + pad) / t)
+        if damping:
+            a = a + damping * jnp.eye(block, dtype=jnp.float32)
+        return a
+    return gram_blocks(x, block, damping=damping, t_block=tb,
+                       interpret=not _on_tpu())
+
+
+def _interpret_ok(t, d, block) -> bool:
+    # interpret mode is Python-slow; cap the work it sees in tests
+    return t * d <= 1 << 22

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the gram kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gram_blocks_ref(x: jax.Array, block: int, *, damping: float = 0.0
+                    ) -> jax.Array:
+    t, d = x.shape
+    nb = d // block
+    xb = x.reshape(t, nb, block)
+    a = jnp.einsum("tnb,tnc->nbc", xb, xb,
+                   preferred_element_type=jnp.float32) / jnp.float32(t)
+    if damping:
+        a = a + damping * jnp.eye(block, dtype=jnp.float32)
+    return a

@@ -1,0 +1,34 @@
+"""jit'd public wrapper for the Newton–Schulz inverse kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.nschulz.nschulz import ns_inverse_blocks
+from repro.kernels.nschulz.ref import ns_inverse_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("iters", "damping", "use_pallas"))
+def ns_inverse(a: jax.Array, *, iters: int = 20, damping: float = 0.0,
+               use_pallas: bool | None = None) -> jax.Array:
+    """Batched SPD inverse of a [..., bs, bs] via fused Newton–Schulz.
+
+    Leading dims are flattened into the kernel grid; bs > 1024 (VMEM cap)
+    or non-TPU-friendly shapes fall back to the jnp reference."""
+    use_pallas = _on_tpu() if use_pallas is None else use_pallas
+    bs = a.shape[-1]
+    lead = a.shape[:-2]
+    if not use_pallas and bs > 256:
+        return ns_inverse_ref(a, iters=iters, damping=damping)
+    if bs > 1024:   # VMEM wall: 3 fp32 buffers of bs² must fit ~16 MB
+        return ns_inverse_ref(a, iters=iters, damping=damping)
+    flat = a.reshape(-1, bs, bs)
+    out = ns_inverse_blocks(flat, iters=iters, damping=damping,
+                            interpret=not _on_tpu())
+    return out.reshape(*lead, bs, bs)

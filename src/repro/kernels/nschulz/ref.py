@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the Newton–Schulz kernel (same math as
+repro.core.inverse.ns_inverse)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.inverse import damp, ns_inverse
+
+
+def ns_inverse_ref(a, *, iters: int = 20, damping: float = 0.0):
+    ad = damp(a.astype(jnp.float32), damping) if damping else a
+    return ns_inverse(ad, iters)

@@ -1,0 +1,266 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks device count at first init).
+
+"""Multi-pod dry-run (spec §MULTI-POD DRY-RUN + §ROOFLINE ANALYSIS).
+
+For every (architecture × input shape × mesh) combination this lowers and
+compiles the real step function against ShapeDtypeStruct stand-ins — no
+allocation — then extracts memory_analysis / cost_analysis / the collective
+schedule and derives the three roofline terms (TPU v5e constants).
+
+  train_4k    → the FedPM fused-K1 round (the paper's technique, Eq. 9)
+  prefill_32k → full-sequence prefill returning the KV/SSM cache
+  decode_*    → serve_step: ONE token against a seq-len cache
+
+Usage:
+  python -m repro.launch.dryrun --arch olmo-1b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all            # full baseline matrix
+  python -m repro.launch.dryrun --all --mesh multi
+Results append to benchmarks/results/dryrun.jsonl (one JSON per line).
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_NAMES, get_config, shape_supported
+from repro.core.algorithms import HParams
+from repro.distributed.roofline import V5E, roofline_from_compiled
+from repro.fl import distributed as D
+from repro.launch.mesh import axis_sizes, make_production_mesh
+from repro.models import transformer as T
+from repro.models.config import INPUT_SHAPES, InputShape, ModelConfig
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "benchmarks", "results", "dryrun.jsonl")
+
+
+# ============================================================ input specs ===
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> dict:
+    """ShapeDtypeStruct stand-ins for the step inputs (weak-type-correct,
+    shardable, no device allocation)."""
+    b, s = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    if shape.kind == "decode":
+        if cfg.frontend == "audio_stub":
+            batch = {"embeds": _sds((b, 1, cfg.d_model), dt)}
+        else:
+            batch = {"tokens": _sds((b, 1), jnp.int32)}
+        return {"batch": batch,
+                "cache": T.abstract_cache(cfg, b, s),
+                "pos": _sds((), jnp.int32)}
+    # train / prefill
+    if cfg.frontend == "audio_stub":
+        batch = {"embeds": _sds((b, s, cfg.d_model), dt),
+                 "labels": _sds((b, s, cfg.num_codebooks), jnp.int32)}
+    elif cfg.frontend == "vision_stub":
+        p = cfg.frontend_tokens
+        batch = {"tokens": _sds((b, s - p), jnp.int32),
+                 "patches": _sds((b, p, cfg.d_model), dt),
+                 "positions": _sds((b, 3, s), jnp.int32),
+                 "labels": _sds((b, s), jnp.int32),
+                 "loss_mask": _sds((b, s), jnp.float32)}
+    else:
+        batch = {"tokens": _sds((b, s), jnp.int32),
+                 "labels": _sds((b, s), jnp.int32)}
+    return {"batch": batch}
+
+
+def batch_shardings(cfg: ModelConfig, shape: InputShape, mesh, batch):
+    """Shard every batch leaf's leading (client/batch) dim when divisible."""
+    sizes = axis_sizes(mesh)
+    baxes = T.batch_spec(cfg, sizes, shape.global_batch)
+
+    def spec(leaf):
+        return NamedSharding(mesh, P(baxes, *([None] * (len(leaf.shape) - 1))))
+
+    return jax.tree.map(spec, batch)
+
+
+# ================================================================ lowering ===
+
+#: §Perf variants: tag → ModelConfig field overrides
+VARIANTS = {
+    "moe_shard_map": {"moe_shard_map": True},
+    "foof_block_512": {"foof_block": 512},
+    "capacity_1.0": {"capacity_factor": 1.0},
+    "fsdp_cols": {"fsdp_mode": "cols"},
+    "seq_parallel": {"seq_parallel": True},
+}
+
+
+def lower_pair(arch: str, shape_name: str, *, multi_pod: bool,
+               algo: str = "fedpm", hp: HParams | None = None,
+               extra_tag: str = ""):
+    """Lower + compile one (arch × shape × mesh); return result dict."""
+    import dataclasses as _dc
+    cfg = get_config(arch)
+    for tag in extra_tag.split("+"):
+        if tag in VARIANTS:
+            cfg = _dc.replace(cfg, **VARIANTS[tag])
+    shape = INPUT_SHAPES[shape_name]
+    # Serving uses inference-appropriate layouts (§Perf, measured):
+    #  - weight-gather FSDP ("cols") helps training (grad+weight traffic)
+    #    but blows up prefill/decode working sets → serve with "contract";
+    #  - the shard_map MoE island wins for train/prefill (many tokens per
+    #    expert) but loses at decode's 1-token dispatch → GSPMD-auto there.
+    if shape.kind == "decode":
+        cfg = _dc.replace(cfg, moe_shard_map=False, fsdp_mode="contract")
+    elif shape.kind == "prefill":
+        cfg = _dc.replace(cfg, fsdp_mode="contract")
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    sizes = axis_sizes(mesh)
+    hp = hp or HParams(lr=0.3, damping=1.0, inverse_method="ns", ns_iters=12)
+
+    params = T.abstract_params(cfg)
+    pspecs = T.param_specs(cfg, sizes)
+    pshard = jax.tree.map(lambda sp: NamedSharding(mesh, sp), pspecs)
+    specs = input_specs(cfg, shape)
+    t0 = time.time()
+
+    with jax.set_mesh(mesh):
+        if shape.kind == "decode":
+            cshard = jax.tree.map(
+                lambda sp: NamedSharding(mesh, sp),
+                T.cache_specs(cfg, sizes, shape.global_batch, shape.seq_len))
+            bshard = batch_shardings(cfg, shape, mesh, specs["batch"])
+            fn = D.make_decode_step(cfg)
+            lowered = jax.jit(
+                fn,
+                in_shardings=(pshard, cshard, bshard, None),
+                out_shardings=(None, cshard),
+                donate_argnums=(1,),
+            ).lower(params, specs["cache"], specs["batch"], specs["pos"])
+        elif shape.kind == "prefill":
+            bshard = batch_shardings(cfg, shape, mesh, specs["batch"])
+            cshard = jax.tree.map(
+                lambda sp: NamedSharding(mesh, sp),
+                T.cache_specs(cfg, sizes, shape.global_batch, shape.seq_len))
+            fn = D.make_prefill_step(cfg)
+            lowered = jax.jit(
+                fn, in_shardings=(pshard, bshard),
+                out_shardings=(None, cshard),
+            ).lower(params, specs["batch"])
+        elif algo == "fedpm_steady":
+            # §Perf C4: the between-refresh step with cached inverses
+            _, steady = D.make_amortized_steps(cfg, hp)
+            bshard = batch_shardings(cfg, shape, mesh, specs["batch"])
+            inverses = D.abstract_inverses(cfg, specs["batch"])
+            msz = sizes.get("model", 1)
+
+            def inv_spec(leaf):
+                if leaf.ndim >= 3 and leaf.shape[-3] % msz == 0 and msz > 1:
+                    return NamedSharding(mesh, P(
+                        *([None] * (leaf.ndim - 3)), "model", None, None))
+                return NamedSharding(mesh, P())
+
+            ishard = jax.tree.map(inv_spec, inverses)
+            lowered = jax.jit(
+                steady, in_shardings=(pshard, ishard, bshard),
+                out_shardings=(pshard, None),
+                donate_argnums=(0,),
+            ).lower(params, inverses, specs["batch"])
+        else:  # train: the FedPM fused-K1 round (or the FO baseline)
+            step = (D.make_fused_k1_step(cfg, hp) if algo == "fedpm"
+                    else D.make_fedavg_step(cfg, hp))
+            bshard = batch_shardings(cfg, shape, mesh, specs["batch"])
+            lowered = jax.jit(
+                step, in_shardings=(pshard, bshard),
+                out_shardings=(pshard, None),
+                donate_argnums=(0,),
+            ).lower(params, specs["batch"])
+        compiled = lowered.compile()
+
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    rep = roofline_from_compiled(
+        compiled, arch=arch, shape=shape_name, mesh_name=mesh_name,
+        num_devices=mesh.size, model_flops=T.model_flops(cfg, shape))
+    mem = compiled.memory_analysis()
+    out = rep.as_dict()
+    out.update({
+        "algo": algo, "tag": extra_tag,
+        "compile_s": round(time.time() - t0, 1),
+        "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0) or 0),
+        "output_bytes": int(getattr(mem, "output_size_in_bytes", 0) or 0),
+        "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0) or 0),
+        "hbm_capacity_per_chip": 16e9,         # v5e HBM capacity reference
+    })
+    return out
+
+
+def append_result(res: dict, path: str = RESULTS):
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "a") as f:
+        f.write(json.dumps(res) + "\n")
+
+
+def run_matrix(meshes=("single",), arches=ARCH_NAMES, shapes=None,
+               algo="fedpm", path: str = RESULTS, tag: str = ""):
+    shapes = shapes or list(INPUT_SHAPES)
+    done, failed = 0, []
+    for arch in arches:
+        cfg = get_config(arch)
+        for shape_name in shapes:
+            if not shape_supported(cfg, shape_name):
+                append_result({"arch": arch, "shape": shape_name,
+                               "skipped": "quadratic-attention arch; "
+                               "long_500k requires sub-quadratic (DESIGN §5)"},
+                              path)
+                continue
+            for mesh_kind in meshes:
+                try:
+                    res = lower_pair(arch, shape_name,
+                                     multi_pod=(mesh_kind == "multi"),
+                                     algo=algo, extra_tag=tag)
+                    append_result(res, path)
+                    done += 1
+                    print(f"OK  {arch} {shape_name} {mesh_kind} "
+                          f"dom={res['dominant']} "
+                          f"compile={res['compile_s']}s", flush=True)
+                except Exception as e:
+                    failed.append((arch, shape_name, mesh_kind))
+                    append_result({"arch": arch, "shape": shape_name,
+                                   "mesh": mesh_kind,
+                                   "error": f"{type(e).__name__}: {e}"[:500]},
+                                  path)
+                    print(f"FAIL {arch} {shape_name} {mesh_kind}: "
+                          f"{type(e).__name__}: {str(e)[:200]}", flush=True)
+    print(f"done={done} failed={len(failed)} {failed}")
+    return failed
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--algo", default="fedpm",
+                    choices=["fedpm", "fedavg", "fedpm_steady"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--tag", default="", help="'+'-joined VARIANTS keys")
+    ap.add_argument("--out", default=RESULTS)
+    args = ap.parse_args()
+    if args.all:
+        arches = (args.arch,) if args.arch else ARCH_NAMES
+        shapes = [args.shape] if args.shape else None
+        run_matrix(meshes=(args.mesh,), arches=arches, shapes=shapes,
+                   algo=args.algo, path=args.out, tag=args.tag)
+        return
+    res = lower_pair(args.arch, args.shape, multi_pod=(args.mesh == "multi"),
+                     algo=args.algo, extra_tag=args.tag)
+    append_result(res, args.out)
+    print(json.dumps(res, indent=1))
+
+
+if __name__ == "__main__":
+    main()

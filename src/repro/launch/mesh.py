@@ -1,0 +1,29 @@
+"""Production meshes (spec §MULTI-POD DRY-RUN).
+
+Functions, not module-level constants — importing this module never touches
+jax device state.  The dry-run sets XLA_FLAGS for 512 host devices *before*
+any jax import; everything else sees the real device count.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh() -> jax.sharding.Mesh:
+    """Whatever devices exist (tests/examples): 1×N ("data","model")."""
+    n = jax.device_count()
+    return jax.make_mesh(
+        (1, n), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def axis_sizes(mesh: jax.sharding.Mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))

@@ -1,0 +1,37 @@
+"""Serving launcher: batched prefill + decode for any token-input arch.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch mamba2-1.3b \
+        --batch 4 --prompt-len 96 --max-new 32
+
+Thin CLI over the same prefill/decode_step the decode_32k / long_500k
+dry-run shapes lower at production scale (see examples/serve_decode.py
+for the annotated walkthrough).
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.configs import ARCH_NAMES
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo-1b", choices=ARCH_NAMES)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=96)
+    ap.add_argument("--max-new", type=int, default=32)
+    args = ap.parse_args()
+    import sys
+    sys.argv = ["serve_decode", "--arch", args.arch,
+                "--batch", str(args.batch),
+                "--prompt-len", str(args.prompt_len),
+                "--max-new", str(args.max_new)]
+    import os
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__),
+                                    "..", "..", "..", "examples"))
+    import serve_decode
+    serve_decode.main()
+
+
+if __name__ == "__main__":
+    main()

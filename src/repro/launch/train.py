@@ -1,0 +1,96 @@
+"""Training launcher: federated FedPM training of any assigned arch.
+
+    PYTHONPATH=src python -m repro.launch.train --arch olmo-1b --steps 50
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-moe-30b-a3b \
+        --mode local_steps --k 4 --algo fedpm
+
+Reduced configs run on the host devices; full configs are exercised via
+``repro.launch.dryrun`` (this launcher refuses full configs on CPU).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import checkpoint
+from repro.configs import ARCH_NAMES, get_config
+from repro.core.algorithms import HParams
+from repro.data import make_lm_tokens
+from repro.fl import distributed as D
+from repro.launch.mesh import make_host_mesh
+from repro.models import transformer as T
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo-1b", choices=ARCH_NAMES)
+    ap.add_argument("--full", action="store_true",
+                    help="use the full (non-reduced) config — needs a TPU mesh")
+    ap.add_argument("--algo", default="fedpm", choices=["fedpm", "fedavg"])
+    ap.add_argument("--mode", default="fused_k1",
+                    choices=["fused_k1", "local_steps", "amortized"])
+    ap.add_argument("--k", type=int, default=4)
+    ap.add_argument("--refresh-every", type=int, default=4)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=0.2)
+    ap.add_argument("--damping", type=float, default=1.0)
+    ap.add_argument("--ckpt", default="")
+    args = ap.parse_args()
+
+    if args.full and jax.default_backend() == "cpu":
+        raise SystemExit("full configs on CPU are dry-run only "
+                         "(python -m repro.launch.dryrun)")
+    cfg = get_config(args.arch, reduced=not args.full)
+    if cfg.frontend != "none":
+        raise SystemExit("token-input archs only in this launcher")
+    hp = HParams(lr=args.lr, damping=args.damping, clip=1.0)
+    rng = jax.random.PRNGKey(0)
+    params = T.init_params(cfg, rng)
+    print(f"arch={cfg.name} params={T.count_params(params)/1e6:.1f}M "
+          f"mode={args.mode} algo={args.algo}")
+
+    mesh = make_host_mesh()
+    bs = args.batch * (args.k if args.mode == "local_steps" else 1)
+    stream = make_lm_tokens(cfg.vocab_size, (args.steps + 1) * bs * args.seq)
+
+    ctx = jax.set_mesh(mesh)
+    ctx.__enter__()
+    if args.mode == "local_steps":
+        step = jax.jit(D.make_local_steps_round(cfg, hp, mesh, args.k))
+    elif args.mode == "amortized":
+        refresh, steady = D.make_amortized_steps(cfg, hp)
+        refresh, steady = jax.jit(refresh), jax.jit(steady)
+    else:
+        step = jax.jit(D.make_fused_k1_step(cfg, hp) if args.algo == "fedpm"
+                       else D.make_fedavg_step(cfg, hp))
+
+    inverses = None
+    t0 = time.time()
+    for t in range(args.steps):
+        lo = t * bs * args.seq
+        toks = jnp.asarray(stream[lo:lo + bs * args.seq]).reshape(bs, args.seq)
+        batch = {"tokens": toks, "labels": toks}
+        if args.mode == "amortized":
+            if t % args.refresh_every == 0:
+                params, inverses, m = refresh(params, batch)
+            else:
+                params, m = steady(params, inverses, batch)
+        else:
+            params, m = step(params, batch)
+        if t % 10 == 0 or t == args.steps - 1:
+            print(f"step {t:4d} loss={float(m['loss']):.4f} "
+                  f"({time.time()-t0:.1f}s)", flush=True)
+    if args.ckpt:
+        checkpoint.save(args.ckpt, params, meta={"arch": cfg.name,
+                                                 "steps": args.steps})
+        print("saved", args.ckpt)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,683 @@
+"""Composable model layers (pure functions, params as dict pytrees).
+
+Every linear layer can optionally emit its FOOF statistic — the uncentered
+input covariance A = (1/T)·XᵀX, block-diagonal within the layer
+(DESIGN.md §4.2).  Gram leaves mirror param keys; params without a gram get
+a size-0 placeholder so trees stay congruent through ``lax.scan``.
+
+All attention is chunked/online-softmax (no S×S materialization), GQA
+grouping is explicit, and decode paths operate on seq-sharded KV caches.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+NO_GRAM_SHAPE = (0,)
+
+
+def no_gram(dtype=jnp.float32):
+    return jnp.zeros(NO_GRAM_SHAPE, dtype)
+
+
+def is_gram(x) -> bool:
+    return x.ndim >= 2 and x.shape[-1] == x.shape[-2] and x.size > 0
+
+
+def _model_axis_size() -> int:
+    """Size of the ambient mesh's "model" axis (1 when tracing meshless)."""
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is not None and "model" in getattr(mesh, "axis_names", ()):
+            return int(mesh.shape["model"])
+    except Exception:
+        pass
+    return 1
+
+
+def choose_block(d: int, cap: int, prefer_multiple: int = 1) -> int:
+    """Largest divisor of d that is ≤ cap.  When ``prefer_multiple`` > 1,
+    prefer a block size whose block-count nb = d/bs is a multiple of it —
+    so the gram stack [nb, bs, bs] shards evenly over the model axis
+    (§Perf iteration C2: replicated grams were 26 GB/chip on llama3-405b)."""
+    if d <= cap:
+        return d
+    best = 1
+    for b in range(cap, 0, -1):
+        if d % b == 0:
+            if best == 1:
+                best = b
+            if prefer_multiple > 1 and (d // b) % prefer_multiple == 0:
+                return b
+            if prefer_multiple <= 1:
+                return b
+    return best
+
+
+def block_gram(x2d: jax.Array, block_cap: int) -> jax.Array:
+    """A = (1/T) XᵀX as block-diagonal fp32 blocks: [nb, bs, bs], sharded
+    over the model axis when nb divides it."""
+    t, d = x2d.shape
+    msz = _model_axis_size()
+    bs = choose_block(d, block_cap, prefer_multiple=msz)
+    nb = d // bs
+    xb = x2d.reshape(t, nb, bs)
+    a = jnp.einsum("tnb,tnc->nbc", xb, xb, preferred_element_type=jnp.float32)
+    a = a / jnp.float32(t)
+    if msz > 1 and nb % msz == 0:
+        # Two-step constraint (§Perf C3): pin the einsum output REPLICATED so
+        # GSPMD computes per-data-shard partial grams + all-reduce (0.9 GB on
+        # olmo) instead of all-gathering every token over "data" to produce a
+        # model-sharded output directly (measured 154 GB/chip of all-gather);
+        # the replicated→sharded reshard afterwards is a free local slice.
+        a = jax.lax.with_sharding_constraint(
+            a, jax.sharding.PartitionSpec(None, None, None))
+        a = jax.lax.with_sharding_constraint(
+            a, jax.sharding.PartitionSpec("model", None, None))
+    return a
+
+
+# ---------------------------------------------------------------- norms ----
+
+def init_norm(cfg: ModelConfig, d: int):
+    if cfg.norm == "nonparametric":
+        return {}
+    p = {"scale": jnp.ones((d,), jnp.float32)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def apply_norm(cfg: ModelConfig, p: dict, x: jax.Array) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "rmsnorm":
+        xf = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + 1e-6)
+        xf = xf * p["scale"]
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        xf = (xf - mu) * jax.lax.rsqrt(var + 1e-5)
+        if cfg.norm == "layernorm":
+            xf = xf * p["scale"] + p["bias"]
+        # nonparametric (olmo): no affine
+    return xf.astype(x.dtype)
+
+
+# ----------------------------------------------------------------- rope ----
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float,
+               mrope_sections: tuple = ()) -> jax.Array:
+    """x: [..., S, hd]; positions: [B, S] (or [B, 3, S] for M-RoPE)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # [hd/2]
+    if mrope_sections:
+        # qwen2-vl M-RoPE: frequency bands are split across (t, h, w)
+        # position streams.  positions: [B, 3, S].
+        assert positions.ndim == 3
+        sec = jnp.asarray(
+            sum(([i] * s for i, s in enumerate(mrope_sections)), []), jnp.int32)
+        # pos_per_freq[b, s, f] = positions[b, sec[f], s]
+        pos = jnp.swapaxes(positions, 1, 2).astype(jnp.float32)  # [B, S, 3]
+        pos = pos[..., sec]                              # [B, S, hd/2]
+        ang = pos * freqs[None, None, :]                 # [B, S, hd/2]
+        ang = ang[:, None, :, :] if x.ndim == 4 else ang  # broadcast heads
+    else:
+        assert positions.ndim == 2
+        ang = positions.astype(jnp.float32)[:, :, None] * freqs[None, None, :]
+        ang = ang[:, None, :, :] if x.ndim == 4 else ang
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------ chunked attention ----
+
+def _mask_bias(qpos, kpos, window: int):
+    """[Sq, Sk] additive bias: 0 where attendable, -inf otherwise."""
+    ok = kpos[None, :] <= qpos[:, None]
+    if window > 0:
+        ok &= kpos[None, :] > qpos[:, None] - window
+    return jnp.where(ok, 0.0, -jnp.inf).astype(jnp.float32)
+
+
+def banded_attention(q, k, v, *, window: int, q_chunk: int = 512,
+                     scale: float | None = None):
+    """Sliding-window attention touching only the O(window) KV band per
+    q-chunk (§Perf D1): a dynamic slice of k/v of span q_chunk+pad replaces
+    the full-sequence KV scan — O(S·W) instead of O(S²) work/traffic.
+    Exact (the mask uses true positions; edge clamping handled)."""
+    b, h, sq, hd = q.shape
+    hdv = v.shape[-1]
+    kv = k.shape[1]
+    g = h // kv
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    qc = min(q_chunk, sq)
+    nq = sq // qc
+    pad = min(-(-window // qc) * qc, sq - qc)     # window rounded up to qc
+    span = qc + pad
+    qg = (q.reshape(b, kv, g, sq, hd) * scale).reshape(
+        b, kv, g, nq, qc, hd).transpose(3, 0, 1, 2, 4, 5)
+
+    def q_block(qi, qblk):
+        start = jnp.clip(qi * qc - pad, 0, sq - span)
+        kblk = jax.lax.dynamic_slice(k, (0, 0, start, 0), (b, kv, span, hd))
+        vblk = jax.lax.dynamic_slice(v, (0, 0, start, 0), (b, kv, span, hdv))
+        s = jnp.einsum("bkgqd,bkcd->bkgqc", qblk, kblk,
+                       preferred_element_type=jnp.float32)
+        qpos = qi * qc + jnp.arange(qc)
+        kpos = start + jnp.arange(span)
+        ok = (kpos[None, :] <= qpos[:, None]) & \
+             (kpos[None, :] > qpos[:, None] - window)
+        s = jnp.where(ok[None, None, None], s, -jnp.inf)
+        p = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("bkgqc,bkcd->bkgqd", p.astype(vblk.dtype), vblk,
+                          preferred_element_type=jnp.float32)
+
+    outs = jax.lax.map(jax.checkpoint(lambda a: q_block(*a)),
+                       (jnp.arange(nq), qg))
+    return outs.transpose(1, 2, 3, 0, 4, 5).reshape(b, h, sq, hdv).astype(
+        v.dtype)
+
+
+def chunked_attention(q, k, v, *, window: int = 0, q_chunk: int = 512,
+                      kv_chunk: int = 1024, scale: float | None = None):
+    """Flash-style causal attention in pure jnp (online softmax).
+
+    q: [B, H, Sq, hd]; k, v: [B, KV, Sk, hd]; returns [B, H, Sq, hd].
+    Sq == Sk (self-attention over the same segment).
+    """
+    b, h, sq, hd = q.shape
+    if window > 0 and window + q_chunk < sq:
+        # the band is narrower than the sequence → O(S·W) path
+        return banded_attention(q, k, v, window=window, q_chunk=q_chunk,
+                                scale=scale)
+    hdv = v.shape[-1]               # MLA: v_head_dim ≠ qk head_dim
+    kv = k.shape[1]
+    g = h // kv
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    qc = min(q_chunk, sq)
+    kc = min(kv_chunk, k.shape[2])
+    nq, nk = sq // qc, k.shape[2] // kc
+    qg = q.reshape(b, kv, g, sq, hd) * scale
+    qg = qg.reshape(b, kv, g, nq, qc, hd).transpose(3, 0, 1, 2, 4, 5)  # [nq,...]
+    kb = k.reshape(b, kv, nk, kc, hd).transpose(2, 0, 1, 3, 4)
+    vb = v.reshape(b, kv, nk, kc, hdv).transpose(2, 0, 1, 3, 4)
+
+    def q_block(qi, qblk):
+        m0 = jnp.full((b, kv, g, qc), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, kv, g, qc), jnp.float32)
+        a0 = jnp.zeros((b, kv, g, qc, hdv), jnp.float32)
+
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            ki, kblk, vblk = inp
+            s = jnp.einsum("bkgqd,bkcd->bkgqc", qblk, kblk,
+                           preferred_element_type=jnp.float32)
+            qpos = qi * qc + jnp.arange(qc)
+            kpos = ki * kc + jnp.arange(kc)
+            s = s + _mask_bias(qpos, kpos, window)[None, None, None]
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            # rows with everything masked keep m = -inf; guard the exp
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p = jnp.exp(s - m_safe[..., None])
+            corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+            l = l * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bkgqc,bkcd->bkgqd", p.astype(vblk.dtype), vblk,
+                preferred_element_type=jnp.float32)
+            return (m_new, l, acc)
+
+        (m, l, acc), _ = jax.lax.scan(
+            lambda c, i: (kv_step(c, i), None), (m0, l0, a0),
+            (jnp.arange(nk), kb, vb))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out
+
+    # remat each q-block: backward recomputes the per-chunk softmax instead
+    # of saving O(S²) probability residuals (§Perf iteration C1 — cut the
+    # olmo-1b train_4k per-chip peak from 17.4 GB).
+    outs = jax.lax.map(jax.checkpoint(lambda args: q_block(*args)),
+                       (jnp.arange(nq), qg))
+    out = outs.transpose(1, 2, 3, 0, 4, 5).reshape(b, h, sq, hdv)
+    return out.astype(v.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *, window: int = 0):
+    """Single-token attention against a (possibly seq-sharded) cache.
+
+    q: [B, H, 1, hd]; caches: [B, KV, S, hd]; cache_len: scalar — number of
+    valid cache positions (new token is at index cache_len - 1).
+    """
+    b, h, _, hd = q.shape
+    kv, s = k_cache.shape[1], k_cache.shape[2]
+    g = h // kv
+    qg = q.reshape(b, kv, g, 1, hd) * (1.0 / math.sqrt(hd))
+    scores = jnp.einsum("bkgqd,bksd->bkgqs", qg, k_cache,
+                        preferred_element_type=jnp.float32)
+    kpos = jnp.arange(s)
+    ok = kpos < cache_len
+    if window > 0:
+        ok &= kpos >= cache_len - window
+    scores = jnp.where(ok[None, None, None, None, :], scores, -jnp.inf)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bkgqs,bksd->bkgqd", (p / l).astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, h, 1, hd).astype(v_cache.dtype)
+
+
+# ------------------------------------------------------------ GQA block ----
+
+def init_attn(cfg: ModelConfig, rng) -> dict:
+    d, h, kvh, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    k1, k2 = jax.random.split(rng)
+    dt = jnp.dtype(cfg.dtype)
+    std = d ** -0.5
+    return {
+        "wqkv": (jax.random.normal(k1, (d, (h + 2 * kvh) * hd)) * std).astype(dt),
+        "wo": (jax.random.normal(k2, (h * hd, d)) * (h * hd) ** -0.5).astype(dt),
+    }
+
+
+def attn_forward(cfg: ModelConfig, p: dict, x: jax.Array, positions: jax.Array,
+                 *, window: int = 0, collect: bool = False):
+    """x: [B, S, D] (already normed). Returns (out [B,S,D], grams, kv)."""
+    b, s, d = x.shape
+    h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    qkv = x @ p["wqkv"]
+    q, k, v = jnp.split(qkv, [h * hd, (h + kvh) * hd], axis=-1)
+    q = q.reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    k = k.reshape(b, s, kvh, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(b, s, kvh, hd).transpose(0, 2, 1, 3)
+    q = apply_rope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+    k = apply_rope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+    o = chunked_attention(q, k, v, window=window)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, h * hd)
+    out = o @ p["wo"]
+    grams = {
+        "wqkv": block_gram(x.reshape(-1, d), cfg.foof_block) if collect else no_gram(),
+        "wo": block_gram(o.reshape(-1, h * hd), cfg.foof_block) if collect else no_gram(),
+    }
+    return out, grams, (k, v)
+
+
+def attn_decode(cfg: ModelConfig, p: dict, x: jax.Array, pos, kcache, vcache,
+                *, window: int = 0):
+    """x: [B, 1, D]; caches [B, KV, S, hd]; pos: scalar index of new token."""
+    b, _, d = x.shape
+    h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    qkv = x @ p["wqkv"]
+    q, k, v = jnp.split(qkv, [h * hd, (h + kvh) * hd], axis=-1)
+    q = q.reshape(b, 1, h, hd).transpose(0, 2, 1, 3)
+    k = k.reshape(b, 1, kvh, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(b, 1, kvh, hd).transpose(0, 2, 1, 3)
+    posb = jnp.full((b, 1), pos, jnp.int32)
+    if cfg.mrope_sections:
+        posb = jnp.broadcast_to(posb[:, None, :], (b, 3, 1))
+    q = apply_rope(q, posb, cfg.rope_theta, cfg.mrope_sections)
+    k = apply_rope(k, posb, cfg.rope_theta, cfg.mrope_sections)
+    slot = pos if window <= 0 else pos % kcache.shape[2]
+    kcache = jax.lax.dynamic_update_slice(kcache, k.transpose(0, 1, 2, 3).reshape(b, kvh, 1, hd),
+                                          (0, 0, slot, 0))
+    vcache = jax.lax.dynamic_update_slice(vcache, v.reshape(b, kvh, 1, hd),
+                                          (0, 0, slot, 0))
+    cache_len = jnp.minimum(pos + 1, kcache.shape[2])
+    # ring-buffer windows: all stored entries are valid once wrapped
+    o = decode_attention(q, kcache, vcache, cache_len,
+                         window=0 if window <= 0 else kcache.shape[2] + 1)
+    o = o.transpose(0, 2, 1, 3).reshape(b, 1, h * hd)
+    return o @ p["wo"], kcache, vcache
+
+
+# ------------------------------------------------------------- MLA block ----
+
+def init_mla(cfg: ModelConfig, rng) -> dict:
+    d, h = cfg.d_model, cfg.num_heads
+    r_kv, r_q = cfg.kv_lora_rank, cfg.q_lora_rank
+    dr, dn, dv = cfg.qk_rope_dim, cfg.qk_nope_dim, cfg.v_head_dim
+    ks = jax.random.split(rng, 5)
+    dt = jnp.dtype(cfg.dtype)
+
+    def w(k, i, o):
+        return (jax.random.normal(k, (i, o)) * i ** -0.5).astype(dt)
+
+    return {
+        "wq_a": w(ks[0], d, r_q),
+        "wq_b": w(ks[1], r_q, h * (dn + dr)),
+        "wkv_a": w(ks[2], d, r_kv + dr),
+        "wkv_b": w(ks[3], r_kv, h * (dn + dv)),
+        "wo": w(ks[4], h * dv, d),
+        "q_norm": jnp.ones((r_q,), jnp.float32),
+        "kv_norm": jnp.ones((r_kv,), jnp.float32),
+    }
+
+
+def _rms(x, scale):
+    xf = x.astype(jnp.float32)
+    xf = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + 1e-6)
+    return (xf * scale).astype(x.dtype)
+
+
+def mla_forward(cfg: ModelConfig, p: dict, x: jax.Array, positions: jax.Array,
+                *, collect: bool = False):
+    """DeepSeek-V2 Multi-head Latent Attention (training/prefill path)."""
+    b, s, d = x.shape
+    h = cfg.num_heads
+    r_kv = cfg.kv_lora_rank
+    dr, dn, dv = cfg.qk_rope_dim, cfg.qk_nope_dim, cfg.v_head_dim
+    cq = _rms(x @ p["wq_a"], p["q_norm"])
+    q = (cq @ p["wq_b"]).reshape(b, s, h, dn + dr).transpose(0, 2, 1, 3)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    ckv_full = x @ p["wkv_a"]
+    ckv, k_rope = ckv_full[..., :r_kv], ckv_full[..., r_kv:]
+    ckv = _rms(ckv, p["kv_norm"])
+    kvb = (ckv @ p["wkv_b"]).reshape(b, s, h, dn + dv).transpose(0, 2, 1, 3)
+    k_nope, v = kvb[..., :dn], kvb[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    k_rope = apply_rope(k_rope[:, None], positions, cfg.rope_theta)  # [B,1,S,dr]
+    k_rope_h = jnp.broadcast_to(k_rope, (b, h, s, dr))
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_full = jnp.concatenate([k_nope, k_rope_h], axis=-1)
+    o = chunked_attention(q_full, k_full, v, scale=1.0 / math.sqrt(dn + dr))
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, h * dv)
+    out = o @ p["wo"]
+    grams = {
+        "wq_a": block_gram(x.reshape(-1, d), cfg.foof_block) if collect else no_gram(),
+        "wq_b": block_gram(cq.reshape(-1, cq.shape[-1]), cfg.foof_block) if collect else no_gram(),
+        "wkv_a": no_gram(),   # same input covariance as wq_a — shared (DESIGN §4)
+        "wkv_b": block_gram(ckv.reshape(-1, r_kv), cfg.foof_block) if collect else no_gram(),
+        "wo": block_gram(o.reshape(-1, h * dv), cfg.foof_block) if collect else no_gram(),
+        "q_norm": no_gram(), "kv_norm": no_gram(),
+    }
+    return out, grams, (ckv, k_rope[:, 0])
+
+
+def mla_decode(cfg: ModelConfig, p: dict, x: jax.Array, pos, ckv_cache, krope_cache):
+    """Absorbed MLA decode: attention runs in the latent space, so the cache
+    is only [B, S, r_kv] + [B, S, dr] (DESIGN.md §5 decode sharding)."""
+    b, _, d = x.shape
+    h = cfg.num_heads
+    r_kv = cfg.kv_lora_rank
+    dr, dn, dv = cfg.qk_rope_dim, cfg.qk_nope_dim, cfg.v_head_dim
+    cq = _rms(x @ p["wq_a"], p["q_norm"])
+    q = (cq @ p["wq_b"]).reshape(b, 1, h, dn + dr).transpose(0, 2, 1, 3)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    posb = jnp.full((b, 1), pos, jnp.int32)
+    q_rope = apply_rope(q_rope, posb, cfg.rope_theta)
+
+    ckv_full = x @ p["wkv_a"]
+    ckv_new = _rms(ckv_full[..., :r_kv], p["kv_norm"])          # [B,1,r]
+    krope_new = apply_rope(ckv_full[:, None, :, r_kv:], posb, cfg.rope_theta)[:, 0]
+    ckv_cache = jax.lax.dynamic_update_slice(ckv_cache, ckv_new, (0, pos, 0))
+    krope_cache = jax.lax.dynamic_update_slice(krope_cache, krope_new, (0, pos, 0))
+
+    wkv_b = p["wkv_b"].reshape(r_kv, h, dn + dv)
+    wk, wv = wkv_b[..., :dn], wkv_b[..., dn:]                    # [r,h,dn], [r,h,dv]
+    q_lat = jnp.einsum("bhqd,rhd->bhqr", q_nope, wk)             # absorb W_k
+    s_lat = jnp.einsum("bhqr,bsr->bhqs", q_lat, ckv_cache,
+                       preferred_element_type=jnp.float32)
+    s_rope = jnp.einsum("bhqd,bsd->bhqs", q_rope, krope_cache,
+                        preferred_element_type=jnp.float32)
+    scores = (s_lat + s_rope) / math.sqrt(dn + dr)
+    valid = jnp.arange(ckv_cache.shape[1]) < (pos + 1)
+    scores = jnp.where(valid[None, None, None, :], scores, -jnp.inf)
+    pattn = jax.nn.softmax(scores, axis=-1)
+    o_lat = jnp.einsum("bhqs,bsr->bhqr", pattn.astype(ckv_cache.dtype), ckv_cache)
+    o = jnp.einsum("bhqr,rhd->bhqd", o_lat, wv)                  # absorb W_v
+    o = o.transpose(0, 2, 1, 3).reshape(b, 1, h * dv)
+    return o @ p["wo"], ckv_cache, krope_cache
+
+
+# -------------------------------------------------------------- MLP/MoE ----
+
+def init_mlp(cfg: ModelConfig, rng, d_ff: int | None = None) -> dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    k1, k2 = jax.random.split(rng)
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "wi": (jax.random.normal(k1, (d, 2 * f)) * d ** -0.5).astype(dt),
+        "wo": (jax.random.normal(k2, (f, d)) * f ** -0.5).astype(dt),
+    }
+
+
+def mlp_forward(cfg: ModelConfig, p: dict, x: jax.Array, *, collect=False):
+    b, s, d = x.shape
+    gate_up = x @ p["wi"]
+    gate, up = jnp.split(gate_up, 2, axis=-1)
+    h = jax.nn.silu(gate) * up
+    out = h @ p["wo"]
+    grams = {
+        "wi": block_gram(x.reshape(-1, d), cfg.foof_block) if collect else no_gram(),
+        "wo": block_gram(h.reshape(-1, h.shape[-1]), cfg.foof_block) if collect else no_gram(),
+    }
+    return out, grams
+
+
+def init_moe(cfg: ModelConfig, rng) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    ks = jax.random.split(rng, 4)
+    dt = jnp.dtype(cfg.dtype)
+    p = {
+        "router": (jax.random.normal(ks[0], (d, e)) * d ** -0.5).astype(jnp.float32),
+        "wi": (jax.random.normal(ks[1], (e, d, 2 * f)) * d ** -0.5).astype(dt),
+        "wo": (jax.random.normal(ks[2], (e, f, d)) * f ** -0.5).astype(dt),
+    }
+    if cfg.num_shared_experts:
+        fs = f * cfg.num_shared_experts
+        k1, k2 = jax.random.split(ks[3])
+        p["shared_wi"] = (jax.random.normal(k1, (d, 2 * fs)) * d ** -0.5).astype(dt)
+        p["shared_wo"] = (jax.random.normal(k2, (fs, d)) * fs ** -0.5).astype(dt)
+    return p
+
+
+def _moe_mesh_info():
+    """(client_axes, sizes dict) of the ambient mesh, or None."""
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        names = tuple(getattr(mesh, "axis_names", ()) or ())
+        if "model" not in names or int(mesh.shape["model"]) <= 1:
+            return None
+        client = tuple(a for a in ("pod", "data") if a in names)
+        sizes = {a: int(mesh.shape[a]) for a in names}
+        return client, sizes
+    except Exception:
+        return None
+
+
+def _gram_plain(x2d: jax.Array, block_cap: int) -> jax.Array:
+    """block_gram without sharding constraints (shard_map-island safe)."""
+    t, d = x2d.shape
+    bs = choose_block(d, block_cap)
+    xb = x2d.reshape(t, d // bs, bs)
+    a = jnp.einsum("tnb,tnc->nbc", xb, xb, preferred_element_type=jnp.float32)
+    return a / jnp.float32(t)
+
+
+def _moe_forward_shardmap(cfg: ModelConfig, p: dict, x: jax.Array, info,
+                          *, collect=False):
+    """§Perf A1: locality-aware MoE.  Every (client, expert-shard) chip holds
+    its cohort's tokens (x is model-replicated) AND its expert shard's
+    weights, so dispatch needs no communication; the k-expert combine is one
+    psum over "model".  Capacity is per (cohort × expert) — an FL-natural
+    semantics (each client cohort budgets its own expert traffic)."""
+    from jax.sharding import PartitionSpec as P
+
+    client_axes, sizes = info
+    b, s, d = x.shape
+    e, kk, f = cfg.num_experts, cfg.experts_per_tok, cfg.d_ff
+    msz = sizes["model"]
+    e_local = e // msz
+    nclients = 1
+    for a in client_axes:
+        nclients *= sizes[a]
+    shard_batch = client_axes and b % nclients == 0
+    baxes = client_axes if shard_batch else None
+    t_local = (b // nclients if shard_batch else b) * s
+    cap = max(int(math.ceil(cfg.capacity_factor * t_local * kk / e)), 1)
+    manual = set(client_axes) | {"model"} if shard_batch else {"model"}
+
+    def island(x_l, router, wi, wo):
+        bl = x_l.shape[0]
+        xt = x_l.reshape(bl * s, d)
+        logits = xt.astype(jnp.float32) @ router
+        probs = jax.nn.softmax(logits, axis=-1)
+        gate_vals, gate_idx = jax.lax.top_k(probs, kk)
+        gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+        e_off = jax.lax.axis_index("model") * e_local
+        buf, slot, keep, st, fg = _dispatch_local(
+            xt, gate_vals, gate_idx, e, e_off, e_local, cap)
+        gu = jnp.einsum("ecd,edf->ecf", buf, wi)
+        gate_h, up_h = jnp.split(gu, 2, axis=-1)
+        hbuf = jax.nn.silu(gate_h) * up_h
+        obuf = jnp.einsum("ecf,efd->ecd", hbuf, wo)
+        contrib = obuf.reshape(e_local * cap, d)
+        gathered = jnp.where(keep[:, None],
+                             contrib[jnp.clip(slot, 0, e_local * cap - 1)],
+                             0.0)
+        out_t = jax.ops.segment_sum(gathered * fg[:, None].astype(x_l.dtype),
+                                    st, num_segments=bl * s)
+        out = jax.lax.psum(out_t, "model").reshape(bl, s, d)
+        if collect:
+            gram_wo = jax.lax.pmean(_gram_plain(hbuf.reshape(-1, f),
+                                                cfg.foof_block),
+                                    tuple(manual))
+        else:
+            gram_wo = no_gram()
+        # every (token, choice) is kept on exactly one model shard if it
+        # fit that shard's capacity → global kept-frac = psum over "model"
+        kept = jax.lax.psum(jnp.sum(keep.astype(jnp.float32)), "model") \
+            / jnp.float32(keep.shape[0])
+        if shard_batch:
+            kept = jax.lax.pmean(kept, tuple(client_axes))
+        return out, gram_wo, 1.0 - kept
+
+    bspec = P(baxes, None, None)
+    out, gram_wo, dropped = jax.shard_map(
+        island, in_specs=(bspec, P(), P("model", None, None),
+                          P("model", None, None)),
+        out_specs=(bspec, P(), P()),
+        axis_names=manual, check_vma=False,
+    )(x, p["router"], p["wi"], p["wo"])
+
+    xt_all = x.reshape(b * s, d)
+    grams = {
+        "router": block_gram(xt_all, cfg.foof_block) if collect else no_gram(),
+        "wi": no_gram(),
+        "wo": gram_wo,
+    }
+    aux = {"dropped_frac": dropped}
+    if cfg.num_shared_experts:
+        sgu = xt_all @ p["shared_wi"]
+        sg, su = jnp.split(sgu, 2, axis=-1)
+        sh = jax.nn.silu(sg) * su
+        out = out + (sh @ p["shared_wo"]).reshape(b, s, d)
+        grams["shared_wi"] = no_gram()
+        grams["shared_wo"] = (block_gram(sh, cfg.foof_block) if collect
+                              else no_gram())
+    return out, grams, aux
+
+
+def _dispatch_local(xt, gate_vals, gate_idx, e_global, e_off, e_local, cap):
+    """Sort-based capacity dispatch of local tokens to local experts.
+    Returns (buf [e_local, cap, D], slot, keep, st, flat_gate)."""
+    t, d = xt.shape
+    k = gate_idx.shape[-1]
+    flat_e = gate_idx.reshape(-1)
+    flat_tok = jnp.repeat(jnp.arange(t), k)
+    order = jnp.argsort(flat_e)
+    se, st = flat_e[order], flat_tok[order]
+    first = jnp.searchsorted(se, se, side="left")
+    rank = jnp.arange(t * k) - first
+    local = (se >= e_off) & (se < e_off + e_local)
+    keep = (rank < cap) & local
+    slot = (se - e_off) * cap + rank
+    slot = jnp.where(keep, slot, e_local * cap)
+    buf = jnp.zeros((e_local * cap + 1, d), xt.dtype).at[slot].set(xt[st])
+    flat_gate = gate_vals.reshape(-1)[order]
+    return buf[:-1].reshape(e_local, cap, d), slot, keep, st, flat_gate
+
+
+def moe_forward(cfg: ModelConfig, p: dict, x: jax.Array, *, collect=False):
+    """Top-k routed experts, sort-based capacity dispatch (no [T,E,C] one-hot).
+
+    Expert grams are pooled across experts (DESIGN.md: pooled-expert FOOF) —
+    the input covariance is computed over all tokens rather than per expert,
+    keeping the statistic O(d²) instead of O(E·d²).
+
+    With ``cfg.moe_shard_map`` and a live mesh, dispatch runs inside a
+    shard_map island (§Perf A1): activations are model-replicated and
+    data-sharded, expert weights are model-sharded — so every chip can route
+    its own cohort's tokens to its own expert shard with ZERO communication,
+    and the combine is a single psum over "model".  GSPMD's auto
+    partitioning of the scatter instead all-gathers every token over "data"
+    (measured 907 s of collectives on qwen3-moe train_4k).
+    """
+    if cfg.moe_shard_map:
+        info = _moe_mesh_info()
+        if info is not None:
+            return _moe_forward_shardmap(cfg, p, x, info, collect=collect)
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.experts_per_tok
+    f = cfg.d_ff
+    t = b * s
+    xt = x.reshape(t, d)
+
+    logits = (xt.astype(jnp.float32) @ p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)                # [T,k]
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    cap = int(math.ceil(cfg.capacity_factor * t * k / e))
+    cap = max(cap, 1)
+    flat_e = gate_idx.reshape(-1)                                # [T*k]
+    flat_tok = jnp.repeat(jnp.arange(t), k)
+    order = jnp.argsort(flat_e)
+    se, st = flat_e[order], flat_tok[order]
+    # rank within expert = position - first position of that expert id
+    first = jnp.searchsorted(se, se, side="left")
+    rank = jnp.arange(t * k) - first
+    keep = rank < cap
+    slot = se * cap + rank                                       # [T*k]
+    slot = jnp.where(keep, slot, e * cap)                        # overflow → dropped
+    buf = jnp.zeros((e * cap + 1, d), x.dtype).at[slot].set(xt[st]).astype(x.dtype)
+    buf = buf[:-1].reshape(e, cap, d)
+
+    gu = jnp.einsum("ecd,edf->ecf", buf, p["wi"])
+    gate_h, up_h = jnp.split(gu, 2, axis=-1)
+    hbuf = jax.nn.silu(gate_h) * up_h                            # [e,cap,f]
+    obuf = jnp.einsum("ecf,efd->ecd", hbuf, p["wo"])
+
+    # gather back + weighted combine over the k choices
+    flat_gate = gate_vals.reshape(-1)[order]
+    contrib = obuf.reshape(e * cap, d)
+    gathered = jnp.where(keep[:, None], contrib[jnp.clip(slot, 0, e * cap - 1)], 0.0)
+    out_t = jax.ops.segment_sum(gathered * flat_gate[:, None].astype(x.dtype),
+                                st, num_segments=t)
+    out = out_t.reshape(b, s, d)
+
+    grams = {
+        "router": block_gram(xt, cfg.foof_block) if collect else no_gram(),
+        "wi": no_gram(),      # pooled: shares router's input covariance
+        "wo": block_gram(hbuf.reshape(-1, f), cfg.foof_block) if collect else no_gram(),
+    }
+    aux = {"router_probs_mean": jnp.mean(probs, axis=0),
+           "dropped_frac": 1.0 - jnp.mean(keep.astype(jnp.float32))}
+    if cfg.num_shared_experts:
+        sgu = xt @ p["shared_wi"]
+        sg, su = jnp.split(sgu, 2, axis=-1)
+        sh = jax.nn.silu(sg) * su
+        out = out + (sh @ p["shared_wo"]).reshape(b, s, d)
+        grams["shared_wi"] = no_gram()
+        grams["shared_wo"] = (block_gram(sh, cfg.foof_block) if collect else no_gram())
+    return out, grams, aux

@@ -1,0 +1,178 @@
+"""The paper's own evaluation models.
+
+Test 1 (Sec 4.1): L2-regularized logistic regression — strongly convex, with
+analytic gradient and full Hessian (enables FedNL/FedNS/LocalNewton/FedPM
+with exact preconditioners and the superlinear-rate check of Theorem 1).
+
+Test 2 (Sec 4.2): non-convex DNNs — an MLP and a "simple CNN" (2 conv +
+3 fc, as in Li/He/Song 2021).  Every linear/conv layer is expressed as a
+matmul over (bias-augmented) inputs, so the FOOF statistic A = (1/T)·XᵀX is
+exact for all parameters including biases (input augmented with a 1-column;
+the paper treats biases separately — augmenting is the equivalent
+formulation of y = Wx + b as y = [W b][x;1]).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import block_gram, no_gram
+
+
+# ------------------------------------------------------- Test 1: convex ----
+
+@dataclass(frozen=True)
+class LogisticModel:
+    """f_i(θ) = (1/M) Σ_j log(1 + exp(-y_j x_jᵀθ)) + (λ/2)‖θ‖²."""
+    d: int
+    lam: float = 1e-3
+
+    def init(self, rng) -> jax.Array:
+        return jnp.zeros((self.d,), jnp.float32)
+
+    def loss(self, theta, batch) -> jax.Array:
+        x, y = batch["x"], batch["y"]                    # y ∈ {-1, +1}
+        z = y * (x @ theta)
+        return jnp.mean(jax.nn.softplus(-z)) + 0.5 * self.lam * jnp.sum(theta ** 2)
+
+    def grad(self, theta, batch) -> jax.Array:
+        x, y = batch["x"], batch["y"]
+        z = y * (x @ theta)
+        s = jax.nn.sigmoid(-z)                           # σ(-z)
+        return -(x.T @ (y * s)) / x.shape[0] + self.lam * theta
+
+    def hessian(self, theta, batch) -> jax.Array:
+        x, y = batch["x"], batch["y"]
+        z = y * (x @ theta)
+        w = jax.nn.sigmoid(z) * jax.nn.sigmoid(-z)       # σ(z)σ(-z)
+        return (x.T * w) @ x / x.shape[0] + self.lam * jnp.eye(self.d)
+
+    def accuracy(self, theta, batch) -> jax.Array:
+        pred = jnp.sign(batch["x"] @ theta)
+        return jnp.mean((pred == batch["y"]).astype(jnp.float32))
+
+
+# ------------------------------------------------- Test 2: DNN building ----
+
+def _augment(x2d: jax.Array) -> jax.Array:
+    ones = jnp.ones((*x2d.shape[:-1], 1), x2d.dtype)
+    return jnp.concatenate([x2d, ones], axis=-1)
+
+
+def _dense(x, w, collect: bool, foof_block: int):
+    """x: [..., din]; w: [din+1, dout] (bias row folded in)."""
+    xa = _augment(x)
+    y = xa @ w
+    gram = block_gram(xa.reshape(-1, xa.shape[-1]), foof_block) if collect \
+        else no_gram()
+    return y, gram
+
+
+def _conv(x, w, kh, kw, collect: bool, foof_block: int):
+    """x: [B,H,W,C]; w: [kh*kw*C+1, O] over bias-augmented im2col patches."""
+    b, h, ww, c = x.shape
+    patches = jax.lax.conv_general_dilated_patches(
+        x.transpose(0, 3, 1, 2), (kh, kw), (1, 1), "SAME")       # [B, C*kh*kw, H, W]
+    patches = patches.transpose(0, 2, 3, 1)                       # [B,H,W,C*kh*kw]
+    pa = _augment(patches)
+    y = pa @ w
+    gram = block_gram(pa.reshape(-1, pa.shape[-1]), foof_block) if collect \
+        else no_gram()
+    return y, gram
+
+
+@dataclass(frozen=True)
+class MLPModel:
+    """Flatten → hidden dense layers (ReLU) → classifier head."""
+    in_dim: int
+    hidden: Sequence[int]
+    num_classes: int
+    foof_block: int = 1024
+
+    def init(self, rng) -> dict:
+        dims = [self.in_dim, *self.hidden, self.num_classes]
+        params = {}
+        for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+            rng, k = jax.random.split(rng)
+            w = jax.random.normal(k, (a + 1, b)) * (2.0 / a) ** 0.5
+            w = w.at[-1].set(0.0)                        # zero bias row
+            params[f"fc{i}"] = {"w": w.astype(jnp.float32)}
+        return params
+
+    def apply(self, params, x, collect: bool = False):
+        x = x.reshape(x.shape[0], -1)
+        grams = {}
+        n = len(params)
+        for i in range(n):
+            x, g = _dense(x, params[f"fc{i}"]["w"], collect, self.foof_block)
+            grams[f"fc{i}"] = {"w": g}
+            if i < n - 1:
+                x = jax.nn.relu(x)
+        return x, grams
+
+
+@dataclass(frozen=True)
+class CNNModel:
+    """The paper's 'simple CNN': conv(5×5,6) → pool → conv(5×5,16) → pool →
+    fc(120) → fc(84) → fc(classes)."""
+    in_hw: int = 32
+    in_ch: int = 3
+    num_classes: int = 10
+    foof_block: int = 1024
+
+    def init(self, rng) -> dict:
+        ks = jax.random.split(rng, 5)
+
+        def w(k, a, b):
+            ww = jax.random.normal(k, (a + 1, b)) * (2.0 / a) ** 0.5
+            return ww.at[-1].set(0.0).astype(jnp.float32)
+
+        hw4 = self.in_hw // 4
+        return {
+            "conv0": {"w": w(ks[0], 5 * 5 * self.in_ch, 6)},
+            "conv1": {"w": w(ks[1], 5 * 5 * 6, 16)},
+            "fc0": {"w": w(ks[2], hw4 * hw4 * 16, 120)},
+            "fc1": {"w": w(ks[3], 120, 84)},
+            "fc2": {"w": w(ks[4], 84, self.num_classes)},
+        }
+
+    def apply(self, params, x, collect: bool = False):
+        grams = {}
+        x, g = _conv(x, params["conv0"]["w"], 5, 5, collect, self.foof_block)
+        grams["conv0"] = {"w": g}
+        x = jax.nn.relu(x)
+        x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                  (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+        x, g = _conv(x, params["conv1"]["w"], 5, 5, collect, self.foof_block)
+        grams["conv1"] = {"w": g}
+        x = jax.nn.relu(x)
+        x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                  (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+        x = x.reshape(x.shape[0], -1)
+        for name in ("fc0", "fc1", "fc2"):
+            x, g = _dense(x, params[name]["w"], collect, self.foof_block)
+            grams[name] = {"w": g}
+            if name != "fc2":
+                x = jax.nn.relu(x)
+        return x, grams
+
+
+def ce_loss_and_grams(model, params, batch, *, collect: bool = False,
+                      weight_decay: float = 0.0):
+    """Softmax CE (labels int) + optional L2; returns (loss, grams)."""
+    logits, grams = model.apply(params, batch["x"], collect)
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, batch["y"][:, None], axis=-1).mean()
+    if weight_decay:
+        l2 = sum(jnp.sum(w ** 2) for w in jax.tree.leaves(params))
+        nll = nll + 0.5 * weight_decay * l2
+    return nll, grams
+
+
+def accuracy(model, params, batch) -> jax.Array:
+    logits, _ = model.apply(params, batch["x"])
+    return jnp.mean((jnp.argmax(logits, -1) == batch["y"]).astype(jnp.float32))

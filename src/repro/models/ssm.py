@@ -1,0 +1,192 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) in pure JAX.
+
+Chunked SSD forward for train/prefill and a constant-memory recurrent step
+for decode.  The heavy lifting is matmuls (TPU-friendly); the cross-chunk
+recurrence is a short ``lax.scan`` over S/chunk steps.
+
+FedPM applicability (DESIGN.md §Arch-applicability): in_proj / out_proj are
+linear layers → FOOF preconditioned; A_log, dt_bias, D, conv and norm params
+are non-matrix → simple mixing.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import block_gram, no_gram
+
+
+def _segsum(x):
+    """Stable segment-sum: out[..., i, j] = sum_{j < k <= i} x[..., k]."""
+    t = x.shape[-1]
+    xc = jnp.cumsum(x, axis=-1)
+    out = xc[..., :, None] - xc[..., None, :]
+    mask = jnp.tril(jnp.ones((t, t), bool), k=0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_scan(x, dt, a_log, b, c, chunk: int):
+    """SSD chunked algorithm.
+
+    x: [B, S, H, P]; dt: [B, S, H] (post-softplus); a_log: [H];
+    b, c: [B, S, N] (single group).  Returns y: [B, S, H, P] and the final
+    state [B, H, P, N].
+    """
+    bsz, s, h, p = x.shape
+    n = b.shape[-1]
+    q = min(chunk, s)
+    pad = (-s) % q
+    if pad:
+        # zero-pad: dt = 0 ⇒ decay exp(0·a) = 1 and no input contribution,
+        # so the final state is exact; padded y rows are sliced off.
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+    s_pad = s + pad
+    nc = s_pad // q
+    a = -jnp.exp(a_log.astype(jnp.float32))                     # [H]
+    dta = dt.astype(jnp.float32) * a[None, None, :]             # [B,S,H]
+
+    xc = x.reshape(bsz, nc, q, h, p)
+    dtc = dt.reshape(bsz, nc, q, h).astype(jnp.float32)
+    dtac = dta.reshape(bsz, nc, q, h)
+    bc = b.reshape(bsz, nc, q, n)
+    cc = c.reshape(bsz, nc, q, n)
+
+    # --- intra-chunk (diagonal blocks): quadratic attention-like form
+    l = jnp.exp(_segsum(dtac.transpose(0, 1, 3, 2)))            # [B,nc,H,q,q]
+    cb = jnp.einsum("bzqn,bzkn->bzqk", cc, bc,
+                    preferred_element_type=jnp.float32)         # [B,nc,q,q]
+    m = cb[:, :, None] * l                                      # [B,nc,H,q,q]
+    y_diag = jnp.einsum("bzhqk,bzkh,bzkhp->bzqhp", m, dtc,
+                        xc.astype(jnp.float32))
+
+    # --- chunk states: decayed sum of inputs within each chunk
+    dta_cum = jnp.cumsum(dtac, axis=2)                          # [B,nc,q,H]
+    decay_to_end = jnp.exp(dta_cum[:, :, -1:, :] - dta_cum)     # [B,nc,q,H]
+    states = jnp.einsum("bzqn,bzqh,bzqh,bzqhp->bzhpn",
+                        bc, dtc, decay_to_end, xc.astype(jnp.float32))
+
+    # --- inter-chunk recurrence over nc chunks
+    chunk_decay = jnp.exp(dta_cum[:, :, -1, :])                 # [B,nc,H]
+
+    def step(carry, inp):
+        st, dec = inp                                           # [B,H,P,N], [B,H]
+        new = carry * dec[..., None, None] + st
+        return new, carry                                       # emit state *before* chunk
+
+    init = jnp.zeros((bsz, h, p, n), jnp.float32)
+    final, prev_states = jax.lax.scan(
+        step, init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)          # [B,nc,H,P,N]
+
+    # --- contribution of carried-in state to each position
+    state_decay = jnp.exp(dta_cum)                              # [B,nc,q,H]
+    y_off = jnp.einsum("bzqn,bzhpn,bzqh->bzqhp", cc, prev_states, state_decay)
+
+    y = (y_diag + y_off).reshape(bsz, s_pad, h, p)[:, :s]
+    return y.astype(x.dtype), final
+
+
+def ssd_decode_step(state, x, dt, a_log, b, c):
+    """One recurrent step.  state: [B,H,P,N]; x: [B,H,P]; dt: [B,H];
+    b, c: [B,N].  Returns (y [B,H,P], new_state)."""
+    a = -jnp.exp(a_log.astype(jnp.float32))
+    da = jnp.exp(dt.astype(jnp.float32) * a[None, :])           # [B,H]
+    dbx = jnp.einsum("bh,bn,bhp->bhpn", dt.astype(jnp.float32), b,
+                     x.astype(jnp.float32))
+    new = state * da[..., None, None] + dbx
+    y = jnp.einsum("bhpn,bn->bhp", new, c)
+    return y.astype(x.dtype), new
+
+
+# ------------------------------------------------------------ mamba block ----
+
+def init_mamba(cfg: ModelConfig, rng) -> dict:
+    d, din, n, hh = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    convdim = din + 2 * n
+    zxbcdt = 2 * din + 2 * n + hh
+    k1, k2, k3 = jax.random.split(rng, 3)
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "in_proj": (jax.random.normal(k1, (d, zxbcdt)) * d ** -0.5).astype(dt),
+        "conv_w": (jax.random.normal(k2, (cfg.conv_kernel, convdim)) *
+                   cfg.conv_kernel ** -0.5).astype(dt),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, hh).astype(jnp.float32)),
+        "dt_bias": jnp.zeros((hh,), jnp.float32),
+        "d_skip": jnp.ones((hh,), jnp.float32),
+        "gate_norm": jnp.ones((din,), jnp.float32),
+        "out_proj": (jax.random.normal(k3, (din, d)) * din ** -0.5).astype(dt),
+    }
+
+
+def _causal_conv(x, w):
+    """Depthwise causal conv. x: [B,S,C]; w: [K,C]."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, shape=x.shape)
+    for i in range(k):
+        out = out + xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+    return out
+
+
+def _split_zxbcdt(cfg: ModelConfig, zxbcdt):
+    din, n, hh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :din]
+    xbc = zxbcdt[..., din:2 * din + 2 * n]
+    dt = zxbcdt[..., 2 * din + 2 * n:]
+    return z, xbc, dt
+
+
+def _rmsnorm_gated(x, z, scale):
+    xf = x.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    xf = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + 1e-6)
+    return (xf * scale).astype(x.dtype)
+
+
+def mamba_forward(cfg: ModelConfig, p: dict, x: jax.Array, *, collect=False):
+    """x: [B, S, D] (already normed). Returns (out, grams, final_states)."""
+    bsz, s, d = x.shape
+    din, n, hh, ph = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    zxbcdt = x @ p["in_proj"]
+    z, xbc_raw, dt = _split_zxbcdt(cfg, zxbcdt)
+    xbc = jax.nn.silu(_causal_conv(xbc_raw, p["conv_w"]))
+    xs, b, c = xbc[..., :din], xbc[..., din:din + n], xbc[..., din + n:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    xh = xs.reshape(bsz, s, hh, ph)
+    y, final = ssd_scan(xh, dt, p["a_log"], b, c, cfg.ssm_chunk)
+    y = y + xh * p["d_skip"].astype(xh.dtype)[None, None, :, None]
+    y = y.reshape(bsz, s, din)
+    y = _rmsnorm_gated(y, z, p["gate_norm"])
+    out = y @ p["out_proj"]
+    grams = {k: no_gram() for k in p}
+    if collect:
+        grams["in_proj"] = block_gram(x.reshape(-1, d), cfg.foof_block)
+        grams["out_proj"] = block_gram(y.reshape(-1, din), cfg.foof_block)
+    # conv tail state for decode continuity: last (K-1) *pre-conv* inputs
+    conv_state = jnp.pad(xbc_raw, ((0, 0), (cfg.conv_kernel - 1, 0), (0, 0)))[:, -(cfg.conv_kernel - 1):, :]
+    return out, grams, (final, conv_state)
+
+
+def mamba_decode(cfg: ModelConfig, p: dict, x: jax.Array, ssm_state, conv_state):
+    """x: [B, 1, D]; ssm_state: [B,H,P,N]; conv_state: [B,K-1,convdim]."""
+    bsz = x.shape[0]
+    din, n, hh, ph = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    zxbcdt = x @ p["in_proj"]
+    z, xbc_new, dt = _split_zxbcdt(cfg, zxbcdt)
+    window = jnp.concatenate([conv_state, xbc_new], axis=1)      # [B,K,convdim]
+    conv_out = jnp.einsum("bkc,kc->bc", window, p["conv_w"])[:, None, :]
+    xbc = jax.nn.silu(conv_out)
+    xs, b, c = xbc[..., :din], xbc[..., din:din + n], xbc[..., din + n:]
+    dtv = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])
+    xh = xs[:, 0].reshape(bsz, hh, ph)
+    y, new_state = ssd_decode_step(ssm_state, xh, dtv, p["a_log"], b[:, 0], c[:, 0])
+    y = y + xh * p["d_skip"].astype(xh.dtype)[None, :, None]
+    y = y.reshape(bsz, 1, din)
+    y = _rmsnorm_gated(y, z, p["gate_norm"])
+    out = y @ p["out_proj"]
+    new_conv = window[:, 1:, :]
+    return out, new_state, new_conv

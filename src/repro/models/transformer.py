@@ -1,0 +1,561 @@
+"""One composable decoder stack covering all 10 assigned architectures.
+
+Layers are grouped into repeat *units* (cfg.layers_per_unit) whose params are
+stacked on a leading axis and driven by ``lax.scan`` — llama3-405b lowers
+with a 126×-smaller HLO than an unrolled stack.  Unit internals:
+
+  dense   : lpu × (norm → GQA attn → norm → MLP)          (gemma3: lpu = 6,
+            inner layers 0..4 sliding-window, layer 5 global)
+  moe     : norm → attn/MLA → norm → MoE (+ shared experts)
+  ssm     : norm → mamba2 (SSD)
+  hybrid  : shared-attention block (weights shared across units, zamba2)
+            followed by lpu mamba2 layers
+
+Forward optionally collects FOOF grams (mirroring the param tree) and/or the
+KV/SSM cache (for prefill).  ``decode_step`` consumes one token against the
+cache.  ``param_specs``/``cache_specs`` give PartitionSpecs for the
+production meshes (DESIGN.md §3/§5).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.models.config import ModelConfig, InputShape
+
+CLIENT_AXES_SPEC = ("pod", "data")  # batch-sharded axes present in the mesh
+
+
+# =========================================================== init / specs ====
+
+def _init_unit(cfg: ModelConfig, rng) -> dict:
+    """Params for one repeat unit (inner layers stacked on axis 0)."""
+    lpu = cfg.layers_per_unit
+    inner = []
+    for i in range(lpu):
+        rng, k1, k2 = jax.random.split(rng, 3)
+        if cfg.family in ("ssm",) or (cfg.family == "hybrid"):
+            p = {"norm": L.init_norm(cfg, cfg.d_model),
+                 "mamba": S.init_mamba(cfg, k1)}
+        elif cfg.attention == "mla":
+            p = {"norm1": L.init_norm(cfg, cfg.d_model),
+                 "attn": L.init_mla(cfg, k1),
+                 "norm2": L.init_norm(cfg, cfg.d_model),
+                 "moe": L.init_moe(cfg, k2) if cfg.num_experts else L.init_mlp(cfg, k2)}
+        else:
+            ffn = L.init_moe(cfg, k2) if cfg.num_experts else L.init_mlp(cfg, k2)
+            p = {"norm1": L.init_norm(cfg, cfg.d_model),
+                 "attn": L.init_attn(cfg, k1),
+                 "norm2": L.init_norm(cfg, cfg.d_model),
+                 "ffn": ffn}
+        inner.append(p)
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *inner)
+
+
+def init_params(cfg: ModelConfig, rng) -> dict:
+    rng, ke, kh, ks = jax.random.split(rng, 4)
+    dt = jnp.dtype(cfg.dtype)
+    units = []
+    for _ in range(cfg.num_units):
+        rng, ku = jax.random.split(rng)
+        units.append(_init_unit(cfg, ku))
+    blocks = jax.tree.map(lambda *xs: jnp.stack(xs), *units)
+    out_vocab = cfg.vocab_size * max(cfg.num_codebooks, 1)
+    params = {
+        "embed": {"w": (jax.random.normal(ke, (cfg.vocab_size, cfg.d_model))
+                        * cfg.d_model ** -0.5).astype(dt)},
+        "blocks": blocks,
+        "final_norm": L.init_norm(cfg, cfg.d_model),
+        "head": {"w": (jax.random.normal(kh, (cfg.d_model, out_vocab))
+                       * cfg.d_model ** -0.5).astype(dt)},
+    }
+    if cfg.family == "hybrid":
+        params["shared_attn"] = {"norm": L.init_norm(cfg, cfg.d_model),
+                                 "attn": L.init_attn(cfg, ks)}
+    return params
+
+
+def abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+
+# Archs whose params must additionally shard over "data" (DESIGN.md §3/§5).
+FSDP_ARCHS = {"command-r-35b", "deepseek-v2-236b", "llama3-405b", "qwen2-vl-72b"}
+
+
+def _axprod(axis_sizes: dict, axes) -> int:
+    n = 1
+    for a in (axes if isinstance(axes, (tuple, list)) else [axes]):
+        n *= axis_sizes.get(a, 1)
+    return n
+
+
+def param_specs(cfg: ModelConfig, axis_sizes: dict, *, fsdp: bool | None = None):
+    """PartitionSpec tree mirroring ``init_params`` output."""
+    if fsdp is None:
+        fsdp = cfg.name in FSDP_ARCHS
+    msz = axis_sizes.get("model", 1)
+    dsz = axis_sizes.get("data", 1)
+
+    cols_mode = fsdp and cfg.fsdp_mode == "cols"
+
+    def ok(dim, size):
+        return dim % size == 0 and size > 1
+
+    def m(dim):   # shard over "model" if divisible
+        return "model" if ok(dim, msz) else None
+
+    def d(dim):   # shard over "data" (fsdp-contract) if enabled & divisible
+        return "data" if (fsdp and not cols_mode and ok(dim, dsz)) else None
+
+    def md(dim):  # §Perf B2 "cols": shard over ("model","data") together
+        if cols_mode and ok(dim, msz * dsz):
+            return ("model", "data")
+        return m(dim)
+
+    _VECTOR = {"scale", "bias", "a_log", "dt_bias", "d_skip", "gate_norm",
+               "q_norm", "kv_norm", "conv_w"}
+    _BASE_NDIM = {k: (2 if k == "conv_w" else 1) for k in _VECTOR}
+
+    def base_spec(name, shp):
+        if name in _VECTOR:
+            return (None,) * len(shp)
+        if len(shp) == 3:                        # moe experts [E, ., .]
+            if name == "wi":
+                return (m(shp[0]), d(shp[1]), None)
+            return (m(shp[0]), None, d(shp[2]))  # wo
+        a, b = shp
+        table = {
+            "wqkv": (d(a), md(b)), "wo": (md(a), d(b)),
+            "wi": (d(a), md(b)),
+            "wq_a": (d(a), md(b) if cols_mode else None),
+            "wq_b": (None, md(b)),
+            "wkv_a": (d(a), md(b) if cols_mode else None),
+            "wkv_b": (None, md(b)),
+            "router": (None, None),
+            "shared_wi": (d(a), md(b)), "shared_wo": (md(a), d(b)),
+            "in_proj": (d(a), md(b)), "out_proj": (md(a), d(b)),
+        }
+        return table.get(name, (None, None))
+
+    params = abstract_params(cfg)
+
+    def spec_for(path, leaf) -> P:
+        keys = [str(getattr(k, "key", getattr(k, "name", k))) for k in path]
+        name = keys[-1]
+        if keys[0] == "embed":
+            return P(m(cfg.vocab_size), d(cfg.d_model))
+        if keys[0] == "head":
+            return P(d(cfg.d_model), m(leaf.shape[-1]))
+        shp = leaf.shape
+        nbase = 3 if ("moe" in keys and name in ("wi", "wo")) \
+            else _BASE_NDIM.get(name, 2)
+        # leading scan/stack axes are unsharded
+        base_shape = shp[len(shp) - nbase:]
+        lead = (None,) * (len(shp) - nbase)
+        return P(*lead, *base_spec(name, base_shape))
+
+    return jax.tree_util.tree_map_with_path(spec_for, params)
+
+
+def batch_spec(cfg: ModelConfig, axis_sizes: dict, batch_size: int):
+    """Input batch sharding: batch over the client axes that divide it."""
+    axes = [a for a in CLIENT_AXES_SPEC if axis_sizes.get(a, 1) > 1]
+    n = _axprod(axis_sizes, axes)
+    baxes = tuple(axes) if axes and batch_size % n == 0 else None
+    return baxes
+
+
+# ============================================================== forward ======
+
+def _positions_for(cfg: ModelConfig, batch: dict, bsz: int, s: int):
+    if cfg.mrope_sections:
+        if "positions" in batch:
+            return batch["positions"]
+        pos = jnp.arange(s, dtype=jnp.int32)[None, None, :]
+        return jnp.broadcast_to(pos, (bsz, 3, s))
+    return jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None, :], (bsz, s))
+
+
+def _embed_inputs(cfg: ModelConfig, params: dict, batch: dict):
+    """Returns (x [B,S,D], token_counts_for_embed_gram or None)."""
+    if cfg.frontend == "audio_stub":
+        return batch["embeds"].astype(jnp.dtype(cfg.dtype)), None
+    if cfg.frontend == "vision_stub":
+        tok = batch["tokens"]
+        text = jnp.take(params["embed"]["w"], tok, axis=0)
+        patches = batch["patches"].astype(text.dtype)
+        return jnp.concatenate([patches, text], axis=1), tok
+    tok = batch["tokens"]
+    return jnp.take(params["embed"]["w"], tok, axis=0), tok
+
+
+def _seq_parallel_spec(cfg: ModelConfig, bsz: int, s: int):
+    """P(batch_axes, "model", None) when the ambient mesh supports it."""
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        names = tuple(getattr(mesh, "axis_names", ()) or ())
+        if "model" not in names or int(mesh.shape["model"]) <= 1:
+            return None
+        if s % int(mesh.shape["model"]) != 0:
+            return None
+        ca = tuple(a for a in ("pod", "data") if a in names)
+        n = 1
+        for a in ca:
+            n *= int(mesh.shape[a])
+        baxes = ca if ca and bsz % n == 0 else None
+        return P(baxes, "model", None)
+    except Exception:
+        return None
+
+
+def _gemma3_window(cfg: ModelConfig, inner_idx: int) -> int:
+    """5 local (sliding) : 1 global layer pattern."""
+    if cfg.local_per_global <= 0:
+        return 0
+    return cfg.sliding_window if (inner_idx % (cfg.local_per_global + 1)
+                                  != cfg.local_per_global) else 0
+
+
+def _unit_forward(cfg: ModelConfig, up: dict, shared: dict | None, x,
+                  positions, *, collect: bool, want_cache: bool):
+    """One repeat unit. Returns (x, grams_unit, cache_unit, aux)."""
+    lpu = cfg.layers_per_unit
+    grams_inner, cache_unit, aux = [], {}, {}
+    shared_grams = None
+    if cfg.family == "hybrid" and shared is not None:
+        h = L.apply_norm(cfg, shared["norm"], x)
+        o, g_attn, (k, v) = L.attn_forward(cfg, shared["attn"], h, positions,
+                                           window=0, collect=collect)
+        x = x + o
+        shared_grams = {"norm": {kk: L.no_gram() for kk in shared["norm"]},
+                        "attn": g_attn}
+        if want_cache:
+            cache_unit["shared"] = {"k": k, "v": v}
+    for i in range(lpu):
+        p_i = jax.tree.map(lambda a: a[i], up)
+        if cfg.family in ("ssm", "hybrid"):
+            h = L.apply_norm(cfg, p_i["norm"], x)
+            o, g, (st, conv) = S.mamba_forward(cfg, p_i["mamba"], h, collect=collect)
+            x = x + o
+            gi = {"norm": {k: L.no_gram() for k in p_i["norm"]}, "mamba": g}
+            if want_cache:
+                cache_unit[f"layer{i}"] = {"ssm": st, "conv": conv}
+        else:
+            h = L.apply_norm(cfg, p_i["norm1"], x)
+            if cfg.attention == "mla":
+                o, g_attn, (ckv, krope) = L.mla_forward(cfg, p_i["attn"], h,
+                                                        positions, collect=collect)
+                if want_cache:
+                    cache_unit[f"layer{i}"] = {"ckv": ckv, "krope": krope}
+            else:
+                win = (_gemma3_window(cfg, i) if cfg.local_per_global
+                       else (cfg.sliding_window if cfg.attention == "sliding" else 0))
+                o, g_attn, (k, v) = L.attn_forward(cfg, p_i["attn"], h, positions,
+                                                   window=win, collect=collect)
+                if want_cache:
+                    if win > 0:
+                        k, v = k[:, :, -min(win, k.shape[2]):], v[:, :, -min(win, v.shape[2]):]
+                    cache_unit[f"layer{i}"] = {"k": k, "v": v}
+            x = x + o
+            h2 = L.apply_norm(cfg, p_i["norm2"], x)
+            key = "moe" if "moe" in p_i else "ffn"
+            if cfg.num_experts:
+                o2, g_ffn, aux_moe = L.moe_forward(cfg, p_i[key], h2, collect=collect)
+                aux = aux_moe
+            else:
+                o2, g_ffn = L.mlp_forward(cfg, p_i[key], h2, collect=collect)
+            x = x + o2
+            gi = {"norm1": {k: L.no_gram() for k in p_i["norm1"]},
+                  "attn": g_attn,
+                  "norm2": {k: L.no_gram() for k in p_i["norm2"]},
+                  key: g_ffn}
+        grams_inner.append(gi)
+    grams_unit = jax.tree.map(lambda *xs: jnp.stack(xs), *grams_inner)
+    return x, grams_unit, cache_unit, aux, shared_grams
+
+
+def forward(cfg: ModelConfig, params: dict, batch: dict, *,
+            collect_foof: bool = False, want_cache: bool = False,
+            remat: bool = True):
+    """Full forward. Returns (logits_input_x [B,S,D], grams, cache, aux).
+
+    The head matmul is NOT applied here — the loss is chunked over sequence
+    (see ``chunked_ce_loss``) to avoid materializing [B,S,V] logits.
+    ``remat`` checkpoints each repeat unit so backward recomputes
+    activations instead of saving them (126-layer archs).
+    """
+    x, tok = _embed_inputs(cfg, params, batch)
+    bsz, s, _ = x.shape
+    positions = _positions_for(cfg, batch, bsz, s)
+    shared = params.get("shared_attn")
+
+    seq_spec = _seq_parallel_spec(cfg, bsz, s) if cfg.seq_parallel and \
+        not want_cache else None
+
+    def body(carry, up):
+        x = carry
+        x, g, cache, aux, g_sh = _unit_forward(
+            cfg, up, shared, x, positions,
+            collect=collect_foof, want_cache=want_cache)
+        if seq_spec is not None:
+            # §Perf B3: between blocks the residual stream lives
+            # seq-sharded over "model" — norms/adds/converts run S/|model|
+            # per chip; the next block's matmul all-gathers it back.
+            x = jax.lax.with_sharding_constraint(x, seq_spec)
+        return x, (g, cache, g_sh)
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, (grams_units, cache_units, grams_shared) = jax.lax.scan(
+        body, x, params["blocks"])
+    x = L.apply_norm(cfg, params["final_norm"], x)
+
+    grams = {
+        "embed": {"w": _embed_gram(cfg, tok) if collect_foof else L.no_gram()},
+        "blocks": grams_units,
+        "final_norm": {k: L.no_gram() for k in params["final_norm"]},
+        "head": {"w": L.block_gram(x.reshape(-1, cfg.d_model), cfg.foof_block)
+                 if collect_foof else L.no_gram()},
+    }
+    if cfg.family == "hybrid":
+        # shared-attn grams: mean over unit applications (stacked by scan)
+        grams["shared_attn"] = jax.tree.map(lambda a: jnp.mean(a, axis=0),
+                                            grams_shared)
+    return x, grams, cache_units, {}
+
+
+def _embed_gram(cfg: ModelConfig, tok):
+    """Exact diagonal FOOF for the embedding: one-hot input covariance =
+    token frequency diagonal (DESIGN.md §4.2)."""
+    if tok is None:
+        return L.no_gram()
+    counts = jnp.zeros((cfg.vocab_size,), jnp.float32).at[tok.reshape(-1)].add(1.0)
+    return counts / jnp.float32(tok.size)
+
+
+def chunked_ce_loss(cfg: ModelConfig, head_w, x, labels, loss_mask=None,
+                    chunk: int = 512):
+    """Cross-entropy over [B,S] without materializing [B,S,V] logits."""
+    bsz, s, d = x.shape
+    nq = max(cfg.num_codebooks, 1)
+    c = min(chunk, s)
+    nchunk = s // c
+    xc = x.reshape(bsz, nchunk, c, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(bsz, nchunk, c, *labels.shape[2:]).transpose(1, 0, 2, *range(3, labels.ndim + 1))
+    if loss_mask is None:
+        loss_mask = jnp.ones((bsz, s), jnp.float32)
+    mc = loss_mask.reshape(bsz, nchunk, c).transpose(1, 0, 2)
+
+    def body(carry, inp):
+        xb, lb, mb = inp
+        logits = (xb @ head_w).astype(jnp.float32)
+        if nq > 1:
+            logits = logits.reshape(*logits.shape[:-1], nq, cfg.vocab_size)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lb[..., None], axis=-1)[..., 0]
+        nll = lse - gold
+        if nq > 1:
+            nll = jnp.mean(nll, axis=-1)
+        return (carry[0] + jnp.sum(nll * mb), carry[1] + jnp.sum(mb)), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.float32(0), jnp.float32(0)),
+                                 (xc, lc, mc))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def loss_fn(cfg: ModelConfig, params: dict, batch: dict, *,
+            collect_foof: bool = False):
+    x, grams, _, aux = forward(cfg, params, batch, collect_foof=collect_foof)
+    loss = chunked_ce_loss(cfg, params["head"]["w"], x, batch["labels"],
+                           batch.get("loss_mask"))
+    return loss, {"grams": grams, **aux}
+
+
+# ================================================================ decode =====
+
+def init_cache(cfg: ModelConfig, bsz: int, max_seq: int, dtype=None):
+    """Abstract-friendly cache init (works under eval_shape)."""
+    dt = jnp.dtype(dtype or cfg.dtype)
+    kvh, hd = cfg.num_kv_heads, cfg.head_dim
+    units = []
+    for _ in range(cfg.num_units):
+        cu = {}
+        if cfg.family == "hybrid":
+            slen = max_seq
+            if cfg.long_context_global_window and \
+                    max_seq > cfg.long_context_global_window:
+                slen = cfg.long_context_global_window
+            cu["shared"] = {"k": jnp.zeros((bsz, kvh, slen, hd), dt),
+                            "v": jnp.zeros((bsz, kvh, slen, hd), dt)}
+        for i in range(cfg.layers_per_unit):
+            if cfg.family in ("ssm", "hybrid"):
+                cu[f"layer{i}"] = {
+                    "ssm": jnp.zeros((bsz, cfg.ssm_heads, cfg.ssm_head_dim,
+                                      cfg.ssm_state), jnp.float32),
+                    "conv": jnp.zeros((bsz, cfg.conv_kernel - 1,
+                                       cfg.d_inner + 2 * cfg.ssm_state), dt)}
+            elif cfg.attention == "mla":
+                cu[f"layer{i}"] = {
+                    "ckv": jnp.zeros((bsz, max_seq, cfg.kv_lora_rank), dt),
+                    "krope": jnp.zeros((bsz, max_seq, cfg.qk_rope_dim), dt)}
+            else:
+                win = (_gemma3_window(cfg, i) if cfg.local_per_global
+                       else (cfg.sliding_window if cfg.attention == "sliding" else 0))
+                slen = min(win, max_seq) if win > 0 else max_seq
+                if win == 0 and cfg.long_context_global_window and \
+                        max_seq > cfg.long_context_global_window:
+                    slen = cfg.long_context_global_window
+                cu[f"layer{i}"] = {"k": jnp.zeros((bsz, kvh, slen, hd), dt),
+                                   "v": jnp.zeros((bsz, kvh, slen, hd), dt)}
+        units.append(cu)
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *units)
+
+
+def abstract_cache(cfg: ModelConfig, bsz: int, max_seq: int):
+    return jax.eval_shape(partial(init_cache, cfg, bsz, max_seq))
+
+
+def cache_specs(cfg: ModelConfig, axis_sizes: dict, bsz: int, max_seq: int):
+    """B → client axes (if divisible), cache seq → "model" (DESIGN §5)."""
+    cache = abstract_cache(cfg, bsz, max_seq)
+    msz = axis_sizes.get("model", 1)
+    baxes = batch_spec(cfg, axis_sizes, bsz)
+
+    def spec(leaf):
+        shp = leaf.shape  # leading dim = n_units
+        if len(shp) == 5 and shp[2] in (cfg.num_kv_heads,):        # [U,B,KV,S,hd]
+            sax = "model" if shp[3] % msz == 0 and msz > 1 else None
+            return P(None, baxes, None, sax, None)
+        if len(shp) == 4 and shp[-1] == cfg.kv_lora_rank:          # ckv [U,B,S,r]
+            sax = "model" if shp[2] % msz == 0 and msz > 1 else None
+            return P(None, baxes, sax, None)
+        if len(shp) == 4 and shp[-1] == cfg.qk_rope_dim:           # krope
+            sax = "model" if shp[2] % msz == 0 and msz > 1 else None
+            return P(None, baxes, sax, None)
+        if len(shp) == 5:                                          # ssm [U,B,H,P,N]
+            hax = "model" if shp[2] % msz == 0 and msz > 1 else None
+            return P(None, baxes, hax, None, None)
+        if len(shp) == 4:                                          # conv [U,B,K-1,C]
+            cax = "model" if shp[3] % msz == 0 and msz > 1 else None
+            return P(None, baxes, None, cax)
+        return P(*([None] * len(shp)))
+
+    return jax.tree.map(spec, cache)
+
+
+def decode_step(cfg: ModelConfig, params: dict, cache, batch: dict, pos):
+    """One-token decode. batch['tokens']: [B,1] (or embeds [B,1,D]).
+    pos: scalar int32 = index of the new token. Returns (logits, cache)."""
+    if cfg.frontend == "audio_stub":
+        x = batch["embeds"].astype(jnp.dtype(cfg.dtype))
+    else:
+        x = jnp.take(params["embed"]["w"], batch["tokens"], axis=0)
+    shared = params.get("shared_attn")
+
+    def body(carry, inp):
+        x = carry
+        up, cu = inp
+        if cfg.family == "hybrid" and shared is not None:
+            h = L.apply_norm(cfg, shared["norm"], x)
+            csz = cu["shared"]["k"].shape[2]
+            ring_win = csz if (cfg.long_context_global_window and
+                               csz == cfg.long_context_global_window) else 0
+            o, kc, vc = L.attn_decode(cfg, shared["attn"], h, pos,
+                                      cu["shared"]["k"], cu["shared"]["v"],
+                                      window=ring_win)
+            x = x + o
+            cu = dict(cu, shared={"k": kc, "v": vc})
+        for i in range(cfg.layers_per_unit):
+            p_i = jax.tree.map(lambda a: a[i], up)
+            ci = cu[f"layer{i}"]
+            has_ffn = cfg.family not in ("ssm", "hybrid")
+            if cfg.family in ("ssm", "hybrid"):
+                h = L.apply_norm(cfg, p_i["norm"], x)
+                o, st, conv = S.mamba_decode(cfg, p_i["mamba"], h,
+                                             ci["ssm"], ci["conv"])
+                x = x + o
+                ci = {"ssm": st, "conv": conv}
+            elif cfg.attention == "mla":
+                h = L.apply_norm(cfg, p_i["norm1"], x)
+                o, ckv, krope = L.mla_decode(cfg, p_i["attn"], h, pos,
+                                             ci["ckv"], ci["krope"])
+                x = x + o
+                ci = {"ckv": ckv, "krope": krope}
+            else:
+                h = L.apply_norm(cfg, p_i["norm1"], x)
+                win = (_gemma3_window(cfg, i) if cfg.local_per_global
+                       else (cfg.sliding_window if cfg.attention == "sliding" else 0))
+                # global layers capped to a window in long-context mode also
+                # run as ring buffers (cache shorter than max positions)
+                eff_win = win if win > 0 else (
+                    ci["k"].shape[2] if cfg.long_context_global_window and
+                    ci["k"].shape[2] == cfg.long_context_global_window else 0)
+                o, kc, vc = L.attn_decode(cfg, p_i["attn"], h, pos,
+                                          ci["k"], ci["v"], window=eff_win)
+                x = x + o
+                ci = {"k": kc, "v": vc}
+            cu = dict(cu)
+            cu[f"layer{i}"] = ci
+            if has_ffn:
+                h2 = L.apply_norm(cfg, p_i["norm2"], x)
+                key = "moe" if "moe" in p_i else "ffn"
+                if cfg.num_experts:
+                    o2, _, _ = L.moe_forward(cfg, p_i[key], h2)
+                else:
+                    o2, _ = L.mlp_forward(cfg, p_i[key], h2)
+                x = x + o2
+        return x, cu
+
+    x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache))
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    logits = (x @ params["head"]["w"]).astype(jnp.float32)
+    return logits, new_cache
+
+
+def pos_upper(cfg: ModelConfig) -> int:
+    return 1 << 30
+
+
+def prefill(cfg: ModelConfig, params: dict, batch: dict):
+    """Full-sequence prefill: returns (last-position hidden, cache)."""
+    x, _, cache, _ = forward(cfg, params, batch, want_cache=True)
+    return x[:, -1:, :], cache
+
+
+# ============================================================ accounting =====
+
+def count_params(params) -> int:
+    return sum(int(math.prod(p.shape)) for p in jax.tree.leaves(params))
+
+
+def active_params(cfg: ModelConfig) -> int:
+    """Per-token active parameter count (MoE: top-k fraction of experts)."""
+    total = 0
+    params = abstract_params(cfg)
+
+    def add(path, leaf):
+        nonlocal total
+        n = int(math.prod(leaf.shape))
+        keys = [str(getattr(k, "key", getattr(k, "name", k))) for k in path]
+        if "blocks" in keys and cfg.num_experts and keys[-1] in ("wi", "wo") \
+                and leaf.ndim >= 3:
+            n = n * cfg.experts_per_tok // cfg.num_experts
+        total += n
+
+    jax.tree_util.tree_map_with_path(add, params)
+    return total
+
+
+def model_flops(cfg: ModelConfig, shape: InputShape) -> float:
+    """MODEL_FLOPS = 6·N_active·D (train) or 2·N_active·D (decode/prefill fwd)."""
+    n = active_params(cfg)
+    tokens = shape.global_batch * (1 if shape.kind == "decode" else shape.seq_len)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n * tokens

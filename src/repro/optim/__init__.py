@@ -1,0 +1,66 @@
+"""Minimal optimizers for centralized training loops (examples/launcher).
+
+The FL algorithms carry their own update rules; these are for the
+non-federated driver paths (examples/lm_federated.py warmup, smoke tests).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import tree_axpy, tree_zeros_like
+
+PyTree = Any
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: PyTree
+    nu: PyTree
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[PyTree], OptState]
+    update: Callable[[PyTree, OptState, PyTree], tuple[PyTree, OptState]]
+
+
+def sgd(lr: float, momentum: float = 0.0) -> Optimizer:
+    def init(params):
+        return OptState(jnp.int32(0), tree_zeros_like(params), ())
+
+    def update(grads, state, params):
+        if momentum:
+            mu = jax.tree.map(lambda m, g: momentum * m + g, state.mu, grads)
+        else:
+            mu = grads
+        new = tree_axpy(-lr, mu, params)
+        return new, OptState(state.step + 1, mu if momentum else state.mu, ())
+
+    return Optimizer(init, update)
+
+
+def adam(lr: float, b1: float = 0.9, b2: float = 0.999,
+         eps: float = 1e-8, weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        return OptState(jnp.int32(0), tree_zeros_like(params),
+                        tree_zeros_like(params))
+
+    def update(grads, state, params):
+        t = state.step + 1
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g,
+                          state.nu, grads)
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        bc2 = 1 - b2 ** t.astype(jnp.float32)
+        upd = jax.tree.map(
+            lambda m, v: (m / bc1) / (jnp.sqrt(v / bc2) + eps), mu, nu)
+        if weight_decay:
+            upd = jax.tree.map(lambda u, p: u + weight_decay * p, upd, params)
+        new = tree_axpy(-lr, upd, params)
+        return new, OptState(t, mu, nu)
+
+    return Optimizer(init, update)

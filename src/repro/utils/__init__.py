@@ -1,0 +1,96 @@
+"""Small shared utilities: pytree math, rng, timing."""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+def tree_add(a: PyTree, b: PyTree) -> PyTree:
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a: PyTree, b: PyTree) -> PyTree:
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(a: PyTree, s) -> PyTree:
+    return jax.tree.map(lambda x: x * s, a)
+
+
+def tree_axpy(alpha, x: PyTree, y: PyTree) -> PyTree:
+    """alpha * x + y."""
+    return jax.tree.map(lambda u, v: alpha * u + v, x, y)
+
+
+def tree_zeros_like(a: PyTree) -> PyTree:
+    return jax.tree.map(jnp.zeros_like, a)
+
+
+def tree_dot(a: PyTree, b: PyTree):
+    leaves = jax.tree.map(lambda x, y: jnp.sum(x.astype(jnp.float32) * y.astype(jnp.float32)), a, b)
+    return jax.tree.reduce(jnp.add, leaves, jnp.float32(0.0))
+
+
+def tree_l2norm(a: PyTree):
+    return jnp.sqrt(tree_dot(a, a))
+
+
+def global_norm_clip(tree: PyTree, max_norm: float | None) -> PyTree:
+    if max_norm is None:
+        return tree
+    norm = tree_l2norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-12))
+    return tree_scale(tree, scale)
+
+
+def tree_num_params(a: PyTree) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(a))
+
+
+def tree_bytes(a: PyTree) -> int:
+    return sum(int(np.prod(x.shape)) * x.dtype.itemsize for x in jax.tree.leaves(a))
+
+
+def tree_mean_over_axis0(a: PyTree) -> PyTree:
+    return jax.tree.map(lambda x: jnp.mean(x, axis=0), a)
+
+
+def split_like(rng: jax.Array, tree: PyTree) -> PyTree:
+    """One rng key per leaf of ``tree``."""
+    leaves, treedef = jax.tree.flatten(tree)
+    keys = jax.random.split(rng, len(leaves))
+    return jax.tree.unflatten(treedef, list(keys))
+
+
+class Stopwatch:
+    def __init__(self):
+        self.t0 = time.perf_counter()
+
+    def lap_us(self) -> float:
+        now = time.perf_counter()
+        dt = (now - self.t0) * 1e6
+        self.t0 = now
+        return dt
+
+
+def timeit_us(fn: Callable[[], Any], iters: int = 5, warmup: int = 2) -> float:
+    """Median wall-clock microseconds of fn() (blocking on jax arrays)."""
+    def run():
+        out = fn()
+        jax.block_until_ready(out)
+        return out
+
+    for _ in range(warmup):
+        run()
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        run()
+        times.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(times))

@@ -1,0 +1,19 @@
+import os
+import sys
+
+# tests must see 1 device (the dry-run sets 512 in its own process only)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.fixture()
+def nprng():
+    return np.random.default_rng(0)

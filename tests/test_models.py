@@ -1,0 +1,138 @@
+"""Per-architecture smoke tests (spec §f): every assigned arch instantiates
+a REDUCED variant (≤2 scan units, d_model ≤ 128, ≤4 experts) and runs one
+forward + one fused-K1 FedPM train step on CPU, asserting shapes + finite."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_NAMES, get_config
+from repro.core.algorithms import HParams
+from repro.fl import distributed as D
+from repro.models import transformer as T
+
+B, S = 2, 64
+
+
+def make_batch(cfg, rng):
+    if cfg.frontend == "audio_stub":
+        return {"embeds": jax.random.normal(rng, (B, S, cfg.d_model),
+                                            dtype=jnp.float32),
+                "labels": jax.random.randint(rng, (B, S, cfg.num_codebooks),
+                                             0, cfg.vocab_size)}
+    if cfg.frontend == "vision_stub":
+        p = cfg.frontend_tokens
+        return {"tokens": jax.random.randint(rng, (B, S - p), 0,
+                                             cfg.vocab_size),
+                "patches": jax.random.normal(rng, (B, p, cfg.d_model),
+                                             dtype=jnp.float32),
+                "labels": jax.random.randint(rng, (B, S), 0, cfg.vocab_size),
+                "loss_mask": jnp.concatenate(
+                    [jnp.zeros((B, p)), jnp.ones((B, S - p))], axis=1)}
+    toks = jax.random.randint(rng, (B, S), 0, cfg.vocab_size)
+    return {"tokens": toks, "labels": toks}
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_smoke_forward_and_train_step(arch, rng):
+    cfg = get_config(arch, reduced=True)
+    params = T.init_params(cfg, rng)
+    batch = make_batch(cfg, rng)
+    x, grams, _, _ = T.forward(cfg, params, batch, collect_foof=True)
+    assert x.shape == (B, S, cfg.d_model)
+    assert jnp.all(jnp.isfinite(x))
+    # gram tree mirrors params structure
+    assert jax.tree.structure(grams) == jax.tree.structure(
+        jax.tree.map(lambda _: 0, params))
+
+    step = jax.jit(D.make_fused_k1_step(cfg, HParams(lr=0.1, damping=1.0)))
+    p2, m = step(params, batch)
+    assert jnp.isfinite(m["loss"])
+    for leaf in jax.tree.leaves(p2):
+        assert jnp.all(jnp.isfinite(leaf))
+    # params actually moved
+    moved = sum(float(jnp.sum(jnp.abs(a - b)))
+                for a, b in zip(jax.tree.leaves(p2), jax.tree.leaves(params)))
+    assert moved > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_smoke_decode_step(arch, rng):
+    cfg = get_config(arch, reduced=True)
+    params = T.init_params(cfg, rng)
+    cache = T.init_cache(cfg, B, S)
+    if cfg.frontend == "audio_stub":
+        batch = {"embeds": jax.random.normal(rng, (B, 1, cfg.d_model),
+                                             dtype=jnp.float32)}
+    else:
+        batch = {"tokens": jax.random.randint(rng, (B, 1), 0,
+                                              cfg.vocab_size)}
+    logits, cache2 = jax.jit(T.decode_step, static_argnums=0)(
+        cfg, params, cache, batch, jnp.int32(5))
+    nq = max(cfg.num_codebooks, 1)
+    assert logits.shape == (B, 1, cfg.vocab_size * nq)
+    assert jnp.all(jnp.isfinite(logits))
+    assert jax.tree.structure(cache2) == jax.tree.structure(cache)
+
+
+# NOTE: MoE archs (deepseek, qwen3) are excluded: capacity-based routing is
+# not teacher-forcing-consistent by construction (a token's expert slot
+# depends on the other tokens in the batch).  The MLA attention layer itself
+# is verified exactly in test_mla_decode_consistency below.
+@pytest.mark.parametrize("arch", ["olmo-1b", "gemma3-12b", "mamba2-1.3b",
+                                  "zamba2-7b", "command-r-35b"])
+def test_prefill_then_decode_matches_forward(arch, rng):
+    """Teacher-forcing consistency: hidden state for position t computed by
+    (prefill up to t) + (decode of token t) must match the full forward."""
+    cfg = get_config(arch, reduced=True)
+    params = T.init_params(cfg, rng)
+    toks = jax.random.randint(rng, (B, S), 0, cfg.vocab_size)
+    # full forward logits at last position
+    x_full, _, _, _ = T.forward(cfg, params, {"tokens": toks},
+                                want_cache=False)
+    logits_full = (x_full[:, -1:] @ params["head"]["w"]).astype(jnp.float32)
+    # prefill on S-1 tokens, then decode token S-1
+    _, cache = T.prefill(cfg, params, {"tokens": toks[:, :S - 1]})
+    cache = _pad_cache(cfg, cache, S)
+    logits_dec, _ = T.decode_step(cfg, params, cache,
+                                  {"tokens": toks[:, S - 1:]},
+                                  jnp.int32(S - 1))
+    import numpy as np
+    np.testing.assert_allclose(np.asarray(logits_dec),
+                               np.asarray(logits_full),
+                               rtol=2e-2, atol=2e-2)
+
+
+def _pad_cache(cfg, cache, target):
+    """prefill(S-1) produced caches sized S-1; pad seq dims to target."""
+    def pad(leaf):
+        # KV caches: [..., seq, hd] or latent [..., seq, r]
+        for axis in range(leaf.ndim):
+            if leaf.shape[axis] == target - 1:
+                pads = [(0, 0)] * leaf.ndim
+                pads[axis] = (0, 1)
+                return jnp.pad(leaf, pads)
+        return leaf
+    return jax.tree.map(pad, cache)
+
+
+def test_mla_decode_consistency(rng):
+    """Absorbed MLA decode (latent-space attention, DESIGN §5) must match
+    the direct training-path MLA exactly."""
+    from repro.models import layers as L
+    cfg = get_config("deepseek-v2-236b", reduced=True)
+    p = L.init_mla(cfg, rng)
+    bsz, s = 2, 16
+    x = jax.random.normal(rng, (bsz, s, cfg.d_model), dtype=jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (bsz, s))
+    out_full, _, (ckv, krope) = L.mla_forward(cfg, p, x, pos)
+    _, _, (ckv_p, krope_p) = L.mla_forward(cfg, p, x[:, :s - 1],
+                                           pos[:, :s - 1])
+    ckv_c = jnp.pad(ckv_p, ((0, 0), (0, 1), (0, 0)))
+    kr_c = jnp.pad(krope_p, ((0, 0), (0, 1), (0, 0)))
+    out_dec, ckv2, kr2 = L.mla_decode(cfg, p, x[:, s - 1:], s - 1,
+                                      ckv_c, kr_c)
+    import numpy as np
+    np.testing.assert_allclose(np.asarray(ckv2), np.asarray(ckv), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(out_dec[:, 0]),
+                               np.asarray(out_full[:, -1]),
+                               rtol=1e-4, atol=1e-5)

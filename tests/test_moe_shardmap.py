@@ -1,0 +1,48 @@
+"""§Perf A1: the shard_map MoE island must match the GSPMD-auto MoE exactly
+(separate process with 8 fake host devices — device count is locked at jax
+init, so this runs as a subprocess)."""
+import subprocess
+import sys
+import os
+
+SCRIPT = r'''
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys; sys.path.insert(0, "src")
+import dataclasses, jax, jax.numpy as jnp
+from repro.configs import get_config
+from repro.models import layers as L
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+cfg = get_config("qwen3-moe-30b-a3b", reduced=True)
+cfg1 = dataclasses.replace(cfg, capacity_factor=16.0)
+cfg2 = dataclasses.replace(cfg1, moe_shard_map=True)
+rng = jax.random.PRNGKey(0)
+p = L.init_moe(cfg, rng)
+x = jax.random.normal(rng, (4, 16, cfg.d_model), dtype=jnp.float32)
+out1, g1, _ = L.moe_forward(cfg1, p, x, collect=True)
+mesh = jax.make_mesh((4, 2), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+with jax.set_mesh(mesh):
+    f = jax.jit(lambda p, x: L.moe_forward(cfg2, p, x, collect=True),
+                in_shardings=({"router": NamedSharding(mesh, P()),
+                               "wi": NamedSharding(mesh, P("model", None, None)),
+                               "wo": NamedSharding(mesh, P("model", None, None))},
+                              NamedSharding(mesh, P("data", None, None))))
+    out2, g2, _ = f(p, x)
+err = float(jnp.max(jnp.abs(out1 - out2)))
+gerr = float(jnp.max(jnp.abs(g1["wo"] - g2["wo"])))
+assert err < 1e-5, err
+assert gerr < 1e-6, gerr
+print("OK", err, gerr)
+'''
+
+
+def test_moe_shardmap_matches_auto():
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run([sys.executable, "-c", SCRIPT],
+                         cwd=os.path.join(os.path.dirname(__file__), ".."),
+                         capture_output=True, text=True, env=env, timeout=600)
+    assert res.returncode == 0, res.stderr[-2000:]
+    assert "OK" in res.stdout
