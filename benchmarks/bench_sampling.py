@@ -1,8 +1,12 @@
 """Paper Fig. 6 (Appendix D.2): impact of client sampling — accuracy vs
-participating clients per round ∈ {2, 5, 10} of 10, α = 0.1.
+participating clients per round ∈ {2, 5, 10} of 10, α = 0.1 — plus the
+participation engine's compute-scaling claim: per-round wall-clock scales
+with the sampled cohort size S, not N (gather/compute/scatter core).
 
 Validates: all methods degrade with fewer participants; FedPM degrades
-least.  derived = best accuracy."""
+least; derived = best accuracy.  The scaling section emits us/round for
+S ∈ {N, N/2, N/4} on the convex task — derived = speedup over full
+participation (≥2× expected at S=N/4)."""
 from __future__ import annotations
 
 import jax
@@ -12,25 +16,53 @@ from repro.core.algorithms import HParams
 from repro.data.federated import build_round_batches, steps_per_epoch
 from repro.fl.simulate import FedSim
 
-from benchmarks.common import DNN_HP, dnn_setup, emit
+from benchmarks.common import (DNN_HP, convex_setup, dnn_setup, emit,
+                               run_convex, time_convex_round)
 
 
-def main(rounds=12):
+def fig6(rounds=12):
     setup = dnn_setup(alpha=0.1)
     ds, task = setup["ds"], setup["task"]
     k = steps_per_epoch(ds, 64) * 2
     for algo in ("fedavg", "scaffold", "localnewton_foof", "fedpm_foof"):
         for m in (2, 5, 10):
             sim = FedSim(task, algo, DNN_HP[algo], ds.n_clients)
-            st = sim.init(jax.random.PRNGKey(0))
             _, hist = sim.run(
                 jax.random.PRNGKey(0),
-                lambda t, _k: build_round_batches(
-                    ds, k, 64, np.random.default_rng(t)),
+                # participant-aware: batches are built for the cohort only
+                lambda t, _k, clients: build_round_batches(
+                    ds, k, 64, np.random.default_rng(t), clients=clients),
                 rounds=rounds, sample_clients=m,
                 eval_fn=lambda p: task.metric(p, setup["test"]))
             emit(f"sampling_fig6/{algo}/m{m}", 0.0,
                  f"best_acc={max(hist['metric']):.4f}")
+
+
+def scaling(n_clients=16, reps=30):
+    """Per-round client compute scales with S: us/round at S = N, N/2, N/4."""
+    setup = convex_setup(n_clients=n_clients)
+    hp = {"fedpm": HParams(lr=1.0, damping=1e-2),
+          "fedpm_foof": HParams(lr=0.3, damping=1.0),
+          "scaffold": HParams(lr=0.3)}
+    for algo in ("fedpm", "fedpm_foof", "scaffold"):
+        us_full = time_convex_round(setup, algo, hp[algo], reps=reps)
+        for s in (n_clients, n_clients // 2, n_clients // 4):
+            us = (us_full if s == n_clients else
+                  time_convex_round(setup, algo, hp[algo],
+                                    sample_clients=s, reps=reps))
+            emit(f"sampling_scaling/{algo}/S{s}", us,
+                 f"speedup_vs_full={us_full / us:.2f}x")
+        # convergence is unchanged by routing through the gathered path
+        errs_full, _, _ = run_convex(setup, algo, hp[algo], rounds=5)
+        errs_s, _, _ = run_convex(setup, algo, hp[algo], rounds=5,
+                                  sample_clients=n_clients // 4)
+        emit(f"sampling_converge/{algo}",
+             0.0, f"err_full={errs_full[-1]:.2e},err_S4={errs_s[-1]:.2e}")
+
+
+def main(rounds=12):
+    scaling()
+    fig6(rounds=rounds)
 
 
 if __name__ == "__main__":

@@ -49,21 +49,56 @@ def convex_setup(dataset="a9a", n_clients=None, seed=0):
                 full=full, d=d)
 
 
-def run_convex(setup, algo, hp, rounds, init_scale=0.1, seed=0):
-    sim = FedSim(setup["task"], algo, hp, setup["ds"].n_clients)
+def run_convex(setup, algo, hp, rounds, init_scale=0.1, seed=0,
+               sample_clients=0):
+    """``sample_clients`` > 0: per-round uniform cohorts of that size go
+    through the engine's gathered participation path (compute scales with
+    S, not N)."""
+    n = setup["ds"].n_clients
+    sim = FedSim(setup["task"], algo, hp, n)
     rng = jax.random.PRNGKey(seed)
     st = sim.init(rng)
     st.params = setup["theta_star"] + init_scale * jax.random.normal(
         rng, (setup["d"],))
+    np_rng = np.random.default_rng(seed)
     errs, fgaps = [], []
     t0 = time.perf_counter()
     for t in range(rounds):
-        st, _ = sim.round(st, setup["batches"], jax.random.PRNGKey(t))
+        if sample_clients and sample_clients < n:
+            chosen = np.sort(np_rng.choice(n, size=sample_clients,
+                                           replace=False))
+            sub = jax.tree.map(lambda x: x[chosen], setup["batches"])
+            st, _ = sim.round(st, sub, jax.random.PRNGKey(t),
+                              participants=chosen)
+        else:
+            st, _ = sim.round(st, setup["batches"], jax.random.PRNGKey(t))
         errs.append(float(jnp.linalg.norm(st.params - setup["theta_star"])))
         fgaps.append(abs(float(setup["model"].loss(st.params, setup["full"]))
                          - setup["f_star"]))
     us = (time.perf_counter() - t0) / rounds * 1e6
     return errs, fgaps, us
+
+
+def time_convex_round(setup, algo, hp, sample_clients=0, reps=20, seed=0):
+    """Steady-state us/round (post-compile) for a fixed cohort size."""
+    n = setup["ds"].n_clients
+    sim = FedSim(setup["task"], algo, hp, n)
+    st = sim.init(jax.random.PRNGKey(seed))
+    st.params = setup["theta_star"] + 0.05 * jax.random.normal(
+        jax.random.PRNGKey(seed), (setup["d"],))
+    s = sample_clients or n
+    chosen = np.arange(s)
+    batches = (jax.tree.map(lambda x: x[chosen], setup["batches"])
+               if s < n else setup["batches"])
+    st, _ = sim.round(st, batches, jax.random.PRNGKey(0),
+                      participants=chosen)          # compile
+    jax.block_until_ready(st.params)
+    t0 = time.perf_counter()
+    for t in range(reps):
+        st2, _ = sim.round(st, batches, jax.random.PRNGKey(t),
+                           participants=chosen)
+        jax.block_until_ready(st2.params)
+    return (time.perf_counter() - t0) / reps * 1e6
 
 
 # ------------------------------------------------------------- Test 2 ------

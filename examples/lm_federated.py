@@ -73,11 +73,10 @@ def main():
         step = jax.jit(D.make_fused_k1_step(cfg, hp) if args.algo == "fedpm"
                        else D.make_fedavg_step(cfg, hp), donate_argnums=0)
     else:
-        mesh = jax.make_mesh(
-            (jax.device_count(), 1), ("data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.distributed.axes import make_auto_mesh, use_mesh
+        mesh = make_auto_mesh((jax.device_count(), 1), ("data", "model"))
         rnd = D.make_local_steps_round(cfg, hp, mesh, k_steps=args.k)
-        ctx = jax.set_mesh(mesh)
+        ctx = use_mesh(mesh)
         ctx.__enter__()
         step = jax.jit(rnd)
     eval_loss = jax.jit(lambda p: T.loss_fn(cfg, p, held_batch)[0])

@@ -37,6 +37,22 @@ def main(rounds: int = 10, n_clients: int = 10, alpha: float = 0.1):
             print(f"round {t:2d}  client_loss={float(m['client_loss']):.3f}"
                   f"  test_acc={acc:.3f}")
 
+    # Client sampling (Appendix D.2): S of N clients train each round.  The
+    # engine gathers exactly the sampled cohort — compute scales with S,
+    # and sampled-out clients' state is untouched.  The participant-aware
+    # batch_fn builds batches for the cohort only.
+    s = max(2, n_clients // 2)
+    print(f"\n== fedpm_foof, sampling {s} of {n_clients} clients/round ==")
+    sim = FedSim(task, "fedpm_foof", HParams(lr=0.3, damping=1.0), n_clients)
+    _, hist = sim.run(
+        jax.random.PRNGKey(0),
+        lambda t, _k, clients: build_round_batches(
+            ds, k, 64, np.random.default_rng(t), clients=clients),
+        rounds=rounds, sample_clients=s,
+        eval_fn=lambda p: task.metric(p, test))
+    for t, acc in zip(hist["round"], hist["metric"]):
+        print(f"round {t:2d}  test_acc={acc:.3f}")
+
 
 if __name__ == "__main__":
     main()

@@ -1,13 +1,22 @@
 """The FL algorithm zoo (paper Table 1 + Sec 4 comparison methods).
 
-Every algorithm is a pair of pure functions
+Every algorithm is a triple of pure functions
 
+    init_server(task, hp, params)                  -> sstate
     client(task, hp, params, cstate, sstate, batches, rng) -> (msg, new_cstate)
-    server(task, hp, params, sstate, msgs, mask)   -> (new_params, sstate)
+    server(task, hp, params, sstate, msgs, part)   -> (new_params, sstate)
 
 vmapped over clients by ``repro.fl.simulate``.  ``batches`` has a leading
-local-step axis K.  ``msgs`` are client-stacked; ``mask`` ∈ {0,1}^N marks
-participating clients (client sampling, Appendix D.2).
+local-step axis K.
+
+Participation contract (client sampling, Appendix D.2): the engine gathers
+the S sampled clients BEFORE the client vmap, so ``msgs`` are stacked over
+the S participants only — every gathered message participates.  ``part`` is
+a ``Participation`` carrying the per-participant aggregation ``weights``
+([S], ones for plain sampling) and the static total client count
+``n_total`` (N), which algorithms that scale by the sampled fraction
+(SCAFFOLD's S/N control-variate term) read explicitly instead of inferring
+it from a full-length mask.
 
 Categories (paper Table 1):
   FOGM : psgd
@@ -25,7 +34,7 @@ from __future__ import annotations
 
 from dataclasses import dataclass, field
 from functools import partial
-from typing import Any, Callable
+from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -70,13 +79,42 @@ class Algorithm:
     needs_grams: bool = False
 
 
-def _wmean(tree_stack: PyTree, mask: jax.Array) -> PyTree:
-    wsum = jnp.maximum(jnp.sum(mask), 1.0)
+class Participation(NamedTuple):
+    """Who is in this round's aggregation.
+
+    ``weights``: [S] nonnegative weights over the GATHERED message stack
+    (ones for uniform sampling; fractional weights support e.g. data-size
+    weighting).  ``n_total``: static total client count N — S ≤ N.
+    """
+    weights: jax.Array
+    n_total: int
+
+    @property
+    def n_sampled(self) -> jax.Array:
+        """Participant count S = number of positive-weight entries (weight
+        mass is aggregation emphasis, not cohort size — fractional weights
+        must not shrink fraction-of-N terms like SCAFFOLD's S/N)."""
+        return jnp.sum((self.weights > 0).astype(jnp.float32))
+
+
+def _wmean(tree_stack: PyTree, weights: jax.Array) -> PyTree:
+    """Weighted mean over the gathered participant axis.
+
+    Normalizes by the true weight sum (epsilon floor only), so fractional
+    weights (e.g. data-size weighting) aggregate correctly — matching
+    ``foof.mix_preconditioned``.  The engine never dispatches an empty
+    cohort (``FedSim.round`` short-circuits S = 0).
+    """
+    wsum = jnp.maximum(jnp.sum(weights), 1e-12)
     return jax.tree.map(
-        lambda x: jnp.tensordot(mask, x, axes=1) / wsum, tree_stack)
+        lambda x: jnp.tensordot(weights, x, axes=1) / wsum, tree_stack)
 
 
-def _no_state(task, params):
+def _no_server_state(task, hp, params):
+    return ()
+
+
+def _no_client_state(task, params):
     return ()
 
 
@@ -110,8 +148,8 @@ def _psgd_client(task, hp, params, cstate, sstate, batches, rng):
     return {"grad": g}, cstate
 
 
-def _psgd_server(task, hp, params, sstate, msgs, mask):
-    g = _wmean(msgs["grad"], mask)
+def _psgd_server(task, hp, params, sstate, msgs, part):
+    g = _wmean(msgs["grad"], part.weights)
     return tree_axpy(-hp.lr, g, params), sstate
 
 
@@ -122,12 +160,12 @@ def _fedavg_client(task, hp, params, cstate, sstate, batches, rng):
     return {"theta": theta, "loss": loss}, cstate
 
 
-def _fedavg_server(task, hp, params, sstate, msgs, mask):
-    return _wmean(msgs["theta"], mask), sstate
+def _fedavg_server(task, hp, params, sstate, msgs, part):
+    return _wmean(msgs["theta"], part.weights), sstate
 
 
-def _fedavgm_server(task, hp, params, sstate, msgs, mask):
-    delta = tree_sub(_wmean(msgs["theta"], mask), params)
+def _fedavgm_server(task, hp, params, sstate, msgs, part):
+    delta = tree_sub(_wmean(msgs["theta"], part.weights), params)
     v = tree_axpy(hp.momentum, sstate, delta)   # v = m·v + Δ
     return tree_add(params, v), v
 
@@ -144,7 +182,7 @@ def _scaffold_init_client(task, params):
     return tree_zeros_like(params)
 
 
-def _scaffold_init_server(task, params):
+def _scaffold_init_server(task, hp, params):
     return tree_zeros_like(params)
 
 
@@ -162,15 +200,16 @@ def _scaffold_client(task, hp, params, cstate, sstate, batches, rng):
     return {"theta": theta, "dc": tree_sub(c_i_new, c_i), "loss": loss}, c_i_new
 
 
-def _scaffold_server(task, hp, params, sstate, msgs, mask):
-    theta = _wmean(msgs["theta"], mask)
-    frac = jnp.sum(mask) / mask.shape[0]
-    c = tree_add(sstate, tree_scale(_wmean(msgs["dc"], mask), frac))
+def _scaffold_server(task, hp, params, sstate, msgs, part):
+    theta = _wmean(msgs["theta"], part.weights)
+    # c ← c + (S/N)·mean_S(Δc_i): explicit sampled fraction from part
+    frac = part.n_sampled / jnp.float32(part.n_total)
+    c = tree_add(sstate, tree_scale(_wmean(msgs["dc"], part.weights), frac))
     new = tree_add(params, tree_scale(tree_sub(theta, params), hp.server_lr))
     return new, c
 
 
-def _fedadam_init_server(task, params):
+def _fedadam_init_server(task, hp, params):
     return (tree_zeros_like(params), tree_zeros_like(params))
 
 
@@ -179,9 +218,9 @@ def _fedadam_client(task, hp, params, cstate, sstate, batches, rng):
     return {"delta": tree_sub(theta, params), "loss": loss}, cstate
 
 
-def _fedadam_server(task, hp, params, sstate, msgs, mask):
+def _fedadam_server(task, hp, params, sstate, msgs, part):
     m, v = sstate
-    d = _wmean(msgs["delta"], mask)
+    d = _wmean(msgs["delta"], part.weights)
     m = tree_add(tree_scale(m, hp.beta1), tree_scale(d, 1 - hp.beta1))
     v = jax.tree.map(lambda vv, dd: hp.beta2 * vv + (1 - hp.beta2) * dd * dd, v, d)
     upd = jax.tree.map(lambda mm, vv: mm / (jnp.sqrt(vv) + hp.tau), m, v)
@@ -197,41 +236,47 @@ def _fednl_client(task, hp, params, cstate, sstate, batches, rng):
     return {"grad": g, "hess": h}, cstate
 
 
-def _fednl_server(task, hp, params, sstate, msgs, mask):
-    g = _wmean(msgs["grad"], mask)
-    h = _wmean(msgs["hess"], mask)
+def _fednl_server(task, hp, params, sstate, msgs, part):
+    g = _wmean(msgs["grad"], part.weights)
+    h = _wmean(msgs["hess"], part.weights)
     step = inv.solve(h, g[:, None], hp.damping, method=hp.inverse_method,
                      ns_iters=hp.ns_iters)[:, 0]
     return params - hp.lr * step, sstate
+
+
+def _fedns_init_server(task, hp, params):
+    """The sketch frame is SHARED across clients: built once here and
+    broadcast to every client via ``sstate`` (it rides into the vmapped
+    client fn as a closure, not per-client state).  Orthonormal columns
+    (QR of a gaussian): a raw square gaussian has cond ≈ d, which squares
+    through the Nyström core solve and destroys fp32 accuracy."""
+    d = params.shape[0]
+    s = hp.sketch or d
+    gauss = jax.random.normal(jax.random.PRNGKey(42), (d, s))
+    omega, _ = jnp.linalg.qr(gauss)
+    return omega
 
 
 def _fedns_client(task, hp, params, cstate, sstate, batches, rng):
     first = jax.tree.map(lambda x: x[0], batches)
     _, g = task.loss_grad(params, first)
     h = task.hessian(params, first)
-    d = params.shape[0]
-    s = hp.sketch or d
-    # The sketch frame must be SHARED across clients (server broadcasts it);
-    # a fixed per-run test matrix stands in for that broadcast.  Orthonormal
-    # columns (QR of a gaussian): a raw square gaussian has cond ≈ d, which
-    # squares through the Nyström core solve and destroys fp32 accuracy.
-    gauss = jax.random.normal(jax.random.PRNGKey(42), (d, s))
-    omega, _ = jnp.linalg.qr(gauss)
-    return {"grad": g, "sketch": h @ omega, "omega": omega}, cstate
+    omega = sstate                                        # broadcast frame
+    return {"grad": g, "sketch": h @ omega}, cstate
 
 
-def _fedns_server(task, hp, params, sstate, msgs, mask):
+def _fedns_server(task, hp, params, sstate, msgs, part):
     """Explicit Nyström reconstruction Ĥ = Y(ΩᵀY)⁻¹Yᵀ, then a damped solve.
     (A Woodbury identity solve is cheaper but loses ~30% accuracy to fp32
     cancellation at δ ≲ 1e-3 — measured; EXPERIMENTS.md §Repro notes.)"""
-    g = _wmean(msgs["grad"], mask)
-    y = _wmean(msgs["sketch"], mask)
-    omega = msgs["omega"][0]                              # shared frame
+    g = _wmean(msgs["grad"], part.weights)
+    y = _wmean(msgs["sketch"], part.weights)
+    omega = sstate                                        # shared frame
     core = omega.T @ y
     core = 0.5 * (core + core.T) + 1e-6 * jnp.eye(core.shape[0])
     h_hat = y @ jnp.linalg.solve(core, y.T)
     h_hat = 0.5 * (h_hat + h_hat.T)
-    x = inv.solve(h_hat, g[:, None], jnp.maximum(hp.damping, 1e-6),
+    x = inv.solve(h_hat, g[:, None], max(hp.damping, 1e-6),
                   method=hp.inverse_method, ns_iters=hp.ns_iters)[:, 0]
     return params - hp.lr * x, sstate
 
@@ -260,11 +305,11 @@ def _fedpm_full_client(task, hp, params, cstate, sstate, batches, rng):
     return {"theta": theta, "precond": h_last}, cstate
 
 
-def _fedpm_full_server(task, hp, params, sstate, msgs, mask):
+def _fedpm_full_server(task, hp, params, sstate, msgs, part):
     """Preconditioned mixing (Eq. 9/10): θ = (P̄)⁻¹ · mean_i P_i θ_i."""
-    pbar = _wmean(msgs["precond"], mask)
+    pbar = _wmean(msgs["precond"], part.weights)
     ptheta = _wmean(jax.vmap(lambda p, t: p @ t)(msgs["precond"], msgs["theta"]),
-                    mask)
+                    part.weights)
     theta = inv.solve(pbar, ptheta[:, None], 0.0, method=hp.inverse_method,
                       ns_iters=hp.ns_iters)[:, 0]
     return theta, sstate
@@ -309,12 +354,13 @@ def _fedpm_foof_client(task, hp, params, cstate, sstate, batches, rng):
     return {"theta": theta, "grams": grams, "loss": loss}, cstate
 
 
-def _fedpm_foof_server(task, hp, params, sstate, msgs, mask):
-    """Preconditioned mixing with FOOF blocks (Eq. 12), mask-weighted."""
+def _fedpm_foof_server(task, hp, params, sstate, msgs, part):
+    """Preconditioned mixing with FOOF blocks (Eq. 12) over the gathered
+    participants, weighted by ``part.weights``."""
     mixed = F.mix_preconditioned(msgs["theta"], msgs["grams"],
                                  damping=hp.damping,
                                  method=hp.inverse_method,
-                                 ns_iters=hp.ns_iters, weights=mask)
+                                 ns_iters=hp.ns_iters, weights=part.weights)
     return mixed, sstate
 
 
@@ -365,8 +411,8 @@ def batches_len(batches) -> int:
     return jax.tree.leaves(batches)[0].shape[0]
 
 
-def _alg(name, cat, client, server, init_server=_no_state,
-         init_client=_no_state, **kw) -> Algorithm:
+def _alg(name, cat, client, server, init_server=_no_server_state,
+         init_client=_no_client_state, **kw) -> Algorithm:
     return Algorithm(name=name, category=cat, client=client, server=server,
                      init_server=init_server, init_client=init_client, **kw)
 
@@ -375,7 +421,7 @@ ALGORITHMS: dict[str, Algorithm] = {
     "psgd": _alg("psgd", "FOGM", _psgd_client, _psgd_server),
     "fedavg": _alg("fedavg", "FOPM", _fedavg_client, _fedavg_server),
     "fedavgm": _alg("fedavgm", "FOPM", _fedavg_client, _fedavgm_server,
-                    init_server=lambda task, p: tree_zeros_like(p)),
+                    init_server=lambda task, hp, p: tree_zeros_like(p)),
     "fedprox": _alg("fedprox", "FOPM", _fedprox_client, _fedavg_server),
     "scaffold": _alg("scaffold", "FOPM", _scaffold_client, _scaffold_server,
                      init_server=_scaffold_init_server,
@@ -385,7 +431,7 @@ ALGORITHMS: dict[str, Algorithm] = {
     "fednl": _alg("fednl", "SOGM", _fednl_client, _fednl_server,
                   needs_hessian=True),
     "fedns": _alg("fedns", "SOGM", _fedns_client, _fedns_server,
-                  needs_hessian=True),
+                  init_server=_fedns_init_server, needs_hessian=True),
     "localnewton": _alg("localnewton", "SOPM", _localnewton_full_client,
                         _fedavg_server, needs_hessian=True),
     "fedpm": _alg("fedpm", "SOPM", _fedpm_full_client, _fedpm_full_server,

@@ -108,18 +108,24 @@ def mix_preconditioned(params_stack: PyTree, grams_stack: PyTree, *,
                        damping: float, method: str = "cholesky",
                        ns_iters: int = 20, weights: jax.Array | None = None
                        ) -> PyTree:
-    """FedPM server mixing (Eq. 12) over client-stacked trees.
+    """FedPM server mixing (Eq. 12) over participant-stacked trees.
 
-    params_stack / grams_stack have a leading client axis N.  Params with a
-    gram: θ = (Σ_i w_i A_i + δI)⁻¹ · Σ_i w_i (A_i + δI) θ_i with Σw_i = 1
-    (uniform by default; ``weights`` supports client sampling).  Others:
-    plain weighted mean (simple mixing).  Mixing identical params is the
-    identity for any SPD grams — tested property.
+    Participation contract: the leading axis of params_stack / grams_stack
+    is the GATHERED participant axis S — every stacked message is in the
+    round (client sampling gathers before stacking; see
+    ``repro.fl.simulate``).  Params with a gram:
+    θ = (Σ_i w_i A_i + δI)⁻¹ · Σ_i w_i (A_i + δI) θ_i with Σw_i = 1
+    (uniform by default; ``weights`` [S] reweights participants, e.g. by
+    data size).  Others: plain weighted mean (simple mixing).  Mixing
+    identical params is the identity for any SPD grams — tested property.
     """
     n = jax.tree.leaves(params_stack)[0].shape[0]
     if weights is None:
         w = jnp.full((n,), 1.0 / n, jnp.float32)
     else:
+        if weights.shape[0] != n:
+            raise ValueError(f"weights [{weights.shape[0]}] must match the "
+                             f"gathered participant axis [{n}]")
         w = weights / jnp.maximum(jnp.sum(weights), 1e-12)
 
     def wmean(x):
@@ -223,8 +229,10 @@ def mix_preconditioned_psum(params: PyTree, grams: PyTree, *, axes,
                             damping: float, method: str = "cholesky",
                             ns_iters: int = 20) -> PyTree:
     """Eq. 12 inside a shard_map manual region: the client "stack" is the
-    mesh axes ``axes``; means become psums.  Semantically identical to
-    ``mix_preconditioned`` with uniform weights (tested equivalence)."""
+    mesh axes ``axes``; means become psums.  Every cohort on the mesh is a
+    participant by construction (full participation), so this is exactly
+    ``mix_preconditioned`` with uniform weights over the gathered axis
+    (tested equivalence)."""
     axes = tuple(axes)
 
     def pmean(x):

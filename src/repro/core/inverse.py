@@ -1,7 +1,10 @@
 """Damped SPD inverses for FedPM preconditioning.
 
 Two paths (DESIGN.md §4.1):
-  - ``cholesky``: dense factorization (the paper's choice; oracle here).
+  - ``cholesky``: dense SPD factorization via ``cho_factor``/``cho_solve``
+    (the paper's choice; oracle here).  One factorization + two triangular
+    solves — ~3× cheaper than the LU that ``jnp.linalg.solve`` would run,
+    and it exploits symmetry that LU ignores.
   - ``ns``: Newton–Schulz iteration  X ← X(2I − AX)  — pure matmuls, the
     TPU-native path.  The Pallas kernel in ``repro.kernels.nschulz`` computes
     the same iteration with explicit VMEM tiling; this module is its jnp
@@ -15,6 +18,7 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+from jax.scipy.linalg import cho_factor, cho_solve
 
 
 def damp(a: jax.Array, damping: float) -> jax.Array:
@@ -41,6 +45,12 @@ def ns_inverse(a: jax.Array, iters: int = 20) -> jax.Array:
     return x.astype(a.dtype)
 
 
+def _cho_solve(ad: jax.Array, bf: jax.Array) -> jax.Array:
+    """SPD solve via Cholesky, batched over matching leading dims."""
+    c, lower = cho_factor(ad, lower=True)
+    return cho_solve((c, lower), bf)
+
+
 def inverse(a: jax.Array, damping: float = 0.0, *, method: str = "cholesky",
             ns_iters: int = 20) -> jax.Array:
     ad = damp(a.astype(jnp.float32), damping)
@@ -50,8 +60,8 @@ def inverse(a: jax.Array, damping: float = 0.0, *, method: str = "cholesky",
         from repro.kernels.nschulz import ops as _ops
         return _ops.ns_inverse(ad, iters=ns_iters)
     n = a.shape[-1]
-    return jnp.linalg.solve(ad, jnp.broadcast_to(jnp.eye(n, dtype=jnp.float32),
-                                                 ad.shape))
+    return _cho_solve(ad, jnp.broadcast_to(jnp.eye(n, dtype=jnp.float32),
+                                           ad.shape))
 
 
 def solve(a: jax.Array, b: jax.Array, damping: float = 0.0, *,
@@ -63,8 +73,8 @@ def solve(a: jax.Array, b: jax.Array, damping: float = 0.0, *,
         inv = (ns_inverse(ad, ns_iters) if method == "ns"
                else inverse(a, damping, method="pallas_ns", ns_iters=ns_iters))
         return (inv @ bf).astype(b.dtype)
-    # broadcast batch dims (jnp.linalg.solve requires matching leading dims)
+    # broadcast batch dims (the factorization requires matching leading dims)
     lead = jnp.broadcast_shapes(ad.shape[:-2], bf.shape[:-2])
     ad = jnp.broadcast_to(ad, (*lead, *ad.shape[-2:]))
     bf = jnp.broadcast_to(bf, (*lead, *bf.shape[-2:]))
-    return jnp.linalg.solve(ad, bf).astype(b.dtype)
+    return _cho_solve(ad, bf).astype(b.dtype)

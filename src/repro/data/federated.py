@@ -66,12 +66,19 @@ class FederatedDataset:
 
 
 def build_round_batches(ds: FederatedDataset, steps: int, batch: int,
-                        rng: np.random.Generator) -> dict:
-    """Stochastic [N, K, B, ...] batches; replacement iff shard < K·B."""
-    n = ds.n_clients
+                        rng: np.random.Generator, clients=None) -> dict:
+    """Stochastic [N, K, B, ...] batches; replacement iff shard < K·B.
+
+    ``clients`` (optional int array of client ids) restricts the build to
+    the sampled cohort — leaves lead with S = len(clients) and host work
+    scales with S, matching the simulate engine's gathered round.
+    """
+    shards = (ds.shards if clients is None
+              else [ds.shards[int(c)] for c in clients])
+    n = len(shards)
     need = steps * batch
     xs, ys = [], []
-    for s in ds.shards:
+    for s in shards:
         replace = len(s) < need
         idx = rng.choice(s, size=need, replace=replace)
         xs.append(ds.x[idx])

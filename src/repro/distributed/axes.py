@@ -1,10 +1,19 @@
-"""Canonical mesh-axis names.
+"""Canonical mesh-axis names + version-gated jax mesh/shard_map compat.
 
 The FL mapping (DESIGN.md §3): clients ARE the data-parallel axis.
 Single-pod mesh: ("data", "model"); multi-pod: ("pod", "data", "model").
 Server-side mixing = collectives over CLIENT_AXES ∩ mesh.axis_names.
+
+The compat layer papers over the `jax.sharding.AxisType` /
+`jax.set_mesh` / `jax.shard_map` API moves: current jax exposes all
+three at the top level, while 0.4.x has neither ``AxisType`` nor
+``set_mesh`` and keeps ``shard_map`` under ``jax.experimental`` with
+``check_rep``/``auto`` instead of ``check_vma``/``axis_names``.  Every
+mesh/shard_map touchpoint in the repo goes through these three helpers.
 """
 from __future__ import annotations
+
+from typing import Any, Callable
 
 import jax
 
@@ -13,6 +22,85 @@ DATA_AXIS = "data"
 MODEL_AXIS = "model"
 #: axes that together enumerate client cohorts (present axes only are used)
 CLIENT_AXES = (POD_AXIS, DATA_AXIS)
+
+_HAS_AXIS_TYPE = hasattr(jax.sharding, "AxisType")
+_HAS_SET_MESH = hasattr(jax, "set_mesh")
+_HAS_TOP_SHARD_MAP = hasattr(jax, "shard_map")
+
+
+def make_auto_mesh(shape, axes) -> jax.sharding.Mesh:
+    """``jax.make_mesh`` with every axis in Auto mode on both jax APIs.
+
+    New jax takes ``axis_types=(AxisType.Auto, ...)``; old jax has no
+    ``axis_types`` kwarg and every axis is implicitly auto.
+    """
+    if _HAS_AXIS_TYPE:
+        return jax.make_mesh(
+            shape, axes,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
+def use_mesh(mesh: jax.sharding.Mesh):
+    """Context manager installing ``mesh`` as the ambient mesh.
+
+    ``jax.set_mesh(mesh)`` where available; on old jax the Mesh object
+    itself is the context manager (it sets the thread-resources env that
+    sharding-constraint resolution and shard_map read).
+    """
+    if _HAS_SET_MESH:
+        return jax.set_mesh(mesh)
+    return mesh
+
+
+def ambient_mesh():
+    """The mesh installed by ``use_mesh``, or None outside any context.
+
+    Gated on the same predicate as ``use_mesh`` so the read path always
+    matches the write path: with ``jax.set_mesh`` we read the abstract
+    mesh it installs; otherwise ``use_mesh`` fell back to ``with mesh:``
+    and we read the thread-resources physical mesh that sets.
+    """
+    if _HAS_SET_MESH:
+        m = jax.sharding.get_abstract_mesh()
+        if m is not None and getattr(m, "axis_names", ()):
+            return m
+        return None
+    from jax._src.mesh import thread_resources
+    m = thread_resources.env.physical_mesh
+    return None if m.empty else m
+
+
+def _ambient_mesh() -> jax.sharding.Mesh:
+    m = ambient_mesh()
+    if m is None:
+        raise ValueError("shard_map without mesh= needs an enclosing "
+                         "use_mesh(mesh) context")
+    return m
+
+
+def shard_map(f: Callable, *, mesh: jax.sharding.Mesh | None = None,
+              in_specs: Any, out_specs: Any,
+              axis_names: set | None = None, check: bool = False):
+    """Version-gated ``shard_map`` with partial-manual axes.
+
+    ``axis_names`` is the set of *manual* axes (new-jax semantics);
+    ``None`` means all mesh axes.  On old jax this maps to
+    ``auto = mesh.axis_names - axis_names`` and ``check_rep=check``.
+    """
+    if _HAS_TOP_SHARD_MAP:
+        kw = dict(in_specs=in_specs, out_specs=out_specs, check_vma=check)
+        if mesh is not None:
+            kw["mesh"] = mesh
+        if axis_names is not None:
+            kw["axis_names"] = set(axis_names)
+        return jax.shard_map(f, **kw)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    m = mesh if mesh is not None else _ambient_mesh()
+    auto = (frozenset(m.axis_names) - frozenset(axis_names)
+            if axis_names is not None else frozenset())
+    return _shard_map(f, m, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check, auto=auto)
 
 
 def present_client_axes(mesh: jax.sharding.Mesh) -> tuple[str, ...]:

@@ -28,7 +28,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import foof as F
 from repro.core.algorithms import HParams
-from repro.distributed.axes import present_client_axes
+from repro.distributed.axes import present_client_axes, shard_map
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
 from repro.utils import tree_axpy, global_norm_clip
@@ -171,10 +171,10 @@ def make_local_steps_round(cfg: ModelConfig, hp: HParams,
     def round_fn(params, batch):
         bspecs = jax.tree.map(lambda _: P(client_axes), batch)
         pspecs = jax.tree.map(lambda _: P(), params)
-        mixed, loss = jax.shard_map(
+        mixed, loss = shard_map(
             per_client, mesh=mesh, in_specs=(pspecs, bspecs),
             out_specs=(pspecs, P()), axis_names=set(client_axes),
-            check_vma=False)(params, batch)
+            check=False)(params, batch)
         return mixed, {"loss": loss}
 
     return round_fn

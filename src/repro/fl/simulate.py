@@ -1,16 +1,26 @@
-"""The paper-scale FL execution engine.
+"""The paper-scale FL execution engine: a gather/compute/scatter core.
 
-Clients are a vmapped leading axis; one jitted ``round`` = vmapped local
-training on all N clients + one server aggregation.  Client sampling
-(Appendix D.2) gathers a fixed-size subset before aggregation so every
-algorithm sees exactly the participating messages.
+One round = gather the S participating clients' states and batches
+(``jnp.take`` along the client axis), vmap local training over exactly
+those S clients, aggregate their messages on the server, and scatter the
+updated client states back with ``.at[idx].set(...)``.  Non-participants'
+states are provably untouched — earlier revisions ran all N clients and
+unconditionally overwrote every client's state, silently corrupting
+sampled-out SCAFFOLD control variates (and any future stateful client:
+drift correctors, cached per-client preconditioners) — and per-round
+compute/memory scale with S, not N.
+
+Client sampling (Appendix D.2) therefore costs S/N of a full round; the
+jit cache keys on S's shape, so a fixed cohort size compiles once.
 
 This engine reproduces Test 1 / Test 2 / FEMNIST-class experiments.  The
 production engine for the 10 assigned architectures is
-``repro.fl.distributed`` (mesh collectives instead of a vmap axis).
+``repro.fl.distributed`` (mesh collectives instead of a vmap axis; every
+cohort participates there, matching the gathered contract).
 """
 from __future__ import annotations
 
+import inspect
 from dataclasses import dataclass
 from functools import partial
 from typing import Any
@@ -19,7 +29,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.algorithms import Algorithm, HParams, get_algorithm
+from repro.core.algorithms import (Algorithm, HParams, Participation,
+                                   get_algorithm)
 
 PyTree = Any
 
@@ -32,6 +43,27 @@ class FedState:
     round: int = 0
 
 
+def _batch_fn_takes_participants(batch_fn) -> bool:
+    """Does batch_fn accept a third (participants) argument?
+
+    Only REQUIRED positional params count — a default-valued third param
+    is the standard capture idiom (``lambda t, k, ds=ds: ...``), not a
+    request for the participant array.
+    """
+    try:
+        sig = inspect.signature(batch_fn)
+    except (TypeError, ValueError):
+        return False
+    params = list(sig.parameters.values())
+    if any(p.kind == inspect.Parameter.VAR_POSITIONAL for p in params):
+        return True
+    required = [p for p in params
+                if p.kind in (inspect.Parameter.POSITIONAL_ONLY,
+                              inspect.Parameter.POSITIONAL_OR_KEYWORD)
+                and p.default is inspect.Parameter.empty]
+    return len(required) >= 3
+
+
 class FedSim:
     """Federated simulation of N clients with algorithm ``algo``."""
 
@@ -41,11 +73,13 @@ class FedSim:
         self.algo = get_algorithm(algo) if isinstance(algo, str) else algo
         self.hp = hp
         self.n = n_clients
-        self._round_jit = jax.jit(self._round)
+        # one jit object; XLA caches a program per participant count S
+        # (``full`` is static: the full-cohort program has no gather/scatter)
+        self._round_jit = jax.jit(self._round, static_argnames=("full",))
 
     def init(self, rng) -> FedState:
         params = self.task.init(rng)
-        server = self.algo.init_server(self.task, params)
+        server = self.algo.init_server(self.task, self.hp, params)
         one_client = self.algo.init_client(self.task, params)
         clients = jax.tree.map(
             lambda x: jnp.broadcast_to(x, (self.n, *x.shape)), one_client)
@@ -53,31 +87,107 @@ class FedSim:
 
     # ------------------------------------------------------------ round ----
 
-    def _round(self, params, server, clients, client_batches, rng,
-               mask):
-        """client_batches: pytree with leading [N, K, ...]."""
-        rngs = jax.random.split(rng, self.n)
+    def _round(self, params, server, clients, client_batches, rng, idx,
+               weights, full):
+        """One gather/compute/scatter round over the participants ``idx``.
 
-        def client_fn(cstate, batches, crng):
+        ``client_batches`` leaves lead with either N (full bank, client
+        order — gathered here; this interpretation wins when S == N) or
+        S == len(idx) < N (caller already built batches in participant
+        order, the data path that scales with S).  ``idx`` must be
+        duplicate-free (the scatter writes each participant's slot
+        exactly once).  ``full`` (static) marks the identity cohort —
+        the hot full-participation path skips gather and scatter
+        entirely.
+        """
+        s = self.n if full else idx.shape[0]
+        rngs = jax.random.split(rng, s)
+        nb = jax.tree.leaves(client_batches)[0].shape[0]
+        # ---- gather: only the S participants' states and batches --------
+        if full:
+            if nb != self.n:
+                raise ValueError(f"client_batches lead with {nb}; expected "
+                                 f"N={self.n} for a full round")
+            gathered, batches = clients, client_batches
+        else:
+            gathered = jax.tree.map(lambda x: jnp.take(x, idx, axis=0),
+                                    clients)
+            if nb == self.n:
+                batches = jax.tree.map(lambda x: jnp.take(x, idx, axis=0),
+                                       client_batches)
+            elif nb == s:
+                batches = client_batches
+            else:
+                raise ValueError(
+                    f"client_batches lead with {nb}; expected N={self.n} "
+                    f"or S={s} participants")
+
+        # ---- compute: vmap over exactly the S participants --------------
+        def client_fn(cstate, cbatches, crng):
             return self.algo.client(self.task, self.hp, params, cstate,
-                                    server, batches, crng)
+                                    server, cbatches, crng)
 
-        msgs, new_clients = jax.vmap(client_fn)(clients, client_batches, rngs)
+        msgs, updated = jax.vmap(client_fn)(gathered, batches, rngs)
+        part = Participation(weights=weights, n_total=self.n)
         new_params, new_server = self.algo.server(
-            self.task, self.hp, params, server, msgs, mask)
+            self.task, self.hp, params, server, msgs, part)
+
+        # ---- scatter: write back ONLY the participants' states ----------
+        new_clients = updated if full else jax.tree.map(
+            lambda bank, upd: bank.at[idx].set(upd), clients, updated)
         metrics = {}
         if isinstance(msgs, dict) and "loss" in msgs:
-            metrics["client_loss"] = jnp.sum(msgs["loss"] * mask) / \
-                jnp.maximum(jnp.sum(mask), 1.0)
+            metrics["client_loss"] = jnp.sum(msgs["loss"] * weights) / \
+                jnp.maximum(jnp.sum(weights), 1e-12)
         return new_params, new_server, new_clients, metrics
 
     def round(self, state: FedState, client_batches, rng,
-              mask=None) -> tuple[FedState, dict]:
-        if mask is None:
-            mask = jnp.ones((self.n,), jnp.float32)
+              mask=None, *, participants=None) -> tuple[FedState, dict]:
+        """One round.
+
+        ``participants``: host int array [S] of unique client ids
+        (preferred).  ``mask``: legacy {0,1}^N participation mask —
+        converted host-side to (participants, weights); its nonzero
+        entries become the per-participant aggregation weights.
+
+        A full cohort (S == N) is canonicalized to client order — the id
+        set is all of [0, N), so order carries no information, and
+        ``client_batches`` is then unambiguously the client-ordered bank
+        (pre-gathered batches in a permuted participant order are only
+        meaningful for S < N).
+        """
+        if participants is not None:
+            idx = np.asarray(participants)
+            weights = jnp.ones((idx.shape[0],), jnp.float32)
+        elif mask is not None:
+            mask_np = np.asarray(mask)
+            idx = np.flatnonzero(mask_np > 0)
+            weights = jnp.asarray(mask_np[idx], jnp.float32)
+        else:
+            idx = np.arange(self.n)
+            weights = jnp.ones((self.n,), jnp.float32)
+        if idx.size == 0:
+            # empty cohort: nothing trains, nothing aggregates
+            return FedState(params=state.params, server=state.server,
+                            clients=state.clients,
+                            round=state.round + 1), {}
+        if idx.min() < 0 or idx.max() >= self.n:
+            raise ValueError(f"participant ids must be in [0, {self.n}); "
+                             f"got {idx.min()}..{idx.max()}")
+        if np.unique(idx).size != idx.size:
+            raise ValueError("participant ids must be unique (the scatter "
+                             "writes each slot exactly once)")
+        full = idx.size == self.n
+        if full and not np.array_equal(idx, np.arange(self.n)):
+            # canonicalize: unique + in-range + S == N means the id set is
+            # exactly [0, N); reorder weights to match client order
+            order = np.argsort(idx)
+            idx = idx[order]
+            weights = weights[jnp.asarray(order)]
         p, s, c, metrics = self._round_jit(state.params, state.server,
                                            state.clients, client_batches,
-                                           rng, mask)
+                                           rng, jnp.asarray(idx, jnp.int32),
+                                           weights, full=full)
         return FedState(params=p, server=s, clients=c,
                         round=state.round + 1), metrics
 
@@ -85,7 +195,9 @@ class FedSim:
 
     def run(self, rng, batch_fn, rounds: int, *, sample_clients: int = 0,
             eval_fn=None, eval_every: int = 1, seed: int = 0):
-        """batch_fn(round, rng) -> client_batches [N, K, ...].
+        """batch_fn(round, rng) -> client_batches [N, K, ...], or
+        batch_fn(round, rng, participants) -> [S, K, ...] to build batches
+        for the sampled cohort only (the data path that scales with S).
 
         ``sample_clients`` > 0 enables per-round uniform client sampling.
         Returns (final_state, history dict of lists).
@@ -93,16 +205,18 @@ class FedSim:
         state = self.init(rng)
         hist = {"round": [], "metric": [], "loss": []}
         np_rng = np.random.default_rng(seed)
+        takes_participants = _batch_fn_takes_participants(batch_fn)
         for t in range(rounds):
             rng, kb, kr = jax.random.split(rng, 3)
-            batches = batch_fn(t, kb)
             if sample_clients and sample_clients < self.n:
-                chosen = np_rng.choice(self.n, size=sample_clients,
-                                       replace=False)
-                mask = jnp.zeros((self.n,), jnp.float32).at[chosen].set(1.0)
+                chosen = np.sort(np_rng.choice(self.n, size=sample_clients,
+                                               replace=False))
             else:
-                mask = jnp.ones((self.n,), jnp.float32)
-            state, metrics = self.round(state, batches, kr, mask)
+                chosen = np.arange(self.n)
+            batches = (batch_fn(t, kb, chosen) if takes_participants
+                       else batch_fn(t, kb))
+            state, metrics = self.round(state, batches, kr,
+                                        participants=chosen)
             if eval_fn is not None and (t % eval_every == 0 or t == rounds - 1):
                 hist["round"].append(t)
                 hist["metric"].append(float(eval_fn(state.params)))

@@ -128,7 +128,8 @@ def lower_pair(arch: str, shape_name: str, *, multi_pod: bool,
     specs = input_specs(cfg, shape)
     t0 = time.time()
 
-    with jax.set_mesh(mesh):
+    from repro.distributed.axes import use_mesh
+    with use_mesh(mesh):
         if shape.kind == "decode":
             cshard = jax.tree.map(
                 lambda sp: NamedSharding(mesh, sp),

@@ -8,21 +8,19 @@ from __future__ import annotations
 
 import jax
 
+from repro.distributed.axes import make_auto_mesh
+
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_auto_mesh(shape, axes)
 
 
 def make_host_mesh() -> jax.sharding.Mesh:
     """Whatever devices exist (tests/examples): 1×N ("data","model")."""
     n = jax.device_count()
-    return jax.make_mesh(
-        (1, n), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_auto_mesh((1, n), ("data", "model"))
 
 
 def axis_sizes(mesh: jax.sharding.Mesh) -> dict:

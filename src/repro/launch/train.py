@@ -59,7 +59,8 @@ def main():
     bs = args.batch * (args.k if args.mode == "local_steps" else 1)
     stream = make_lm_tokens(cfg.vocab_size, (args.steps + 1) * bs * args.seq)
 
-    ctx = jax.set_mesh(mesh)
+    from repro.distributed.axes import use_mesh
+    ctx = use_mesh(mesh)
     ctx.__enter__()
     if args.mode == "local_steps":
         step = jax.jit(D.make_local_steps_round(cfg, hp, mesh, args.k))

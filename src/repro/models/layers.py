@@ -32,7 +32,8 @@ def is_gram(x) -> bool:
 def _model_axis_size() -> int:
     """Size of the ambient mesh's "model" axis (1 when tracing meshless)."""
     try:
-        mesh = jax.sharding.get_abstract_mesh()
+        from repro.distributed.axes import ambient_mesh
+        mesh = ambient_mesh()
         if mesh is not None and "model" in getattr(mesh, "axis_names", ()):
             return int(mesh.shape["model"])
     except Exception:
@@ -484,7 +485,8 @@ def init_moe(cfg: ModelConfig, rng) -> dict:
 def _moe_mesh_info():
     """(client_axes, sizes dict) of the ambient mesh, or None."""
     try:
-        mesh = jax.sharding.get_abstract_mesh()
+        from repro.distributed.axes import ambient_mesh
+        mesh = ambient_mesh()
         names = tuple(getattr(mesh, "axis_names", ()) or ())
         if "model" not in names or int(mesh.shape["model"]) <= 1:
             return None
@@ -562,12 +564,13 @@ def _moe_forward_shardmap(cfg: ModelConfig, p: dict, x: jax.Array, info,
             kept = jax.lax.pmean(kept, tuple(client_axes))
         return out, gram_wo, 1.0 - kept
 
+    from repro.distributed.axes import shard_map as _shard_map
     bspec = P(baxes, None, None)
-    out, gram_wo, dropped = jax.shard_map(
+    out, gram_wo, dropped = _shard_map(
         island, in_specs=(bspec, P(), P("model", None, None),
                           P("model", None, None)),
         out_specs=(bspec, P(), P()),
-        axis_names=manual, check_vma=False,
+        axis_names=manual, check=False,
     )(x, p["router"], p["wi"], p["wo"])
 
     xt_all = x.reshape(b * s, d)

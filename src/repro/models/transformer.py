@@ -199,7 +199,8 @@ def _embed_inputs(cfg: ModelConfig, params: dict, batch: dict):
 def _seq_parallel_spec(cfg: ModelConfig, bsz: int, s: int):
     """P(batch_axes, "model", None) when the ambient mesh supports it."""
     try:
-        mesh = jax.sharding.get_abstract_mesh()
+        from repro.distributed.axes import ambient_mesh
+        mesh = ambient_mesh()
         names = tuple(getattr(mesh, "axis_names", ()) or ())
         if "model" not in names or int(mesh.shape["model"]) <= 1:
             return None

@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hyp_compat import given, settings, st
 
 from repro.kernels.gram import ops as gram_ops
 from repro.kernels.gram.ref import gram_blocks_ref

@@ -21,9 +21,9 @@ rng = jax.random.PRNGKey(0)
 p = L.init_moe(cfg, rng)
 x = jax.random.normal(rng, (4, 16, cfg.d_model), dtype=jnp.float32)
 out1, g1, _ = L.moe_forward(cfg1, p, x, collect=True)
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
-with jax.set_mesh(mesh):
+from repro.distributed.axes import make_auto_mesh, use_mesh
+mesh = make_auto_mesh((4, 2), ("data", "model"))
+with use_mesh(mesh):
     f = jax.jit(lambda p, x: L.moe_forward(cfg2, p, x, collect=True),
                 in_shardings=({"router": NamedSharding(mesh, P()),
                                "wi": NamedSharding(mesh, P("model", None, None)),

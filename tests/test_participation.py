@@ -1,0 +1,173 @@
+"""Participation-core invariants (the client-sampling state-corruption
+bug class): sampled-out client state must be bit-identical across rounds,
+and the gathered round must equal the legacy full-mask round for every
+algorithm in the zoo."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.algorithms import ALGORITHMS, HParams, Participation
+from repro.data import (FederatedDataset, make_clustered_classification,
+                        make_libsvm_like)
+from repro.data.federated import build_round_batches
+from repro.fl.simulate import FedSim
+from repro.fl.tasks import ConvexTask, DNNTask
+from repro.models.simple import LogisticModel, MLPModel
+
+N_CLIENTS = 8
+
+
+@pytest.fixture(scope="module")
+def convex():
+    data = make_libsvm_like("a9a", seed=0)
+    ds = FederatedDataset.from_arrays(data, N_CLIENTS, alpha=0.0, seed=0,
+                                      test_frac=0.1)
+    d = data["x"].shape[1]
+    task = ConvexTask(LogisticModel(d=d, lam=1e-3))
+    return dict(task=task, batches=ds.client_full_batches(k_steps=1), d=d)
+
+
+@pytest.fixture(scope="module")
+def dnn():
+    data = make_clustered_classification(1200, 16, 4, seed=0)
+    ds = FederatedDataset.from_arrays(data, N_CLIENTS, alpha=0.5, seed=0)
+    task = DNNTask(MLPModel(in_dim=16, hidden=(32,), num_classes=4))
+    batches = build_round_batches(ds, 2, 16, np.random.default_rng(0))
+    return dict(task=task, batches=batches)
+
+
+# ------------------------------------------------- stateful invariance -----
+
+def test_sampled_out_scaffold_state_untouched(convex):
+    """With sample_clients=S < N, non-participants' control variates are
+    bit-identical across rounds (the corruption this PR fixes)."""
+    sim = FedSim(convex["task"], "scaffold", HParams(lr=0.3), N_CLIENTS)
+    st = sim.init(jax.random.PRNGKey(0))
+    participants = np.array([0, 2, 5])
+    out = np.setdiff1d(np.arange(N_CLIENTS), participants)
+
+    before = np.asarray(st.clients)
+    st1, _ = sim.round(st, convex["batches"], jax.random.PRNGKey(1),
+                       participants=participants)
+    after1 = np.asarray(st1.clients)
+    np.testing.assert_array_equal(after1[out], before[out])
+    # participants actually moved (their control variates are live)
+    assert np.abs(after1[participants] - before[participants]).max() > 0
+
+    # a second sampled round with a different cohort: only that cohort moves
+    participants2 = np.array([1, 2, 7])
+    out2 = np.setdiff1d(np.arange(N_CLIENTS), participants2)
+    st2, _ = sim.round(st1, convex["batches"], jax.random.PRNGKey(2),
+                       participants=participants2)
+    np.testing.assert_array_equal(np.asarray(st2.clients)[out2], after1[out2])
+
+
+def test_sampled_round_params_finite_and_progressing(convex):
+    """fedpm / scaffold converge under S < N sampling (no state corruption
+    feeding back into the preconditioner)."""
+    for algo in ("fedpm", "scaffold"):
+        sim = FedSim(convex["task"], algo,
+                     HParams(lr=1.0 if algo == "fedpm" else 0.3,
+                             damping=1e-2), N_CLIENTS)
+        st = sim.init(jax.random.PRNGKey(0))
+        rng = np.random.default_rng(0)
+        for t in range(3):
+            chosen = np.sort(rng.choice(N_CLIENTS, size=4, replace=False))
+            st, _ = sim.round(st, convex["batches"], jax.random.PRNGKey(t),
+                              participants=chosen)
+        assert np.isfinite(np.asarray(st.params)).all(), algo
+
+
+# ------------------------------------------- masked == gathered, full zoo --
+
+def _legacy_full_mask_round(sim, st, batches, rng, mask):
+    """The pre-participation engine: vmap ALL N clients, mask-weighted
+    server aggregation over the full stack."""
+    rngs = jax.random.split(rng, sim.n)
+
+    def client_fn(cstate, b, r):
+        return sim.algo.client(sim.task, sim.hp, st.params, cstate,
+                               st.server, b, r)
+
+    msgs, _ = jax.vmap(client_fn)(st.clients, batches, rngs)
+    part = Participation(weights=jnp.asarray(mask, jnp.float32),
+                         n_total=sim.n)
+    return sim.algo.server(sim.task, sim.hp, st.params, st.server, msgs,
+                           part)
+
+
+def _assert_trees_close(a, b, **tol):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), **tol)
+
+
+def _check_masked_equals_gathered(task, batches, algo, hp):
+    sim = FedSim(task, algo, hp, N_CLIENTS)
+    st = sim.init(jax.random.PRNGKey(0))
+    mask = np.zeros(N_CLIENTS, np.float32)
+    participants = np.array([1, 3, 4, 6])
+    mask[participants] = 1.0
+    rng = jax.random.PRNGKey(7)
+    ref_params, ref_server = _legacy_full_mask_round(
+        sim, st, batches, rng, mask)
+    got, _ = sim.round(st, batches, rng, participants=participants)
+    _assert_trees_close(got.params, ref_params, rtol=2e-4, atol=2e-5)
+    _assert_trees_close(got.server, ref_server, rtol=2e-4, atol=2e-5)
+
+
+@pytest.mark.parametrize("algo", sorted(
+    n for n, a in ALGORITHMS.items() if not a.needs_grams))
+def test_masked_equals_gathered_convex(convex, algo):
+    hp = HParams(lr=0.1, damping=1e-2)
+    _check_masked_equals_gathered(convex["task"], convex["batches"], algo, hp)
+
+
+@pytest.mark.parametrize("algo", sorted(
+    n for n, a in ALGORITHMS.items() if a.needs_grams))
+def test_masked_equals_gathered_dnn(dnn, algo):
+    hp = HParams(lr=0.3, damping=1.0)
+    _check_masked_equals_gathered(dnn["task"], dnn["batches"], algo, hp)
+
+
+# ------------------------------------------------- engine data paths -------
+
+def test_pregathered_batches_equal_full_bank(convex):
+    """Passing [S,...] participant batches gives the identical round as
+    passing the [N,...] bank and letting the engine gather."""
+    sim = FedSim(convex["task"], "fedpm", HParams(lr=1.0, damping=1e-2),
+                 N_CLIENTS)
+    st = sim.init(jax.random.PRNGKey(0))
+    participants = np.array([0, 3, 7])
+    rng = jax.random.PRNGKey(3)
+    full, _ = sim.round(st, convex["batches"], rng,
+                        participants=participants)
+    sub_batches = jax.tree.map(lambda x: x[participants], convex["batches"])
+    pre, _ = sim.round(st, sub_batches, rng, participants=participants)
+    _assert_trees_close(full.params, pre.params, rtol=0, atol=0)
+
+
+def test_legacy_mask_api_equals_participants_api(convex):
+    sim = FedSim(convex["task"], "scaffold", HParams(lr=0.3), N_CLIENTS)
+    st = sim.init(jax.random.PRNGKey(0))
+    participants = np.array([2, 4, 5])
+    mask = jnp.zeros((N_CLIENTS,)).at[jnp.asarray(participants)].set(1.0)
+    rng = jax.random.PRNGKey(5)
+    a, _ = sim.round(st, convex["batches"], rng, mask)
+    b, _ = sim.round(st, convex["batches"], rng, participants=participants)
+    _assert_trees_close(a.params, b.params, rtol=0, atol=0)
+    _assert_trees_close(a.clients, b.clients, rtol=0, atol=0)
+
+
+def test_fedns_sketch_frame_shared_via_server_state(convex):
+    """The Nyström frame lives in server state (built once at init), is
+    orthonormal, and the sketched method still runs with s < d."""
+    hp = HParams(lr=1.0, damping=1e-3, sketch=32)
+    sim = FedSim(convex["task"], "fedns", hp, N_CLIENTS)
+    st = sim.init(jax.random.PRNGKey(0))
+    omega = np.asarray(st.server)
+    assert omega.shape == (convex["d"], 32)
+    np.testing.assert_allclose(omega.T @ omega, np.eye(32), atol=1e-5)
+    st1, _ = sim.round(st, convex["batches"], jax.random.PRNGKey(1))
+    assert np.isfinite(np.asarray(st1.params)).all()
+    np.testing.assert_array_equal(np.asarray(st1.server), omega)

@@ -11,6 +11,7 @@ from repro.core.algorithms import HParams
 from repro.data import (FederatedDataset, make_clustered_classification,
                         make_libsvm_like, make_lm_tokens)
 from repro.data.federated import build_round_batches
+from repro.distributed.axes import make_auto_mesh, use_mesh
 from repro.distributed.hlo_analysis import analyze_hlo
 from repro.fl import distributed as D
 from repro.fl.partition import client_label_histogram, dirichlet_partition
@@ -32,10 +33,9 @@ def test_cross_engine_equivalence_single_client():
     toks = jax.random.randint(rng, (k * b, s), 0, cfg.vocab_size)
     batch = {"tokens": toks, "labels": toks}
 
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_auto_mesh((1, 1), ("data", "model"))
     rnd = D.make_local_steps_round(cfg, hp, mesh, k_steps=k)
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         p_dist, _ = jax.jit(rnd)(params, batch)
 
     # manual: K foof steps with grams at theta0, then N=1 mixing == theta
@@ -167,8 +167,7 @@ def test_seq_parallel_numerically_neutral():
     toks = jax.random.randint(rng, (2, 64), 0, cfg.vocab_size)
     batch = {"tokens": toks, "labels": toks}
     l1, _ = T.loss_fn(cfg, params, batch)
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
-    with jax.set_mesh(mesh):
+    mesh = make_auto_mesh((1, 1), ("data", "model"))
+    with use_mesh(mesh):
         l2, _ = jax.jit(lambda p: T.loss_fn(cfg_sp, p, batch))(params)
     np.testing.assert_allclose(float(l1), float(l2), rtol=1e-6)
