@@ -3,22 +3,82 @@ Hessian vs the FOOF approximation.
 
 Measures construction time, inversion time (Cholesky vs Newton–Schulz vs
 the fused Pallas NS kernel in interpret mode) and the per-round
-client→server payload in bytes.  derived = payload bytes."""
+client→server payload in bytes.  derived = payload bytes.
+
+Plus the packed gram-bank section: per-leaf tree walks (one tiny solve per
+layer) vs the bank (one batched factor+solve per block size), and the
+fused Pallas invert-and-apply kernel vs its two-launch equivalent.  This
+section doubles as the tier-1 interpret-mode kernel smoke (scripts/ci.sh
+runs ``--smoke``)."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import foof as F
 from repro.core.inverse import inverse
 from repro.kernels.gram import ops as gram_ops
 from repro.kernels.gram.ref import gram_blocks_ref
+from repro.kernels.nschulz import ops as ns_ops
 from repro.models.simple import LogisticModel
 from repro.utils import timeit_us
 
 from benchmarks.common import emit
 
 
-def main(d=512, t_tokens=4096, block=128):
+def _bank_trees(n_layers, nb, bs, dout, vocab=256, seed=0):
+    """Synthetic multi-layer tree: n_layers blocked gram leaves sharing one
+    block size + a diagonal embedding lane."""
+    rng = jax.random.PRNGKey(seed)
+    params, grads, grams = {}, {}, {}
+    for i in range(n_layers):
+        k1, k2, rng = tuple(jax.random.split(rng, 3))
+        m = jax.random.normal(k1, (nb, bs, bs))
+        a = jnp.einsum("nij,nkj->nik", m, m) / bs + 0.05 * jnp.eye(bs)
+        params[f"layer{i}"] = {"w": jnp.zeros((nb * bs, dout))}
+        grads[f"layer{i}"] = {"w": jax.random.normal(k2, (nb * bs, dout))}
+        grams[f"layer{i}"] = {"w": a}
+    k1, rng = jax.random.split(rng)
+    params["embed"] = {"w": jnp.zeros((vocab, dout))}
+    grads["embed"] = {"w": jax.random.normal(k1, (vocab, dout))}
+    grams["embed"] = {"w": jax.random.uniform(rng, (vocab,)) + 0.1}
+    return params, grads, grams
+
+
+def bank_section(n_layers=8, nb=2, bs=64, dout=96):
+    """packed vs per-leaf: same math, one batched launch per block size vs
+    one per layer.  derived = layer count covered per launch."""
+    params, grads, grams = _bank_trees(n_layers, nb, bs, dout)
+    for packed, tag in ((False, "perleaf"), (True, "packed")):
+        pre = jax.jit(lambda g, p=packed: F.precondition_tree(
+            params, g, grams, damping=0.1, packed=p))
+        us = timeit_us(lambda: pre(grads))
+        emit(f"cost_bank/precondition_{tag}", us, f"layers={n_layers}")
+        invf = jax.jit(lambda a, p=packed: F.invert_grams(
+            a, damping=0.1, packed=p))
+        us = timeit_us(lambda: invf(grams))
+        emit(f"cost_bank/invert_{tag}", us, f"layers={n_layers}")
+    # factor-once amortization: cached-factor apply vs full factor+solve
+    pp = jax.jit(lambda g: F.build_preconditioner(g, damping=0.1))(grams)
+    app = jax.jit(lambda t, g: F.apply_preconditioner(pp, t, g))
+    us = timeit_us(lambda: app(params, grads))
+    emit("cost_bank/apply_cached_factors", us, f"layers={n_layers}")
+    # fused Pallas invert-and-apply (interpret off-TPU) vs two launches
+    m = jax.random.normal(jax.random.PRNGKey(1), (nb * n_layers, bs, bs))
+    a = jnp.einsum("nij,nkj->nik", m, m) / bs + 0.1 * jnp.eye(bs)
+    b = jax.random.normal(jax.random.PRNGKey(2), (nb * n_layers, bs, dout))
+    us = timeit_us(lambda: ns_ops.ns_solve(a, b, iters=12, use_pallas=True))
+    emit("cost_bank/pallas_fused_invert_apply", us, f"blocks={nb * n_layers}")
+    us = timeit_us(lambda: ns_ops.ns_inverse(a, iters=12, use_pallas=True) @ b)
+    emit("cost_bank/pallas_invert_then_apply", us,
+         f"blocks={nb * n_layers}")
+
+
+def main(d=512, t_tokens=4096, block=128, smoke=False):
+    if smoke:
+        # interpret-mode kernel smoke for tier-1 CI: small shapes, every
+        # kernel path (gram, NS inverse, fused invert-and-apply, bank)
+        d, t_tokens, block = 128, 512, 64
     rng = jax.random.PRNGKey(0)
     # ---- FedPM w/ full Hessian on logistic regression (d² objects) ----
     model = LogisticModel(d=d, lam=1e-3)
@@ -51,6 +111,13 @@ def main(d=512, t_tokens=4096, block=128):
     emit("cost_table2/foof/invert_ns", us, f"bytes={foof_bytes}")
     emit("cost_table2/foof/comm", 0.0, f"bytes={foof_bytes + d*4}")
 
+    # ---- packed gram bank vs per-leaf walks ----
+    if smoke:
+        bank_section(n_layers=4, nb=2, bs=32, dout=24)
+    else:
+        bank_section()
+
 
 if __name__ == "__main__":
-    main()
+    import sys
+    main(smoke="--smoke" in sys.argv)

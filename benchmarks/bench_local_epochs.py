@@ -2,12 +2,32 @@
 update budget (1 epoch × 3R rounds, 3 epochs × R rounds, ...), α = 0.1.
 
 Validates: FedPM stays ahead of FedAvg/LocalNewton at every K.
-derived = best accuracy."""
+derived = best accuracy.
+
+Plus a round-latency sweep over K ∈ {1, 4, 16}: with the packed gram bank
+the FOOF path factors once per round and the K scan steps are pure
+solves/matmuls, so us/round must grow sublinearly in K (the seed
+refactorized every step → ~linear).  derived = steps."""
 from __future__ import annotations
 
-from benchmarks.common import DNN_HP, dnn_setup, emit, run_dnn
+from benchmarks.common import (DNN_HP, dnn_setup, emit, run_dnn,
+                               time_dnn_round)
 
 SCHEDULES = ((1, 18), (3, 6), (6, 3))     # (epochs, rounds): fixed budget
+K_SWEEP = (1, 4, 16)
+
+
+def k_sweep(setup=None):
+    """Steady-state round latency vs local-step count K for the FOOF
+    algorithms (factor-once amortization trajectory)."""
+    setup = setup or dnn_setup(alpha=0.1)
+    for algo in ("fedpm_foof", "localnewton_foof"):
+        base = None
+        for k in K_SWEEP:
+            us = time_dnn_round(setup, algo, DNN_HP[algo], k_steps=k)
+            base = base or us
+            emit(f"local_epochs_ksweep/{algo}/K{k}", us,
+                 f"steps={k} x_vs_K1={us / base:.2f}")
 
 
 def main():
@@ -18,6 +38,7 @@ def main():
                                epochs=epochs)
             emit(f"local_epochs_fig3/{algo}/E{epochs}xR{rounds}", us,
                  f"best_acc={max(accs):.4f}")
+    k_sweep(setup)
 
 
 if __name__ == "__main__":

@@ -126,6 +126,23 @@ def dnn_setup(alpha=0.1, n_clients=10, n=6000, dim=64, classes=10, seed=0,
     return dict(ds=ds, model=model, task=task, test=ds.test_batch())
 
 
+def time_dnn_round(setup, algo, hp, k_steps, batch=64, reps=5, seed=0):
+    """Steady-state us/round (post-compile) at a fixed local-step count K —
+    isolates how round latency scales with K (factor-once amortization)."""
+    ds, task = setup["ds"], setup["task"]
+    sim = FedSim(task, algo, hp, ds.n_clients)
+    st = sim.init(jax.random.PRNGKey(seed))
+    r = np.random.default_rng(seed)
+    batches = build_round_batches(ds, k_steps, batch, r)
+    st, _ = sim.round(st, batches, jax.random.PRNGKey(0))       # compile
+    jax.block_until_ready(jax.tree.leaves(st.params)[0])
+    t0 = time.perf_counter()
+    for t in range(reps):
+        st2, _ = sim.round(st, batches, jax.random.PRNGKey(t))
+        jax.block_until_ready(jax.tree.leaves(st2.params)[0])
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
 def run_dnn(setup, algo, hp, rounds, epochs=2, batch=64, seed=0):
     ds, task = setup["ds"], setup["task"]
     k = steps_per_epoch(ds, batch) * epochs

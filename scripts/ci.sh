@@ -1,7 +1,9 @@
 #!/usr/bin/env bash
 # Tier-1 CI: install dev deps (best-effort — the suite degrades gracefully
-# without them, see tests/hyp_compat.py) and run the ROADMAP pytest command
-# under a timeout.
+# without them, see tests/hyp_compat.py), run the ROADMAP pytest command
+# under a timeout, then an interpret-mode benchmark smoke that exercises
+# every Pallas kernel path (gram, NS inverse, fused invert-and-apply) and
+# the packed gram-bank engine — kernel regressions fail tier-1 cheaply.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -10,3 +12,6 @@ python -m pip install -q -r requirements-dev.txt \
 
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     timeout "${CI_TIMEOUT:-1800}" python -m pytest -x -q
+
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    timeout "${CI_BENCH_TIMEOUT:-600}" python -m benchmarks.bench_cost --smoke

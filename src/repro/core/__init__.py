@@ -1,4 +1,6 @@
 """FedPM core: preconditioned mixing, FOOF, inverses, the algorithm zoo."""
 from repro.core.algorithms import ALGORITHMS, Algorithm, HParams, get_algorithm
+from repro.core.bank import (GramBank, PackedPreconditioner,
+                             apply_preconditioner, build_preconditioner)
 from repro.core.foof import mix_preconditioned, precondition_tree, GRAM_ROUTES
 from repro.core.inverse import inverse, ns_inverse, solve

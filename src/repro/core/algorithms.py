@@ -102,12 +102,16 @@ def _wmean(tree_stack: PyTree, weights: jax.Array) -> PyTree:
 
     Normalizes by the true weight sum (epsilon floor only), so fractional
     weights (e.g. data-size weighting) aggregate correctly — matching
-    ``foof.mix_preconditioned``.  The engine never dispatches an empty
-    cohort (``FedSim.round`` short-circuits S = 0).
+    ``foof.mix_preconditioned``.  Accumulates in fp32 and casts back to the
+    leaf dtype (also matching ``mix_preconditioned``), so bf16 runs don't
+    drift through server aggregation.  The engine never dispatches an
+    empty cohort (``FedSim.round`` short-circuits S = 0).
     """
-    wsum = jnp.maximum(jnp.sum(weights), 1e-12)
+    wf = weights.astype(jnp.float32)
+    wsum = jnp.maximum(jnp.sum(wf), 1e-12)
     return jax.tree.map(
-        lambda x: jnp.tensordot(weights, x, axes=1) / wsum, tree_stack)
+        lambda x: (jnp.tensordot(wf, x.astype(jnp.float32), axes=1)
+                   / wsum).astype(x.dtype), tree_stack)
 
 
 def _no_server_state(task, hp, params):
@@ -319,20 +323,25 @@ def _fedpm_full_server(task, hp, params, sstate, msgs, part):
 
 def _foof_local(task, hp, params, batches):
     """K FOOF-preconditioned steps (Eq. 11).  Grams for preconditioning are
-    computed once at θ₀ (first batch); transmitted grams follow
+    computed once at θ₀ (first batch) and the gram bank is FACTORED ONCE
+    outside the scan — every one of the K steps applies the cached
+    factors/inverses (pure cho_solve/matmul work), so per-round
+    factorization cost is independent of K (paper Table 2 cost model;
+    asserted structurally in tests).  Transmitted grams follow
     hp.foof_timing — 'end' recomputes at θ_K (the paper's efficiency trick,
     Sec 4.2 hyperparameter notes)."""
     first = jax.tree.map(lambda x: x[0], batches)
     grams0 = task.grams(params, first)
+    precond = F.build_preconditioner(grams0, damping=hp.damping,
+                                     method=hp.inverse_method,
+                                     ns_iters=hp.ns_iters)
 
     def step(theta, batch):
         loss, g = task.loss_grad(theta, batch)
         if hp.weight_decay:
             g = tree_axpy(hp.weight_decay, theta, g)
         g = global_norm_clip(g, hp.clip)
-        pre = F.precondition_tree(theta, g, grams0, damping=hp.damping,
-                                  method=hp.inverse_method,
-                                  ns_iters=hp.ns_iters)
+        pre = F.apply_preconditioner(precond, theta, g)
         return tree_axpy(-hp.lr, pre, theta), loss
 
     theta, losses = jax.lax.scan(step, params, batches)

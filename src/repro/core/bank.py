@@ -1,0 +1,669 @@
+"""Packed gram-bank preconditioning: factor-once, cross-layer batched solves.
+
+FedPM's per-layer FOOF preconditioners are many small SPD blocks scattered
+across the param tree — one ``[nb, bs, bs]`` stack per linear layer plus a
+diagonal lane for the embedding.  The per-leaf tree walks in
+``repro.core.foof`` dispatch one tiny factorization/solve per layer; on
+accelerators each of those is a separate launch and none of them fills the
+MXU.  This module flattens every same-block-size gram leaf across the
+WHOLE tree into one bank so that factorization, inversion, Newton–Schulz,
+and the Pallas kernel each run as ONE batched call per distinct block size
+(typically 1–3 groups per model).
+
+Layout
+------
+``pack`` walks the gram tree in ``tree_flatten_with_path`` order and
+classifies each leaf:
+
+* **mat** — trailing shape ``[lead..., nb, bs, bs]`` (square blocks).  The
+  lead axes (e.g. the transformer's stacked unit/inner-layer axes) and the
+  block axis ``nb`` flatten into rows of the per-block-size group bank
+  ``mats[g]: [stack..., R_g, bs, bs]``.
+* **diag** — trailing 1-D shape ``[V]`` (the embedding's exact token-count
+  diagonal).  All diag leaves concatenate into one vector lane
+  ``diag: [stack..., D]`` — inverting/averaging the lane is one
+  elementwise op.  The division into each ``[V, dout]`` grad stays per
+  leaf (already a single elementwise broadcast, nothing to batch).
+* **none** — size-0 placeholder (param has no gram): passthrough.
+* **other** — anything else falls back to the per-leaf reference path in
+  ``repro.core.foof`` (no in-tree model produces such leaves).
+
+``stack`` leading axes (the gathered participant axis S in server mixing)
+are preserved on the bank arrays, so client means become one tensordot per
+group instead of one per layer.
+
+Right-hand sides pack the same way: a param leaf ``[lead..., din, dout]``
+is blocked to ``[rows, bs, k]`` — lead axes that match the gram's lead
+become extra rows; broadcast (shared-gram) lead axes, e.g. the MoE expert
+axis riding on the pooled router gram, fold into the ``k`` columns.  Per
+group the ``k`` axis is zero-padded to the widest leaf so one batched
+``cho_solve`` / Newton–Schulz / fused Pallas invert-and-apply launch
+covers every layer at once.  Padding is exact: triangular and
+Newton–Schulz solves act column-independently, and padded columns are
+dropped on unpack.
+
+Future sharded/async PRs should pack into this bank (add a lane or a
+group) rather than re-introducing per-leaf walks — see ROADMAP
+"Open items".
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.scipy.linalg import cho_factor, cho_solve
+
+from repro.core import inverse as inv
+
+PyTree = Any
+
+#: param key → sibling key whose gram (same layer inputs) should be used
+GRAM_ROUTES = {"wi": "router", "wkv_a": "wq_a", "shared_wi": "router"}
+
+
+# ----------------------------------------------------------------- layout --
+
+@dataclass(frozen=True)
+class MatEntry:
+    group: int          # index into BankLayout.block_sizes
+    start: int          # first row of this leaf inside the group bank
+    rows: int           # prod(lead) * nb
+    core: tuple         # leaf shape without the stack axes
+
+
+@dataclass(frozen=True)
+class DiagEntry:
+    start: int          # offset into the diagonal lane
+    size: int
+    core: tuple
+
+
+@dataclass(frozen=True)
+class BankLayout:
+    """Static (hashable) description of how a gram tree packs into banks."""
+    block_sizes: tuple      # bs per mat group
+    group_rows: tuple       # total rows per mat group
+    diag_size: int
+    paths: tuple            # normalized gram-leaf paths, pack order
+    entries: tuple          # parallel: MatEntry | DiagEntry | "none" | "other"
+    stack: int              # leading stack axes shared by every leaf
+
+
+def _norm_path(path) -> tuple:
+    out = []
+    for k in path:
+        if hasattr(k, "key"):
+            out.append(k.key)
+        elif hasattr(k, "idx"):
+            out.append(k.idx)
+        elif hasattr(k, "name"):
+            out.append(k.name)
+        else:
+            out.append(str(k))
+    return tuple(out)
+
+
+def _classify(shape: tuple, stack: int) -> str:
+    core = shape[stack:]
+    if any(s == 0 for s in shape):
+        return "none"
+    if len(core) >= 3 and core[-1] == core[-2]:
+        return "mat"
+    if len(core) == 1:
+        return "diag"
+    return "other"
+
+
+# ------------------------------------------------------------------- bank --
+
+@jax.tree_util.register_pytree_node_class
+class GramBank:
+    """A gram tree packed into per-block-size banks + a diagonal lane."""
+
+    def __init__(self, mats, diag, others, layout: BankLayout):
+        self.mats = tuple(mats)
+        self.diag = diag
+        self.others = tuple(others)
+        self.layout = layout
+
+    def tree_flatten(self):
+        return (self.mats, self.diag, self.others), self.layout
+
+    @classmethod
+    def tree_unflatten(cls, layout, children):
+        mats, diag, others = children
+        return cls(mats, diag, others, layout)
+
+
+def pack(grams: PyTree, *, stack: int = 0) -> GramBank:
+    """Pack a gram tree into a :class:`GramBank`.
+
+    ``stack`` leading axes (identical on every leaf — e.g. the gathered
+    participant axis S) are preserved on the bank arrays.
+    """
+    leaves = jax.tree_util.tree_leaves_with_path(grams)
+    paths, entries, others = [], [], []
+    sizes: list[int] = []
+    rows: list[int] = []
+    chunks: list[list] = []
+    diag_chunks: list = []
+    diag_off = 0
+    for path, leaf in leaves:
+        paths.append(_norm_path(path))
+        kind = _classify(tuple(leaf.shape), stack)
+        if kind == "mat":
+            bs = leaf.shape[-1]
+            core = tuple(leaf.shape[stack:])
+            r = int(np.prod(core[:-2], dtype=np.int64))
+            if bs in sizes:
+                g = sizes.index(bs)
+            else:
+                g = len(sizes)
+                sizes.append(bs)
+                rows.append(0)
+                chunks.append([])
+            entries.append(MatEntry(group=g, start=rows[g], rows=r, core=core))
+            rows[g] += r
+            lead = leaf.shape[:stack]
+            chunks[g].append(
+                leaf.astype(jnp.float32).reshape(*lead, r, bs, bs))
+        elif kind == "diag":
+            core = tuple(leaf.shape[stack:])
+            entries.append(DiagEntry(start=diag_off, size=core[0], core=core))
+            diag_off += core[0]
+            diag_chunks.append(leaf.astype(jnp.float32))
+        elif kind == "other":
+            entries.append("other")
+            others.append(leaf)
+        else:
+            entries.append("none")
+    mats = tuple(c[0] if len(c) == 1 else jnp.concatenate(c, axis=stack)
+                 for c in chunks)
+    diag = (None if not diag_chunks else
+            (diag_chunks[0] if len(diag_chunks) == 1
+             else jnp.concatenate(diag_chunks, axis=stack)))
+    layout = BankLayout(block_sizes=tuple(sizes), group_rows=tuple(rows),
+                        diag_size=diag_off, paths=tuple(paths),
+                        entries=tuple(entries), stack=stack)
+    return GramBank(mats, diag, others, layout)
+
+
+def _rows(arr, start, n, axis):
+    return jax.lax.slice_in_dim(arr, start, start + n, axis=axis)
+
+
+def unpack_like(grams: PyTree, mats, diag, others, layout: BankLayout
+                ) -> PyTree:
+    """Rebuild a tree congruent to ``grams`` from transformed bank arrays."""
+    leaves, treedef = jax.tree_util.tree_flatten(grams)
+    out, oi = [], 0
+    for i, leaf in enumerate(leaves):
+        e = layout.entries[i]
+        if e == "none":
+            out.append(leaf)
+        elif e == "other":
+            out.append(others[oi])
+            oi += 1
+        elif isinstance(e, MatEntry):
+            m = _rows(mats[e.group], e.start, e.rows, layout.stack)
+            out.append(m.reshape(*leaf.shape[:layout.stack], *e.core))
+        else:
+            d = _rows(diag, e.start, e.size, layout.stack)
+            out.append(d.reshape(*leaf.shape[:layout.stack], *e.core))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# ---------------------------------------------------------- rhs packing ----
+
+@dataclass(frozen=True)
+class _MatPlan:
+    entry: MatEntry
+    bs: int
+    k: int                  # packed rhs columns = prod(col lead) * dout
+    perm: tuple             # axis permutation of blocked w (sans stack)
+    inv_perm: tuple
+    blocked_shape: tuple    # (*lw, nb, bs, dout)
+    out_shape: tuple        # original param core shape (*lw, din, dout)
+
+
+def _mat_plan(entry: MatEntry, w_core: tuple):
+    """Plan how param core ``[lead..., din, dout]`` blocks against the gram
+    entry's ``[lead..., nb, bs, bs]``; None when shapes are incompatible."""
+    core = entry.core
+    la, nb, bs = core[:-3], core[-3], core[-1]
+    if len(w_core) < 2:
+        return None
+    lw, (din, dout) = w_core[:-2], w_core[-2:]
+    if din != nb * bs or len(la) > len(lw):
+        return None
+    row_axes, col_axes = [], []
+    for i, (da, dw) in enumerate(zip(la, lw)):
+        if da == dw:
+            row_axes.append(i)
+        elif da == 1:
+            col_axes.append(i)
+        else:
+            return None
+    col_axes += list(range(len(la), len(lw)))
+    n = len(lw)
+    perm = (*row_axes, n, n + 1, *col_axes, n + 2)
+    rows = int(np.prod([lw[i] for i in row_axes], dtype=np.int64)) * nb
+    if rows != entry.rows:
+        return None
+    k = int(np.prod([lw[i] for i in col_axes], dtype=np.int64)) * dout
+    inv_perm = tuple(int(i) for i in np.argsort(perm))
+    return _MatPlan(entry=entry, bs=bs, k=k, perm=perm, inv_perm=inv_perm,
+                    blocked_shape=(*lw, nb, bs, dout), out_shape=tuple(w_core))
+
+
+def _pack_rhs(w, plan: _MatPlan, stack: int):
+    st = w.shape[:stack]
+    wb = w.astype(jnp.float32).reshape(*st, *plan.blocked_shape)
+    perm = tuple(range(stack)) + tuple(stack + i for i in plan.perm)
+    wb = wb.transpose(perm)
+    return wb.reshape(*st, plan.entry.rows, plan.bs, plan.k)
+
+
+def _unpack_rhs(out, plan: _MatPlan, stack: int, dtype):
+    st = out.shape[:stack]
+    permuted = tuple(plan.blocked_shape[i] for i in plan.perm)
+    ob = out.reshape(*st, *permuted)
+    iperm = tuple(range(stack)) + tuple(stack + i for i in plan.inv_perm)
+    ob = ob.transpose(iperm)
+    return ob.reshape(*st, *plan.out_shape).astype(dtype)
+
+
+def _pad_k(x, kmax: int):
+    k = x.shape[-1]
+    if k == kmax:
+        return x
+    pad = [(0, 0)] * (x.ndim - 1) + [(0, kmax - k)]
+    return jnp.pad(x, pad)
+
+
+def _maybe_take(arr, idx: np.ndarray, axis: int):
+    n = arr.shape[axis]
+    if idx.size == n and np.array_equal(idx, np.arange(n)):
+        return arr
+    return jnp.take(arr, jnp.asarray(idx), axis=axis)
+
+
+def _resolve(index: dict, path: tuple):
+    """Gram-leaf path for a param leaf path, honoring GRAM_ROUTES (a param
+    whose own gram is absent/size-0 rides its sibling's — same layer
+    inputs).  Returns None → no gram (passthrough)."""
+    if not path:
+        return None
+    if index.get(path) not in (None, "none"):
+        return path
+    route = GRAM_ROUTES.get(path[-1])
+    if route is not None:
+        routed = (*path[:-1], route)
+        if index.get(routed) not in (None, "none"):
+            return routed
+    return None
+
+
+def _other_positions(layout: BankLayout) -> dict:
+    pos, oi = {}, 0
+    for p, e in zip(layout.paths, layout.entries):
+        if e == "other":
+            pos[p] = oi
+            oi += 1
+    return pos
+
+
+# ------------------------------------------------ precondition engine ------
+
+def _assemble_jobs(jobs_by_entry: dict, stack: int):
+    """Fold all param leaves that resolved to the SAME gram entry into one
+    job by concatenating their rhs along columns (they share the entry's
+    rows), then pad+concat entries into the group rhs.  ``use`` therefore
+    indexes each bank row at most once — the fused Pallas kernel never
+    re-iterates a shared block, and factor gathers carry no duplicates.
+
+    Returns (rhs, use, ents) with ents = [(rows, members, ktot)].
+    """
+    ents = []
+    for start, members in jobs_by_entry.items():
+        rows = members[0][1].entry.rows
+        ktot = sum(m[1].k for m in members)
+        ents.append((start, rows, members, ktot))
+    kmax = max(ktot for _, _, _, ktot in ents)
+    rhs_parts, use_parts = [], []
+    for start, rows, members, _ in ents:
+        er = (members[0][2] if len(members) == 1
+              else jnp.concatenate([m[2] for m in members], axis=-1))
+        rhs_parts.append(_pad_k(er, kmax))
+        use_parts.append(np.arange(start, start + rows))
+    rhs = (rhs_parts[0] if len(rhs_parts) == 1
+           else jnp.concatenate(rhs_parts, axis=stack))
+    return rhs, np.concatenate(use_parts), ents
+
+
+def _scatter_jobs(sol, ents, outs, unpack):
+    """Split a solved group rhs back per entry (rows) and per member
+    (columns); ``unpack(piece, plan, dtype)`` rebuilds each leaf."""
+    off = 0
+    for _, rows, members, _ in ents:
+        ent_sol = jax.lax.slice_in_dim(sol, off, off + rows, axis=0)
+        koff = 0
+        for i, plan, _, dt in members:
+            outs[i] = unpack(ent_sol[..., koff:koff + plan.k], plan, dt)
+            koff += plan.k
+        off += rows
+
+
+def _packed_apply(params, grads, layout: BankLayout, *, group_solve,
+                  diag_solve, other_solve):
+    """Shared engine for (preconditioner ∘ grads): pack rhs per group, run
+    ONE ``group_solve`` per block-size group, rebuild the grad tree.
+
+    group_solve(g, use_idx, rhs[B, bs, kmax]) -> [B, bs, kmax] fp32
+    diag_solve(entry, g_leaf) -> leaf | None (None → passthrough)
+    other_solve(other_idx, p_leaf, g_leaf) -> leaf
+    """
+    pleaves = jax.tree_util.tree_leaves_with_path(params)
+    gleaves, gdef = jax.tree_util.tree_flatten(grads)
+    index = dict(zip(layout.paths, layout.entries))
+    other_pos = _other_positions(layout)
+    jobs: list[dict] = [{} for _ in layout.block_sizes]
+    outs: list = [None] * len(gleaves)
+    for i, ((path, p), g) in enumerate(zip(pleaves, gleaves)):
+        gp = _resolve(index, _norm_path(path))
+        e = index.get(gp) if gp is not None else None
+        if e is None:
+            outs[i] = g
+        elif e == "other":
+            outs[i] = other_solve(other_pos[gp], p, g)
+        elif isinstance(e, DiagEntry):
+            res = diag_solve(e, g)
+            outs[i] = g if res is None else res
+        else:
+            plan = _mat_plan(e, tuple(g.shape))
+            if plan is None:
+                raise ValueError(
+                    f"gram blocks {e.core} incompatible with grad "
+                    f"{g.shape} at {gp}")
+            jobs[e.group].setdefault(e.start, []).append(
+                (i, plan, _pack_rhs(g, plan, 0), g.dtype))
+    for gi, job in enumerate(jobs):
+        if not job:
+            continue
+        rhs, use, ents = _assemble_jobs(job, 0)
+        sol = group_solve(gi, use, rhs)
+        _scatter_jobs(sol, ents, outs,
+                      lambda piece, plan, dt: _unpack_rhs(piece, plan, 0, dt))
+    return jax.tree_util.tree_unflatten(gdef, outs)
+
+
+@jax.tree_util.register_pytree_node_class
+class PackedPreconditioner:
+    """Factor-once / apply-many FOOF preconditioner over the packed bank.
+
+    ``facs`` holds per-group Cholesky factors (``method='cholesky'``) or
+    explicit inverses (``ns`` / ``pallas_ns``); ``diag_inv`` is the
+    reciprocal diagonal lane.  ``apply`` performs pure batched
+    ``cho_solve``/matmul work — NO re-factorization — so K local steps
+    amortize one factorization (paper Table 2 cost model).
+    """
+
+    def __init__(self, facs, diag_inv, others, layout, method, ns_iters,
+                 damping):
+        self.facs = tuple(facs)
+        self.diag_inv = diag_inv
+        self.others = tuple(others)
+        self.layout = layout
+        self.method = method
+        self.ns_iters = ns_iters
+        self.damping = damping
+
+    def tree_flatten(self):
+        return ((self.facs, self.diag_inv, self.others),
+                (self.layout, self.method, self.ns_iters, self.damping))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        facs, diag_inv, others = children
+        return cls(facs, diag_inv, others, *aux)
+
+
+def build_preconditioner(grams: PyTree, *, damping: float,
+                         method: str = "cholesky", ns_iters: int = 20
+                         ) -> PackedPreconditioner:
+    """Factor/invert every gram ONCE — one batched call per block-size
+    group — returning cached factors for repeated ``apply_preconditioner``
+    calls (the K-local-steps amortization)."""
+    bank = pack(grams)
+    if method == "cholesky":
+        facs = tuple(cho_factor(inv.damp(m, damping), lower=True)[0]
+                     for m in bank.mats)
+    else:
+        facs = tuple(inv.inverse(m, damping, method=method,
+                                 ns_iters=ns_iters)
+                     for m in bank.mats)
+    diag_inv = None if bank.diag is None else 1.0 / (bank.diag + damping)
+    return PackedPreconditioner(facs, diag_inv, bank.others, bank.layout,
+                                method, ns_iters, damping)
+
+
+def _diag_apply(diag_inv, entry: DiagEntry, g):
+    if g.ndim < 2 or entry.size != g.shape[-2]:
+        return None
+    lane = jax.lax.slice_in_dim(diag_inv, entry.start,
+                                entry.start + entry.size, axis=0)
+    return (g.astype(jnp.float32) * lane[:, None]).astype(g.dtype)
+
+
+def apply_preconditioner(pp: PackedPreconditioner, params: PyTree,
+                         grads: PyTree) -> PyTree:
+    """Preconditioned grads from cached factors: one batched cho_solve or
+    matmul per block-size group, zero factorizations."""
+    from repro.core import foof as F
+
+    if pp.method == "cholesky":
+        def group_solve(g, use, rhs):
+            return cho_solve((_maybe_take(pp.facs[g], use, 0), True), rhs)
+    else:
+        def group_solve(g, use, rhs):
+            return _maybe_take(pp.facs[g], use, 0) @ rhs
+
+    def other_solve(oi, p, g):
+        return F._precondition_leaf(p, g, pp.others[oi], pp.damping,
+                                    pp.method, pp.ns_iters)
+
+    return _packed_apply(params, grads, pp.layout, group_solve=group_solve,
+                         diag_solve=lambda e, g: _diag_apply(pp.diag_inv, e, g),
+                         other_solve=other_solve)
+
+
+def precondition_tree(params: PyTree, grads: PyTree, grams: PyTree, *,
+                      damping: float, method: str = "cholesky",
+                      ns_iters: int = 20) -> PyTree:
+    """One-shot packed FOOF preconditioning (Eq. 11 direction).
+
+    cholesky/ns: factor the bank once, apply.  pallas_ns: the fused
+    invert-and-apply kernel computes X ≈ (A+δI)⁻¹ and X@G inside one
+    kernel per group — the inverse never round-trips through HBM.
+    """
+    if method != "pallas_ns":
+        pp = build_preconditioner(grams, damping=damping, method=method,
+                                  ns_iters=ns_iters)
+        return apply_preconditioner(pp, params, grads)
+
+    from repro.core import foof as F
+    from repro.kernels.nschulz import ops as ns_ops
+    bank = pack(grams)
+    diag_inv = None if bank.diag is None else 1.0 / (bank.diag + damping)
+
+    def group_solve(g, use, rhs):
+        # ``use`` is duplicate-free (shared grams fold into one job's
+        # columns), so the fused kernel iterates each block exactly once
+        return ns_ops.ns_solve(_maybe_take(bank.mats[g], use, 0), rhs,
+                               iters=ns_iters, damping=damping)
+
+    def other_solve(oi, p, g):
+        return F._precondition_leaf(p, g, bank.others[oi], damping, method,
+                                    ns_iters)
+
+    return _packed_apply(params, grads, bank.layout, group_solve=group_solve,
+                         diag_solve=lambda e, g: _diag_apply(diag_inv, e, g),
+                         other_solve=other_solve)
+
+
+# ---------------------------------------------------------------- invert ---
+
+def invert_grams(grams: PyTree, *, damping: float, method: str = "cholesky",
+                 ns_iters: int = 20) -> PyTree:
+    """(A+δI)⁻¹ for every gram leaf via ONE batched inverse per block-size
+    group (+ one elementwise op for the diagonal lane); returns the per-leaf
+    inverse tree consumed by ``foof.apply_inverses``."""
+    from repro.core import foof as F
+    bank = pack(grams)
+    inv_mats = tuple(inv.inverse(m, damping, method=method, ns_iters=ns_iters)
+                     for m in bank.mats)
+    inv_diag = None if bank.diag is None else 1.0 / (bank.diag + damping)
+    inv_others = tuple(F._invert_leaf(a, damping, method, ns_iters)
+                       for a in bank.others)
+    return unpack_like(grams, inv_mats, inv_diag, inv_others, bank.layout)
+
+
+# ----------------------------------------------------------------- mixing --
+
+def _mix_engine(params, bank: GramBank, *, damping, method, ns_iters,
+                reduce_mats, reduce_leaf, other_solve):
+    """FedPM preconditioned mixing (Eq. 12) over the packed bank.
+
+    ``reduce_mats`` is the participant mean of an fp32 packed array (it
+    removes the stack axes); ``reduce_leaf`` the mean of a raw leaf.  Per
+    block-size group this runs: one gather, one (A_i+δI)@θ_i batched
+    matmul, TWO reductions (numerator + Ā), one factorization of Ā and one
+    batched solve — regardless of how many layers share the group.
+    """
+    layout = bank.layout
+    stack = layout.stack
+    pleaves = jax.tree_util.tree_leaves_with_path(params)
+    _, pdef = jax.tree_util.tree_flatten(params)
+    index = dict(zip(layout.paths, layout.entries))
+    other_pos = _other_positions(layout)
+    den_lane = (None if bank.diag is None
+                else reduce_mats(bank.diag) + damping)
+    jobs: list[dict] = [{} for _ in layout.block_sizes]
+    outs: list = [None] * len(pleaves)
+    for i, (path, p) in enumerate(pleaves):
+        gp = _resolve(index, _norm_path(path))
+        e = index.get(gp) if gp is not None else None
+        core = tuple(p.shape[stack:])
+        if e is None:
+            outs[i] = reduce_leaf(p)
+        elif e == "other":
+            outs[i] = other_solve(other_pos[gp], p)
+        elif isinstance(e, DiagEntry):
+            if len(core) < 2 or e.size != core[-2]:
+                outs[i] = reduce_leaf(p)
+            else:
+                a = _rows(bank.diag, e.start, e.size, stack)
+                num = reduce_mats((a[..., None] + damping)
+                                  * p.astype(jnp.float32))
+                den = jax.lax.slice_in_dim(den_lane, e.start,
+                                           e.start + e.size, axis=0)
+                outs[i] = (num / den[:, None]).astype(p.dtype)
+        else:
+            plan = _mat_plan(e, core)
+            if plan is None:
+                outs[i] = reduce_leaf(p)    # simple mixing on mismatch
+            else:
+                jobs[e.group].setdefault(e.start, []).append(
+                    (i, plan, _pack_rhs(p, plan, stack), p.dtype))
+    for gi, job in enumerate(jobs):
+        if not job:
+            continue
+        bs = layout.block_sizes[gi]
+        rhs, use, ents = _assemble_jobs(job, stack)
+        a_use = _maybe_take(bank.mats[gi], use, stack)
+        eye = damping * jnp.eye(bs, dtype=jnp.float32)
+        num = reduce_mats((a_use + eye) @ rhs)        # Σ w_i (A_i+δI) θ_i
+        abar = reduce_mats(bank.mats[gi])             # Σ w_i A_i
+        if method == "pallas_ns":
+            from repro.kernels.nschulz import ops as ns_ops
+            sol = ns_ops.ns_solve(_maybe_take(abar, use, 0), num,
+                                  iters=ns_iters, damping=damping)
+        else:
+            abar_d = inv.damp(abar, damping)
+            if method == "ns":
+                x = inv.ns_inverse(abar_d, ns_iters)
+                sol = _maybe_take(x, use, 0) @ num
+            else:
+                c = cho_factor(abar_d, lower=True)[0]
+                sol = cho_solve((_maybe_take(c, use, 0), True), num)
+        _scatter_jobs(sol, ents, outs,
+                      lambda piece, plan, dt: _unpack_rhs(piece, plan, 0, dt))
+    return jax.tree_util.tree_unflatten(pdef, outs)
+
+
+def normalize_weights(weights: jax.Array | None, n: int) -> jax.Array:
+    """Participant aggregation weights, normalized to sum 1 (uniform when
+    None).  Shared by the packed and per-leaf mixing paths — the two must
+    stay identical for the packed≡per-leaf property to hold under
+    weighted mixing."""
+    if weights is None:
+        return jnp.full((n,), 1.0 / n, jnp.float32)
+    if weights.shape[0] != n:
+        raise ValueError(f"weights [{weights.shape[0]}] must match the "
+                         f"gathered participant axis [{n}]")
+    return weights / jnp.maximum(jnp.sum(weights), 1e-12)
+
+
+def mix_preconditioned(params_stack: PyTree, grams_stack: PyTree, *,
+                       damping: float, method: str = "cholesky",
+                       ns_iters: int = 20,
+                       weights: jax.Array | None = None) -> PyTree:
+    """Packed FedPM server mixing over participant-stacked trees."""
+    from repro.core import foof as F
+    n = jax.tree.leaves(params_stack)[0].shape[0]
+    w = normalize_weights(weights, n)
+
+    def reduce_mats(x):
+        return jnp.tensordot(w, x.astype(jnp.float32), axes=1)
+
+    def reduce_leaf(x):
+        return jnp.tensordot(w, x.astype(jnp.float32), axes=1).astype(x.dtype)
+
+    bank = pack(grams_stack, stack=1)
+
+    def other_solve(oi, p):
+        return F._mix_leaf(p, bank.others[oi], damping, method, ns_iters,
+                           reduce_leaf)
+
+    return _mix_engine(params_stack, bank, damping=damping, method=method,
+                       ns_iters=ns_iters, reduce_mats=reduce_mats,
+                       reduce_leaf=reduce_leaf, other_solve=other_solve)
+
+
+def mix_preconditioned_psum(params: PyTree, grams: PyTree, *, axes,
+                            damping: float, method: str = "cholesky",
+                            ns_iters: int = 20) -> PyTree:
+    """Packed Eq. 12 inside a shard_map manual region: per block-size group
+    the client means become TWO psums (numerator bank + gram bank) instead
+    of two per layer."""
+    from repro.core import foof as F
+    axes = tuple(axes)
+
+    def reduce_mats(x):
+        return jax.lax.pmean(x.astype(jnp.float32), axes)
+
+    def reduce_leaf(x):
+        return jax.lax.pmean(x, axes)
+
+    bank = pack(grams, stack=0)
+
+    def other_solve(oi, p):
+        return F._mix_leaf_psum(p, bank.others[oi], damping, method,
+                                ns_iters, reduce_leaf)
+
+    return _mix_engine(params, bank, damping=damping, method=method,
+                       ns_iters=ns_iters, reduce_mats=reduce_mats,
+                       reduce_leaf=reduce_leaf, other_solve=other_solve)

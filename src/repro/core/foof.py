@@ -12,6 +12,15 @@ Grams mirror the param tree (size-0 leaves = "no gram").  Some params share
 another param's input (e.g. MoE expert ``wi`` sees the same tokens as the
 ``router``); ``GRAM_ROUTES`` redirects them to the sibling gram.  The
 embedding's gram is the exact token-frequency *diagonal* (1-D leaf).
+
+The public entry points dispatch to the packed gram-bank engine
+(``repro.core.bank``): all same-block-size gram leaves across the tree are
+flattened into one ``[B, bs, bs]`` bank so factorization/inversion/solve
+run as ONE batched call per block size instead of one per layer.
+``packed=False`` keeps the original per-leaf walk — the numerical oracle
+the bank is property-tested against.  ``build_preconditioner`` /
+``apply_preconditioner`` expose the factor-once / apply-K amortization
+used by the local-step loops.
 """
 from __future__ import annotations
 
@@ -21,13 +30,13 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro.core import bank as B
 from repro.core import inverse as inv
+from repro.core.bank import (GRAM_ROUTES, GramBank, PackedPreconditioner,
+                             apply_preconditioner, build_preconditioner)
 from repro.models.layers import is_gram
 
 PyTree = Any
-
-#: param key → sibling key whose gram (same layer inputs) should be used
-GRAM_ROUTES = {"wi": "router", "wkv_a": "wq_a", "shared_wi": "router"}
 
 
 def _resolve_gram(key: str, grams_level: dict):
@@ -66,13 +75,21 @@ def _blocked_apply(op_result_of, a: jax.Array, w: jax.Array) -> jax.Array:
 
 def precondition_tree(params: PyTree, grads: PyTree, grams: PyTree, *,
                       damping: float, method: str = "cholesky",
-                      ns_iters: int = 20) -> PyTree:
+                      ns_iters: int = 20, packed: bool = True) -> PyTree:
     """Return the FOOF-preconditioned gradient tree (Eq. 11 direction).
 
     Linear params with a gram get (A+δI)⁻¹g per block; the embedding gets
     the exact diagonal solve; everything else passes through unchanged
     (→ plain first-order step, DESIGN.md §Arch-applicability).
+
+    ``packed=True`` (default) runs the gram-bank engine: one batched
+    factor+solve per block size (and for ``pallas_ns`` the fused
+    invert-and-apply kernel); ``packed=False`` is the per-leaf reference.
     """
+    if packed:
+        return B.precondition_tree(params, grads, grams, damping=damping,
+                                   method=method, ns_iters=ns_iters)
+
     def walk(p_level, g_level, a_level):
         if isinstance(p_level, dict):
             out = {}
@@ -106,8 +123,8 @@ def _precondition_leaf(p, g, a, damping, method, ns_iters):
 
 def mix_preconditioned(params_stack: PyTree, grams_stack: PyTree, *,
                        damping: float, method: str = "cholesky",
-                       ns_iters: int = 20, weights: jax.Array | None = None
-                       ) -> PyTree:
+                       ns_iters: int = 20, weights: jax.Array | None = None,
+                       packed: bool = True) -> PyTree:
     """FedPM server mixing (Eq. 12) over participant-stacked trees.
 
     Participation contract: the leading axis of params_stack / grams_stack
@@ -118,15 +135,17 @@ def mix_preconditioned(params_stack: PyTree, grams_stack: PyTree, *,
     (uniform by default; ``weights`` [S] reweights participants, e.g. by
     data size).  Others: plain weighted mean (simple mixing).  Mixing
     identical params is the identity for any SPD grams — tested property.
+
+    ``packed=True`` (default) mixes through the gram bank: per block-size
+    group ONE batched (A_i+δI)θ_i matmul, one Ā factorization and one
+    solve; ``packed=False`` is the per-leaf reference.
     """
+    if packed:
+        return B.mix_preconditioned(params_stack, grams_stack,
+                                    damping=damping, method=method,
+                                    ns_iters=ns_iters, weights=weights)
     n = jax.tree.leaves(params_stack)[0].shape[0]
-    if weights is None:
-        w = jnp.full((n,), 1.0 / n, jnp.float32)
-    else:
-        if weights.shape[0] != n:
-            raise ValueError(f"weights [{weights.shape[0]}] must match the "
-                             f"gathered participant axis [{n}]")
-        w = weights / jnp.maximum(jnp.sum(weights), 1e-12)
+    w = B.normalize_weights(weights, n)
 
     def wmean(x):
         return jnp.tensordot(w.astype(jnp.float32),
@@ -178,19 +197,28 @@ def _mix_leaf(p_stack, a_stack, damping, method, ns_iters, wmean):
 
 # ----------------------------------------------- amortized preconditioner --
 
+def _invert_leaf(a, damping, method, ns_iters):
+    if a.size == 0:
+        return a
+    if a.ndim < 3 or a.shape[-1] != a.shape[-2]:
+        return 1.0 / (a.astype(jnp.float32) + damping)   # diagonal
+    return inv.inverse(a, damping, method=method, ns_iters=ns_iters)
+
+
 def invert_grams(grams: PyTree, *, damping: float, method: str = "cholesky",
-                 ns_iters: int = 20) -> PyTree:
+                 ns_iters: int = 20, packed: bool = True) -> PyTree:
     """Precompute (A+δI)⁻¹ for every gram leaf (§Perf C4: the paper computes
     FOOF matrices once per round — this is that trick as a first-class step:
-    refresh every F steps, apply the cached inverses in between)."""
-    def leaf(a):
-        if a.size == 0:
-            return a
-        if a.ndim < 3 or a.shape[-1] != a.shape[-2]:
-            return 1.0 / (a.astype(jnp.float32) + damping)   # diagonal
-        return inv.inverse(a, damping, method=method, ns_iters=ns_iters)
+    refresh every F steps, apply the cached inverses in between).
 
-    return jax.tree.map(leaf, grams)
+    ``packed=True`` (default) inverts through the gram bank — one batched
+    inverse per block size; ``packed=False`` is the per-leaf reference.
+    """
+    if packed:
+        return B.invert_grams(grams, damping=damping, method=method,
+                              ns_iters=ns_iters)
+    return jax.tree.map(partial(_invert_leaf, damping=damping, method=method,
+                                ns_iters=ns_iters), grams)
 
 
 def apply_inverses(params: PyTree, grads: PyTree, inverses: PyTree) -> PyTree:
@@ -227,12 +255,22 @@ def _apply_inv_leaf(p, g, ainv):
 
 def mix_preconditioned_psum(params: PyTree, grams: PyTree, *, axes,
                             damping: float, method: str = "cholesky",
-                            ns_iters: int = 20) -> PyTree:
+                            ns_iters: int = 20, packed: bool = True
+                            ) -> PyTree:
     """Eq. 12 inside a shard_map manual region: the client "stack" is the
     mesh axes ``axes``; means become psums.  Every cohort on the mesh is a
     participant by construction (full participation), so this is exactly
     ``mix_preconditioned`` with uniform weights over the gathered axis
-    (tested equivalence)."""
+    (tested equivalence).
+
+    ``packed=True`` (default) mixes through the gram bank — two psums per
+    block-size group instead of two per layer; ``packed=False`` is the
+    per-leaf reference.
+    """
+    if packed:
+        return B.mix_preconditioned_psum(params, grams, axes=axes,
+                                         damping=damping, method=method,
+                                         ns_iters=ns_iters)
     axes = tuple(axes)
 
     def pmean(x):

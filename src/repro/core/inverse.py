@@ -69,10 +69,17 @@ def solve(a: jax.Array, b: jax.Array, damping: float = 0.0, *,
     """Solve (A + δI) x = b.  a: [..., n, n]; b: [..., n, k]."""
     ad = damp(a.astype(jnp.float32), damping)
     bf = b.astype(jnp.float32)
-    if method in ("ns", "pallas_ns"):
-        inv = (ns_inverse(ad, ns_iters) if method == "ns"
-               else inverse(a, damping, method="pallas_ns", ns_iters=ns_iters))
-        return (inv @ bf).astype(b.dtype)
+    # NS paths invert the UN-broadcast ad (one iteration per distinct
+    # matrix) and let the matmul broadcast over b's extra leading dims.
+    if method == "ns":
+        return (ns_inverse(ad, ns_iters) @ bf).astype(b.dtype)
+    if method == "pallas_ns":
+        # ``ad`` is already damped — hand it straight to the fused
+        # invert-and-apply kernel (no second damp/cast round-trip, and the
+        # inverse never materializes in HBM); mismatched leading dims fall
+        # back inside ns_solve to one inverse kernel + broadcast matmul.
+        from repro.kernels.nschulz import ops as _ops
+        return _ops.ns_solve(ad, bf, iters=ns_iters).astype(b.dtype)
     # broadcast batch dims (the factorization requires matching leading dims)
     lead = jnp.broadcast_shapes(ad.shape[:-2], bf.shape[:-2])
     ad = jnp.broadcast_to(ad, (*lead, *ad.shape[-2:]))

@@ -143,6 +143,11 @@ def make_local_steps_round(cfg: ModelConfig, hp: HParams,
             batch)
         first = jax.tree.map(lambda x: x[0], local)
         grams0 = T.loss_fn(cfg, params, first, collect_foof=True)[1]["grams"]
+        # factor the gram bank ONCE at θ0; the K scan steps below apply the
+        # cached factors (pure solves/matmuls — no per-step factorization)
+        precond = F.build_preconditioner(grams0, damping=hp.damping,
+                                         method=hp.inverse_method,
+                                         ns_iters=hp.ns_iters)
 
         def sgd(theta, mb):
             (loss, _), g = jax.value_and_grad(
@@ -150,9 +155,7 @@ def make_local_steps_round(cfg: ModelConfig, hp: HParams,
             if hp.weight_decay:
                 g = tree_axpy(hp.weight_decay, theta, g)
             g = global_norm_clip(g, hp.clip)
-            pre = F.precondition_tree(theta, g, grams0, damping=hp.damping,
-                                      method=hp.inverse_method,
-                                      ns_iters=hp.ns_iters)
+            pre = F.apply_preconditioner(precond, theta, g)
             return tree_axpy(-hp.lr, pre, theta), loss
 
         theta, losses = jax.lax.scan(sgd, params, local)

@@ -17,10 +17,19 @@ def _on_tpu() -> bool:
 @partial(jax.jit, static_argnames=("block", "damping", "use_pallas"))
 def gram(x: jax.Array, block: int, *, damping: float = 0.0,
          use_pallas: bool | None = None) -> jax.Array:
-    """Blocked FOOF gram of x [T, d] → [d/block, block, block] fp32.
+    """Blocked FOOF gram of x [..., T, d] → [..., d/block, block, block]
+    fp32.
 
+    Leading dims (e.g. a gathered client axis or a stacked layer axis) are
+    vmapped into the kernel grid — one launch builds the whole gram bank.
     Pads T to the tile size when needed (padding rows are zeros → exact:
     the 1/T scale uses the true T via pre-scaling)."""
+    if x.ndim > 2:
+        lead = x.shape[:-2]
+        flat = x.reshape((-1,) + x.shape[-2:])
+        out = jax.vmap(lambda xx: gram(xx, block, damping=damping,
+                                       use_pallas=use_pallas))(flat)
+        return out.reshape(*lead, *out.shape[-3:])
     use_pallas = _on_tpu() if use_pallas is None else use_pallas
     t, d = x.shape
     if not use_pallas and not _interpret_ok(t, d, block):

@@ -6,8 +6,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.nschulz.nschulz import ns_inverse_blocks
-from repro.kernels.nschulz.ref import ns_inverse_ref
+from repro.kernels.nschulz.nschulz import ns_inverse_blocks, ns_solve_blocks
+from repro.kernels.nschulz.ref import ns_inverse_ref, ns_solve_ref
 
 
 def _on_tpu() -> bool:
@@ -32,3 +32,34 @@ def ns_inverse(a: jax.Array, *, iters: int = 20, damping: float = 0.0,
     out = ns_inverse_blocks(flat, iters=iters, damping=damping,
                             interpret=not _on_tpu())
     return out.reshape(*lead, bs, bs)
+
+
+@partial(jax.jit, static_argnames=("iters", "damping", "use_pallas"))
+def ns_solve(a: jax.Array, b: jax.Array, *, iters: int = 20,
+             damping: float = 0.0, use_pallas: bool | None = None
+             ) -> jax.Array:
+    """Fused batched (A+δI)⁻¹ @ B over a packed bank [..., bs, bs] /
+    [..., bs, k] — the inverse stays in VMEM (one kernel per call).
+
+    Leading dims flatten into the kernel grid.  Mismatched leading dims
+    (one A applied to many B) route through ns_inverse + a broadcasting
+    matmul — fusing there would re-iterate NS per broadcast copy.  Shapes
+    whose VMEM footprint (A, X, AX + B, XB fp32) would exceed ~12 MB fall
+    back the same way; non-TPU interpret mode additionally caps work."""
+    use_pallas = _on_tpu() if use_pallas is None else use_pallas
+    bs, k = a.shape[-1], b.shape[-1]
+    lead = a.shape[:-2]
+    if lead != b.shape[:-2]:
+        inv = ns_inverse(a, iters=iters, damping=damping,
+                         use_pallas=use_pallas)
+        return inv @ b.astype(jnp.float32)
+    if not use_pallas and (bs > 256 or bs * k > 1 << 16):
+        return ns_solve_ref(a, b, iters=iters, damping=damping)
+    if bs > 1024 or (3 * bs * bs + 2 * bs * k) * 4 > 12 * 2 ** 20:
+        inv = ns_inverse(a, iters=iters, damping=damping,
+                         use_pallas=use_pallas)
+        return (inv @ b.astype(jnp.float32))
+    out = ns_solve_blocks(a.reshape(-1, bs, bs), b.reshape(-1, bs, k),
+                          iters=iters, damping=damping,
+                          interpret=not _on_tpu())
+    return out.reshape(*lead, bs, k)

@@ -10,3 +10,10 @@ from repro.core.inverse import damp, ns_inverse
 def ns_inverse_ref(a, *, iters: int = 20, damping: float = 0.0):
     ad = damp(a.astype(jnp.float32), damping) if damping else a
     return ns_inverse(ad, iters)
+
+
+def ns_solve_ref(a, b, *, iters: int = 20, damping: float = 0.0):
+    """Oracle for the fused invert-and-apply kernel: explicit inverse then
+    matmul (same math, inverse round-trips through memory)."""
+    return ns_inverse_ref(a, iters=iters, damping=damping) @ b.astype(
+        jnp.float32)

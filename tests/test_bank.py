@@ -1,0 +1,296 @@
+"""Packed gram-bank engine (repro.core.bank) vs the per-leaf reference:
+numerical equivalence across transformer/MoE/SSM-shaped gram trees, the
+factor-once local loop, and the one-factorization-per-round structural
+guarantee."""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hyp_compat import given, settings, st
+
+from repro.core import bank as B
+from repro.core import foof as F
+from repro.core.algorithms import HParams, _foof_local
+from repro.data import make_clustered_classification, FederatedDataset
+from repro.data.federated import build_round_batches
+from repro.fl.simulate import FedSim
+from repro.fl.tasks import DNNTask
+from repro.models.simple import MLPModel
+from repro.utils import tree_axpy, global_norm_clip
+
+
+def _spd(key, shape, bs):
+    m = jax.random.normal(key, (*shape, bs, bs))
+    return jnp.einsum("...ij,...kj->...ik", m, m) / bs + 0.05 * jnp.eye(bs)
+
+
+def _trees(seed, stacked=0):
+    """Transformer/MoE/SSM-shaped (params, grads, grams): stacked unit/inner
+    lead axes, MoE routing (wi/shared_wi ride the router gram), a diagonal
+    embedding lane, no-gram leaves, and TWO distinct block sizes."""
+    ks = iter(jax.random.split(jax.random.PRNGKey(seed), 16))
+    u, i, nb, bs, bs2, d, e, v = 2, 2, 2, 8, 12, 16, 3, 11
+    s = (stacked,) if stacked else ()
+
+    def rnd(*shape):
+        return jax.random.normal(next(ks), (*s, *shape))
+
+    params = {
+        "blocks": {"attn": {"wqkv": rnd(u, i, nb * bs, 10),
+                            "wo": rnd(u, i, bs2, d),
+                            "norm": rnd(u, i, d)},
+                   "moe": {"router": rnd(u, i, nb * bs, e),
+                           "wi": rnd(u, i, e, nb * bs, 6),
+                           "shared_wi": rnd(u, i, nb * bs, 4)}},
+        "ssm": {"in_proj": rnd(bs2, 9), "out_proj": rnd(nb * bs, 7)},
+        "embed": {"w": rnd(v, 6)},
+        "head": rnd(d, 5),
+    }
+    grads = jax.tree.map(lambda x: x * 0.1 + 0.01, params)
+    zero = jnp.zeros((*s, 0))
+    grams = {
+        "blocks": {"attn": {"wqkv": _spd(next(ks), (*s, u, i, nb), bs),
+                            "wo": _spd(next(ks), (*s, u, i, 1), bs2),
+                            "norm": zero},
+                   "moe": {"router": _spd(next(ks), (*s, u, i, nb), bs),
+                           "wi": zero, "shared_wi": zero}},
+        "ssm": {"in_proj": _spd(next(ks), (*s, 1), bs2),
+                "out_proj": _spd(next(ks), (*s, nb), bs)},
+        "embed": {"w": jax.random.uniform(next(ks), (*s, v)) + 0.1},
+        "head": zero,
+    }
+    return params, grads, grams
+
+
+def _assert_trees_close(a, b, rtol=2e-4, atol=2e-5):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=rtol, atol=atol)
+
+
+# ------------------------------------------------------- pack round-trip ---
+
+def test_pack_unpack_roundtrip():
+    _, _, grams = _trees(0)
+    bank = B.pack(grams)
+    assert len(bank.layout.block_sizes) == 2          # bs=8 and bs=12 groups
+    back = B.unpack_like(grams, bank.mats, bank.diag, bank.others,
+                         bank.layout)
+    _assert_trees_close(grams, back, rtol=0, atol=0)
+
+
+def test_pack_stacked_axis():
+    _, _, grams = _trees(0, stacked=3)
+    bank = B.pack(grams, stack=1)
+    for m in bank.mats:
+        assert m.shape[0] == 3
+    assert bank.diag.shape[0] == 3
+
+
+# ------------------------------------------------- packed ≡ per-leaf -------
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 99), damping=st.sampled_from([1e-3, 1.0]),
+       method=st.sampled_from(["cholesky", "ns"]))
+def test_precondition_packed_matches_reference(seed, damping, method):
+    params, grads, grams = _trees(seed)
+    got = F.precondition_tree(params, grads, grams, damping=damping,
+                              method=method, ns_iters=30)
+    want = F.precondition_tree(params, grads, grams, damping=damping,
+                               method=method, ns_iters=30, packed=False)
+    _assert_trees_close(got, want)
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 99), damping=st.sampled_from([1e-2, 1.0]),
+       method=st.sampled_from(["cholesky", "ns"]))
+def test_mix_packed_matches_reference(seed, damping, method):
+    s = 3
+    params, _, grams = _trees(seed, stacked=s)
+    w = jax.random.uniform(jax.random.PRNGKey(seed), (s,)) + 0.2
+    got = F.mix_preconditioned(params, grams, damping=damping, method=method,
+                               ns_iters=30, weights=w)
+    want = F.mix_preconditioned(params, grams, damping=damping, method=method,
+                                ns_iters=30, weights=w, packed=False)
+    _assert_trees_close(got, want, rtol=2e-3, atol=2e-4)
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 99), damping=st.sampled_from([1e-3, 1.0]))
+def test_invert_grams_packed_matches_reference(seed, damping):
+    _, _, grams = _trees(seed)
+    got = F.invert_grams(grams, damping=damping)
+    want = F.invert_grams(grams, damping=damping, packed=False)
+    _assert_trees_close(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_precondition_packed_pallas_matches_reference():
+    params, grads, grams = _trees(7)
+    got = F.precondition_tree(params, grads, grams, damping=0.1,
+                              method="pallas_ns", ns_iters=30)
+    want = F.precondition_tree(params, grads, grams, damping=0.1,
+                               method="cholesky", packed=False)
+    _assert_trees_close(got, want, rtol=5e-3, atol=5e-4)
+
+
+# ------------------------------------------------ factor-once local loop ---
+
+def _foof_local_perstep(task, hp, params, batches):
+    """The seed's per-step-factorization local loop (reference)."""
+    first = jax.tree.map(lambda x: x[0], batches)
+    grams0 = task.grams(params, first)
+
+    def step(theta, batch):
+        loss, g = task.loss_grad(theta, batch)
+        g = global_norm_clip(g, hp.clip)
+        pre = F.precondition_tree(theta, g, grams0, damping=hp.damping,
+                                  method=hp.inverse_method,
+                                  ns_iters=hp.ns_iters, packed=False)
+        return tree_axpy(-hp.lr, pre, theta), loss
+
+    theta, losses = jax.lax.scan(step, params, batches)
+    return theta
+
+
+@pytest.fixture(scope="module")
+def dnn_setup():
+    data = make_clustered_classification(600, 16, 4, seed=0)
+    ds = FederatedDataset.from_arrays(data, 4, alpha=0.5, seed=0)
+    model = MLPModel(in_dim=16, hidden=(24,), num_classes=4)
+    return ds, DNNTask(model)
+
+
+def test_factor_once_matches_per_step_factorization(dnn_setup):
+    """_foof_local with the cached packed factors must equal the seed's
+    refactorize-every-step behaviour (same grams, same solves)."""
+    ds, task = dnn_setup
+    hp = HParams(lr=0.3, damping=1.0, local_steps=4)
+    params = task.init(jax.random.PRNGKey(0))
+    batches = build_round_batches(ds, 4, 16, np.random.default_rng(0))
+    one = jax.tree.map(lambda x: x[0], batches)       # one client's K batches
+    theta, _, _ = _foof_local(task, hp, params, one)
+    theta_ref = _foof_local_perstep(task, hp, params, one)
+    _assert_trees_close(theta, theta_ref, rtol=2e-4, atol=2e-5)
+
+
+def test_fedpm_foof_round_packed_matches_reference(dnn_setup):
+    """A full fedpm_foof round (client vmap + preconditioned mixing) on the
+    packed bank matches a hand-built per-leaf round."""
+    ds, task = dnn_setup
+    hp = HParams(lr=0.3, damping=1.0)
+    sim = FedSim(task, "fedpm_foof", hp, ds.n_clients)
+    st_ = sim.init(jax.random.PRNGKey(0))
+    batches = build_round_batches(ds, 3, 16, np.random.default_rng(0))
+    new, _ = sim.round(st_, batches, jax.random.PRNGKey(1))
+    # reference: per-leaf local loops + per-leaf mixing
+    thetas, grams = [], []
+    for c in range(ds.n_clients):
+        cb = jax.tree.map(lambda x: x[c], batches)
+        th = _foof_local_perstep(task, hp, st_.params, cb)
+        last = jax.tree.map(lambda x: x[-1], cb)
+        thetas.append(th)
+        grams.append(task.grams(th, last))
+    stack = jax.tree.map(lambda *xs: jnp.stack(xs), *thetas)
+    gstack = jax.tree.map(lambda *xs: jnp.stack(xs), *grams)
+    want = F.mix_preconditioned(stack, gstack, damping=hp.damping,
+                                weights=jnp.ones((ds.n_clients,)),
+                                packed=False)
+    _assert_trees_close(new.params, want, rtol=2e-3, atol=2e-4)
+
+
+# ------------------------------------------- structural: factorize once ----
+
+def _count_cholesky(jaxpr, in_scan=False):
+    """(outside_scan, inside_scan) cholesky-primitive counts, recursing
+    through all sub-jaxprs."""
+    out = np.zeros(2, dtype=int)
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "cholesky":
+            out[1 if in_scan else 0] += 1
+        scan_here = in_scan or eqn.primitive.name == "scan"
+        for v in eqn.params.values():
+            for sub in jax.tree.leaves(v, is_leaf=lambda x: hasattr(x, "eqns")
+                                       or hasattr(x, "jaxpr")):
+                if hasattr(sub, "jaxpr"):
+                    sub = sub.jaxpr
+                if hasattr(sub, "eqns"):
+                    out += _count_cholesky(sub, scan_here)
+    return out
+
+
+def test_one_factorization_per_round_regardless_of_k(dnn_setup):
+    """fedpm_foof/localnewton_foof local loops: ALL cholesky factorizations
+    sit outside the K-step scan — factorization count is K-independent."""
+    ds, task = dnn_setup
+    params = task.init(jax.random.PRNGKey(0))
+    for k in (1, 4):
+        batches = jax.tree.map(
+            lambda x: x[0],
+            build_round_batches(ds, k, 16, np.random.default_rng(0)))
+        hp = HParams(lr=0.3, damping=1.0, inverse_method="cholesky")
+        jaxpr = jax.make_jaxpr(
+            lambda p, b: _foof_local(task, hp, p, b))(params, batches)
+        outside, inside = _count_cholesky(jaxpr.jaxpr)
+        assert inside == 0, f"K={k}: cholesky inside the local-step scan"
+        assert outside >= 1, f"K={k}: no factorization at all?"
+
+
+# ----------------------------------------------------- psum shard_map ------
+
+_PSUM_SCRIPT = r'''
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys; sys.path.insert(0, "src")
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.core import foof as F
+from repro.distributed.axes import make_auto_mesh, use_mesh, shard_map
+
+S, nb, bs, dout, v = 8, 2, 8, 5, 11
+rng = jax.random.PRNGKey(0)
+m = jax.random.normal(rng, (S, nb, bs, bs))
+a = jnp.einsum("snij,snkj->snik", m, m) / bs + 0.05 * jnp.eye(bs)
+th = jax.random.normal(rng, (S, nb * bs, dout))
+emb = jax.random.normal(rng, (S, v, 3))
+cnt = jax.random.uniform(jax.random.PRNGKey(1), (S, v)) + 0.1
+params = {"w": th, "embed": {"w": emb}}
+grams = {"w": a, "embed": {"w": cnt}}
+mesh = make_auto_mesh((8,), ("data",))
+
+def mix(packed):
+    def island(p, g):
+        p0 = jax.tree.map(lambda x: x[0], p)      # this cohort's slice
+        g0 = jax.tree.map(lambda x: x[0], g)
+        return F.mix_preconditioned_psum(p0, g0, axes=("data",), damping=0.1,
+                                         packed=packed)
+    with use_mesh(mesh):
+        return shard_map(island, mesh=mesh,
+                         in_specs=(jax.tree.map(lambda _: P("data"), params),
+                                   jax.tree.map(lambda _: P("data"), grams)),
+                         out_specs=jax.tree.map(lambda _: P(), params),
+                         axis_names={"data"}, check=False)(params, grams)
+
+got, ref = mix(True), mix(False)
+for x, y in zip(jax.tree.leaves(got), jax.tree.leaves(ref)):
+    np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                               rtol=2e-4, atol=2e-5)
+stacked = F.mix_preconditioned(params, grams, damping=0.1)
+for x, y in zip(jax.tree.leaves(got), jax.tree.leaves(stacked)):
+    np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                               rtol=2e-4, atol=2e-5)
+print("OK")
+'''
+
+
+def test_mix_psum_packed_matches_reference():
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run([sys.executable, "-c", _PSUM_SCRIPT],
+                         cwd=os.path.join(os.path.dirname(__file__), ".."),
+                         capture_output=True, text=True, env=env, timeout=600)
+    assert res.returncode == 0, res.stderr[-2000:]
+    assert "OK" in res.stdout
