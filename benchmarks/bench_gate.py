@@ -1,0 +1,74 @@
+"""Bench regression gate: compare a smoke run against the checked-in
+baseline and fail tier-1 on >tol regressions.
+
+Usage (scripts/ci.sh wires this up)::
+
+    python -m benchmarks.run --smoke            # writes BENCH_pr3.json
+    python -m benchmarks.bench_gate BENCH_pr3.json \
+        benchmarks/baseline_pr3.json --tol 0.25
+
+Both files carry a ``gates`` section of machine-independent RATIOS
+(packed-vs-per-leaf speedup, K-sweep growth, sharded-vs-vmap overhead —
+see ``benchmarks.run._gates``).  A gate regresses when its value moves
+past baseline·(1 ± tol) in its ``worse`` direction; a gate present in
+the baseline but missing from the current run also fails (a silently
+dropped bench must not read as a pass).  Refresh the baseline by copying
+a trusted run's BENCH_pr3.json over benchmarks/baseline_pr3.json.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def check(current: dict, baseline: dict, tol: float) -> list[str]:
+    failures = []
+    cur_gates = current.get("gates", {})
+    for name, base in sorted(baseline.get("gates", {}).items()):
+        cur = cur_gates.get(name)
+        if cur is None:
+            failures.append(f"{name}: missing from current run")
+            print(f"GATE {name}: MISSING (baseline {base['value']:.3f})")
+            continue
+        bv, cv = float(base["value"]), float(cur["value"])
+        worse = base.get("worse", "higher")
+        if worse == "higher":
+            bad = cv > bv * (1.0 + tol)
+            bound = f"<= {bv * (1.0 + tol):.3f}"
+        else:
+            bad = cv < bv * (1.0 - tol)
+            bound = f">= {bv * (1.0 - tol):.3f}"
+        status = "FAIL" if bad else "ok"
+        print(f"GATE {name}: {cv:.3f} (baseline {bv:.3f}, needs {bound}) "
+              f"{status}")
+        if bad:
+            failures.append(f"{name}: {cv:.3f} vs baseline {bv:.3f} "
+                            f"(worse={worse}, tol={tol:.0%})")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("current", help="BENCH_pr3.json from this run")
+    ap.add_argument("baseline", help="checked-in baseline json")
+    ap.add_argument("--tol", type=float, default=0.25,
+                    help="allowed fractional regression (default 0.25)")
+    args = ap.parse_args(argv)
+    with open(args.current) as f:
+        current = json.load(f)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    failures = check(current, baseline, args.tol)
+    if failures:
+        print("BENCH GATE FAILED:", file=sys.stderr)
+        for f_ in failures:
+            print(f"  {f_}", file=sys.stderr)
+        return 1
+    print(f"bench gate passed ({len(baseline.get('gates', {}))} gates, "
+          f"tol {args.tol:.0%})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -17,14 +17,17 @@ SCHEDULES = ((1, 18), (3, 6), (6, 3))     # (epochs, rounds): fixed budget
 K_SWEEP = (1, 4, 16)
 
 
-def k_sweep(setup=None):
+def k_sweep(setup=None, ks=K_SWEEP, algos=("fedpm_foof", "localnewton_foof"),
+            batch=64, reps=5):
     """Steady-state round latency vs local-step count K for the FOOF
-    algorithms (factor-once amortization trajectory)."""
+    algorithms (factor-once amortization trajectory).  The K-growth ratio
+    us(K_max)/us(K_1) is a bench-gate metric (benchmarks.run --smoke)."""
     setup = setup or dnn_setup(alpha=0.1)
-    for algo in ("fedpm_foof", "localnewton_foof"):
+    for algo in algos:
         base = None
-        for k in K_SWEEP:
-            us = time_dnn_round(setup, algo, DNN_HP[algo], k_steps=k)
+        for k in ks:
+            us = time_dnn_round(setup, algo, DNN_HP[algo], k_steps=k,
+                                batch=batch, reps=reps)
             base = base or us
             emit(f"local_epochs_ksweep/{algo}/K{k}", us,
                  f"steps={k} x_vs_K1={us / base:.2f}")

@@ -6,8 +6,18 @@ with the sampled cohort size S, not N (gather/compute/scatter core).
 Validates: all methods degrade with fewer participants; FedPM degrades
 least; derived = best accuracy.  The scaling section emits us/round for
 S ∈ {N, N/2, N/4} on the convex task — derived = speedup over full
-participation (≥2× expected at S=N/4)."""
+participation (≥2× expected at S=N/4).
+
+The sharded section times the mesh-sharded engine (``repro.fl.sharded``)
+against the vmap oracle on a FORCED 8-device host mesh (subprocess —
+device count locks at jax init), checks round equivalence, and reports
+the per-device client-bank footprint (N/8 rows).  Its overhead ratio is
+a bench-gate metric (benchmarks.run --smoke)."""
 from __future__ import annotations
+
+import os
+import subprocess
+import sys
 
 import jax
 import numpy as np
@@ -60,10 +70,84 @@ def scaling(n_clients=16, reps=30):
              0.0, f"err_full={errs_full[-1]:.2e},err_S4={errs_s[-1]:.2e}")
 
 
+def sharded_worker(n_clients=16, reps=10):
+    """Sharded-vs-vmap numbers; runs INSIDE the forced-8-device process.
+
+    Emits us/round for both engines at S ∈ {N, N/4}, the max-abs round
+    divergence (fp32 mixing tolerance), and the per-device bank rows."""
+    import jax.numpy as jnp
+    from repro.fl.sharded import bank_shard_rows, make_client_mesh
+
+    setup = convex_setup(n_clients=n_clients)
+    mesh = make_client_mesh()
+    nd = jax.device_count()
+    hp = {"fedpm": HParams(lr=1.0, damping=1e-2),
+          "scaffold": HParams(lr=0.3)}
+    for algo in ("fedpm", "scaffold"):
+        for s in (n_clients, n_clients // 4):
+            sc = 0 if s == n_clients else s
+            us_v = time_convex_round(setup, algo, hp[algo],
+                                     sample_clients=sc, reps=reps)
+            us_s = time_convex_round(setup, algo, hp[algo],
+                                     sample_clients=sc, reps=reps, mesh=mesh)
+            emit(f"sampling_sharded/{algo}/S{s}/vmap", us_v, f"devices={nd}")
+            emit(f"sampling_sharded/{algo}/S{s}/sharded", us_s,
+                 f"overhead_vs_vmap={us_s / us_v:.2f}x")
+        # round equivalence: sharded ≡ vmap to fp32 mixing tolerance
+        ref = FedSim(setup["task"], algo, hp[algo], n_clients)
+        sh = FedSim(setup["task"], algo, hp[algo], n_clients, mesh=mesh)
+        part = np.arange(0, n_clients, 3)
+        rng = jax.random.PRNGKey(0)
+        a, _ = ref.round(ref.init(rng), setup["batches"], rng,
+                         participants=part)
+        b, _ = sh.round(sh.init(rng), setup["batches"], rng,
+                        participants=part)
+        err = max([float(jnp.max(jnp.abs(x - y))) for x, y in
+                   zip(jax.tree.leaves(a.params), jax.tree.leaves(b.params))],
+                  default=0.0)
+        emit(f"sampling_sharded/equiv/{algo}", 0.0, f"max_abs_err={err:.2e}")
+        rows = bank_shard_rows(b.clients)
+        if rows:
+            emit(f"sampling_sharded/bank_rows/{algo}", 0.0,
+                 f"per_device={rows[0][0]}/{n_clients} shards={len(rows)}")
+
+
+def sharded(reps=10):
+    """Spawn the 8-fake-device worker and forward its CSV rows (so they
+    land in ``benchmarks.common.RECORDS`` for the bench gate)."""
+    env = dict(os.environ)
+    # append (not overwrite) so inherited XLA tuning flags still apply in
+    # the worker; last occurrence of the device-count flag wins
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=8").strip()
+    root = os.path.join(os.path.dirname(__file__), "..")
+    env["PYTHONPATH"] = (os.path.join(root, "src") + os.pathsep
+                         + env.get("PYTHONPATH", "")).rstrip(os.pathsep)
+    res = subprocess.run(
+        [sys.executable, "-m", "benchmarks.bench_sampling",
+         "--sharded-worker", str(reps)],
+        capture_output=True, text=True, env=env, cwd=root, timeout=600)
+    if res.returncode != 0:
+        sys.stderr.write(res.stderr[-2000:])
+        raise RuntimeError(f"sharded worker failed rc={res.returncode}")
+    for line in res.stdout.splitlines():
+        parts = line.strip().split(",", 2)
+        if len(parts) == 3 and parts[0].startswith("sampling_sharded"):
+            emit(parts[0], float(parts[1]), parts[2])
+
+
 def main(rounds=12):
+    # paper rows first: a sharded-worker subprocess failure must not
+    # cost the Fig. 6 accuracy rows
     scaling()
     fig6(rounds=rounds)
+    sharded()
 
 
 if __name__ == "__main__":
-    main()
+    if "--sharded-worker" in sys.argv:
+        i = sys.argv.index("--sharded-worker")
+        reps = int(sys.argv[i + 1]) if len(sys.argv) > i + 1 else 10
+        sharded_worker(reps=reps)
+    else:
+        main()

@@ -22,7 +22,13 @@ from repro.fl.tasks import ConvexTask, DNNTask
 from repro.models.simple import LogisticModel, MLPModel
 
 
+#: every ``emit`` also lands here — ``benchmarks.run --smoke`` serializes
+#: the registry (plus derived regression-gate ratios) to BENCH_pr3.json
+RECORDS: dict[str, dict] = {}
+
+
 def emit(name: str, us_per_call: float, derived) -> None:
+    RECORDS[name] = {"us": float(us_per_call), "derived": str(derived)}
     print(f"{name},{us_per_call:.1f},{derived}", flush=True)
 
 
@@ -79,10 +85,14 @@ def run_convex(setup, algo, hp, rounds, init_scale=0.1, seed=0,
     return errs, fgaps, us
 
 
-def time_convex_round(setup, algo, hp, sample_clients=0, reps=20, seed=0):
-    """Steady-state us/round (post-compile) for a fixed cohort size."""
+def time_convex_round(setup, algo, hp, sample_clients=0, reps=20, seed=0,
+                      mesh=None):
+    """Steady-state us/round (post-compile) for a fixed cohort size.
+
+    ``mesh``: route the round through the mesh-sharded engine
+    (``repro.fl.sharded``) instead of the single-device vmap path."""
     n = setup["ds"].n_clients
-    sim = FedSim(setup["task"], algo, hp, n)
+    sim = FedSim(setup["task"], algo, hp, n, mesh=mesh)
     st = sim.init(jax.random.PRNGKey(seed))
     st.params = setup["theta_star"] + 0.05 * jax.random.normal(
         jax.random.PRNGKey(seed), (setup["d"],))

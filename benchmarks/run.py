@@ -8,20 +8,139 @@ benchmarks/common.py and EXPERIMENTS.md for the paper mapping:
   bench_foof_samples  → Fig. 7      bench_cost         → Table 2
   bench_femnist       → Table 15 (FEMNIST, writer-partitioned + sampling)
   bench_profiling     → Table 16    bench_roofline     → §Roofline (dry-run)
+
+``--smoke`` runs the CI perf-gate subset — packed-vs-per-leaf bank
+numbers, the K-sweep factor-once amortization, and the sharded-vs-vmap
+engine comparison on a forced 8-device host mesh — and serializes every
+emitted row plus machine-independent gate RATIOS to ``BENCH_pr3.json``.
+``benchmarks.bench_gate`` compares those ratios against the checked-in
+``benchmarks/baseline_pr3.json`` and fails tier-1 on >25% regressions
+(scripts/ci.sh wires both up).
 """
 from __future__ import annotations
 
+import json
 import sys
 import traceback
 
 
+def _run(benches) -> list[str]:
+    failed = []
+    for name, fn in benches:
+        try:
+            fn()
+        except Exception as e:                      # keep the harness going
+            failed.append(name)
+            print(f"{name},0.0,ERROR:{type(e).__name__}:{e}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    return failed
+
+
+# gate name → (numerator row, denominator row, worse direction, family).
+# Families tie each gate to the bench stage that refreshes its rows, so
+# smoke() can sample a gate once per repetition of ITS stage and take the
+# median: numerator and denominator are always measured back-to-back in
+# the same repetition, so correlated machine load cancels out of the
+# ratio (min-merging rows across interleaved repetitions does not — a
+# fast numerator from one rep against a slow denominator from another
+# fabricates a regression).
+_GATE_SPECS = {
+    # packed gram bank must stay faster than the per-leaf walks
+    "packed_precondition_speedup": (
+        "cost_bank/precondition_perleaf", "cost_bank/precondition_packed",
+        "lower", "bank"),
+    "packed_invert_speedup": (
+        "cost_bank/invert_perleaf", "cost_bank/invert_packed", "lower",
+        "bank"),
+    # factor-once amortization: K=16 rounds must stay sublinear in K
+    "ksweep_k16_growth": (
+        "local_epochs_ksweep/fedpm_foof/K16",
+        "local_epochs_ksweep/fedpm_foof/K1", "higher", "ksweep"),
+    # sharded engine overhead vs the vmap oracle (8 fake host devices)
+    "sharded_overhead_fedpm": (
+        "sampling_sharded/fedpm/S16/sharded",
+        "sampling_sharded/fedpm/S16/vmap", "higher", "sharded"),
+    "sharded_overhead_scaffold": (
+        "sampling_sharded/scaffold/S16/sharded",
+        "sampling_sharded/scaffold/S16/vmap", "higher", "sharded"),
+}
+
+
+def _gates(records: dict, family: str) -> dict:
+    """Machine-independent regression-gate ratios for one bench family.
+
+    Ratios of two timings from the same repetition cancel machine speed,
+    so a checked-in baseline transfers across hosts (absolute us would
+    not)."""
+    gates = {}
+    for name, (num, den, worse, fam) in _GATE_SPECS.items():
+        if fam != family:
+            continue
+        a, b = records.get(num), records.get(den)
+        if a and b and a["us"] > 0 and b["us"] > 0:
+            gates[name] = {"value": a["us"] / b["us"], "worse": worse}
+    return gates
+
+
+def _median_gates(samples: list[dict]) -> dict:
+    import statistics
+    merged: dict = {}
+    for s in samples:
+        for k, v in s.items():
+            merged.setdefault(k, []).append(v["value"])
+    return {k: {"value": round(statistics.median(vs), 4),
+                "worse": _GATE_SPECS[k][2]}
+            for k, vs in merged.items()}
+
+
+def smoke(out_path: str = "BENCH_pr3.json") -> int:
+    from benchmarks import bench_cost, bench_local_epochs, bench_sampling
+    from benchmarks.common import RECORDS, dnn_setup
+
+    print("name,us_per_call,derived")
+    samples: list[dict] = []
+
+    failed = _run([
+        ("cost", lambda: bench_cost.main(smoke=True)),
+    ])
+    # gate rows re-measured at default (non-smoke) sizes — the tiny smoke
+    # shapes don't separate packed from per-leaf reliably — with the gate
+    # ratio sampled per repetition and median-merged (see _GATE_SPECS)
+    for _ in range(3):
+        failed += _run([("bank", bench_cost.bank_section)])
+        samples.append(_gates(RECORDS, "bank"))
+    ksetup = dnn_setup(alpha=0.1, n_clients=8, n=1200, dim=16, classes=4)
+    for _ in range(2):
+        failed += _run([("ksweep", lambda: bench_local_epochs.k_sweep(
+            setup=ksetup, ks=(1, 16), algos=("fedpm_foof",), batch=16,
+            reps=3))])
+        samples.append(_gates(RECORDS, "ksweep"))
+    # ONE worker subprocess (each pays a full cold jax init + compile —
+    # repeating it would blow the ci.sh stage budget); its rows are
+    # already steady-state means over 8 post-compile reps, and the
+    # checked-in baselines carry the sharded family's wider noise
+    # envelope (see benchmarks/baseline_pr3.json meta)
+    failed += _run([("sharded", lambda: bench_sampling.sharded(reps=8))])
+    samples.append(_gates(RECORDS, "sharded"))
+
+    out = {"rows": RECORDS, "gates": _median_gates(samples)}
+    with open(out_path, "w") as f:
+        json.dump(out, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {out_path}: {len(out['rows'])} rows, "
+          f"{len(out['gates'])} gates", file=sys.stderr)
+    return 1 if failed else 0
+
+
 def main() -> None:
+    if "--smoke" in sys.argv:
+        sys.exit(smoke())
     from benchmarks import (bench_convex, bench_cost, bench_dnn,
                             bench_femnist, bench_foof_samples,
                             bench_local_epochs, bench_profiling,
                             bench_roofline, bench_sampling)
     print("name,us_per_call,derived")
-    benches = [
+    failed = _run([
         ("convex", lambda: bench_convex.main(rounds=10)),
         ("dnn", lambda: bench_dnn.main(rounds=10)),
         ("local_epochs", bench_local_epochs.main),
@@ -31,15 +150,7 @@ def main() -> None:
         ("cost", bench_cost.main),
         ("profiling", bench_profiling.main),
         ("roofline", bench_roofline.main),
-    ]
-    failed = []
-    for name, fn in benches:
-        try:
-            fn()
-        except Exception as e:                      # keep the harness going
-            failed.append(name)
-            print(f"{name},0.0,ERROR:{type(e).__name__}:{e}", flush=True)
-            traceback.print_exc(file=sys.stderr)
+    ])
     if failed:
         sys.exit(1)
 

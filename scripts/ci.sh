@@ -1,17 +1,77 @@
 #!/usr/bin/env bash
-# Tier-1 CI: install dev deps (best-effort — the suite degrades gracefully
-# without them, see tests/hyp_compat.py), run the ROADMAP pytest command
-# under a timeout, then an interpret-mode benchmark smoke that exercises
-# every Pallas kernel path (gram, NS inverse, fused invert-and-apply) and
-# the packed gram-bank engine — kernel regressions fail tier-1 cheaply.
-set -euo pipefail
-cd "$(dirname "$0")/.."
+# Tier-1 CI entry point.  Stages:
+#
+#   1. dev deps        best-effort pip install (suite degrades gracefully
+#                      without hypothesis, see tests/hyp_compat.py);
+#                      skipped with --fast (local pre-commit use)
+#   2. pytest          ROADMAP tier-1 command + JUnit XML for the
+#                      workflow's test-report annotation (CI_JUNIT path)
+#   3. bench smoke     benchmarks.run --smoke writes BENCH_pr3.json; its
+#       + gate         first stage is the interpret-mode kernel smoke
+#                      (every Pallas path: gram, NS inverse, fused
+#                      invert-and-apply, bank), then the gate rows
+#                      (packed-vs-per-leaf, K-sweep, sharded-vs-vmap on a
+#                      forced 8-device host mesh); benchmarks.bench_gate
+#                      fails tier-1 on >25% ratio regressions vs the
+#                      checked-in benchmarks/baseline_pr3.json.
+#                      CI_SKIP_BENCH_GATE=1 replaces this with the bare
+#                      kernel smoke (benchmarks.bench_cost --smoke).
+#
+# Every stage runs under `timeout`; exit 124 is reported as a TIMEOUT
+# (infra budget exceeded), distinct from a test/bench FAILURE.
+set -uo pipefail   # no -e: run_stage inspects exit codes itself
+cd "$(dirname "$0")/.." || exit 1
 
-python -m pip install -q -r requirements-dev.txt \
-    || echo "WARN: dev deps not installed (offline?); running degraded suite"
+FAST=0
+for arg in "$@"; do
+    case "$arg" in
+        --fast) FAST=1 ;;
+        *) echo "usage: scripts/ci.sh [--fast]" >&2; exit 2 ;;
+    esac
+done
 
-PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
-    timeout "${CI_TIMEOUT:-1800}" python -m pytest -x -q
+export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+JUNIT="${CI_JUNIT:-test-results.xml}"
 
-PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
-    timeout "${CI_BENCH_TIMEOUT:-600}" python -m benchmarks.bench_cost --smoke
+# run_stage NAME TIMEOUT_SECS CMD... — distinguishes timeouts (124) from
+# real failures so a budget overrun is never misread as a broken test
+run_stage() {
+    local name="$1" budget="$2"; shift 2
+    echo "=== [$name] $*"
+    timeout "$budget" "$@"
+    local rc=$?
+    if [[ $rc -eq 124 ]]; then
+        echo "ERROR: [$name] TIMEOUT after ${budget}s (exit 124) — stage" \
+             "exceeded its time budget; this is NOT a test failure" >&2
+        exit 124
+    elif [[ $rc -ne 0 ]]; then
+        echo "ERROR: [$name] FAILED with exit code $rc" >&2
+        exit "$rc"
+    fi
+}
+
+if [[ $FAST -eq 0 ]]; then
+    python -m pip install -q -r requirements-dev.txt \
+        || echo "WARN: dev deps not installed (offline?); running degraded suite"
+else
+    echo "=== [deps] skipped (--fast)"
+fi
+
+run_stage pytest "${CI_TIMEOUT:-1800}" \
+    python -m pytest -x -q --junitxml="$JUNIT"
+
+if [[ "${CI_SKIP_BENCH_GATE:-0}" != 1 ]]; then
+    # benchmarks.run --smoke starts with the full bench_cost kernel smoke,
+    # so the gated path gets kernel coverage without running it twice
+    run_stage bench-smoke "${CI_BENCH_TIMEOUT:-1500}" \
+        python -m benchmarks.run --smoke
+    run_stage bench-gate 120 \
+        python -m benchmarks.bench_gate BENCH_pr3.json \
+            benchmarks/baseline_pr3.json --tol 0.25
+else
+    run_stage kernel-smoke "${CI_BENCH_TIMEOUT:-600}" \
+        python -m benchmarks.bench_cost --smoke
+    echo "=== [bench-gate] skipped (CI_SKIP_BENCH_GATE=1)"
+fi
+
+echo "=== tier-1 CI green"

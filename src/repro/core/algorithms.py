@@ -82,22 +82,37 @@ class Algorithm:
 class Participation(NamedTuple):
     """Who is in this round's aggregation.
 
-    ``weights``: [S] nonnegative weights over the GATHERED message stack
-    (ones for uniform sampling; fractional weights support e.g. data-size
-    weighting).  ``n_total``: static total client count N — S ≤ N.
+    ``weights``: [S_local] nonnegative weights over the GATHERED message
+    stack (ones for uniform sampling; fractional weights support e.g.
+    data-size weighting).  ``n_total``: static total client count N.
+
+    ``axes``: mesh axes the participant stack is sharded over — empty in
+    the vmap engine (the stack holds ALL S participants), and
+    ``("clients",)`` inside ``repro.fl.sharded``'s manual region, where
+    each shard holds only its local participant bucket (zero-weight
+    padding slots included) and cross-shard totals are psums.  Server fns
+    aggregate through ``part`` (``wmean`` / ``n_sampled``) and stay
+    engine-agnostic: per-shard partial reductions + one collective, never
+    a full gathered stack on one device.
     """
     weights: jax.Array
     n_total: int
+    axes: tuple = ()
 
     @property
     def n_sampled(self) -> jax.Array:
         """Participant count S = number of positive-weight entries (weight
         mass is aggregation emphasis, not cohort size — fractional weights
         must not shrink fraction-of-N terms like SCAFFOLD's S/N)."""
-        return jnp.sum((self.weights > 0).astype(jnp.float32))
+        s = jnp.sum((self.weights > 0).astype(jnp.float32))
+        return jax.lax.psum(s, self.axes) if self.axes else s
+
+    def wmean(self, tree_stack: PyTree) -> PyTree:
+        """Weighted mean over the (possibly sharded) participant axis."""
+        return _wmean(tree_stack, self)
 
 
-def _wmean(tree_stack: PyTree, weights: jax.Array) -> PyTree:
+def _wmean(tree_stack: PyTree, part: Participation) -> PyTree:
     """Weighted mean over the gathered participant axis.
 
     Normalizes by the true weight sum (epsilon floor only), so fractional
@@ -106,12 +121,21 @@ def _wmean(tree_stack: PyTree, weights: jax.Array) -> PyTree:
     leaf dtype (also matching ``mix_preconditioned``), so bf16 runs don't
     drift through server aggregation.  The engine never dispatches an
     empty cohort (``FedSim.round`` short-circuits S = 0).
+
+    With ``part.axes`` set (sharded engine), the stack is each shard's
+    local bucket: the numerator/denominator partial sums cross shards as
+    ONE psum, so no device ever materializes the full [S] stack.
     """
-    wf = weights.astype(jnp.float32)
-    wsum = jnp.maximum(jnp.sum(wf), 1e-12)
-    return jax.tree.map(
-        lambda x: (jnp.tensordot(wf, x.astype(jnp.float32), axes=1)
-                   / wsum).astype(x.dtype), tree_stack)
+    wf = part.weights.astype(jnp.float32)
+    num = jax.tree.map(
+        lambda x: jnp.tensordot(wf, x.astype(jnp.float32), axes=1),
+        tree_stack)
+    den = jnp.sum(wf)
+    if part.axes:
+        num, den = jax.lax.psum((num, den), part.axes)
+    den = jnp.maximum(den, 1e-12)
+    return jax.tree.map(lambda n, x: (n / den).astype(x.dtype),
+                        num, tree_stack)
 
 
 def _no_server_state(task, hp, params):
@@ -153,7 +177,7 @@ def _psgd_client(task, hp, params, cstate, sstate, batches, rng):
 
 
 def _psgd_server(task, hp, params, sstate, msgs, part):
-    g = _wmean(msgs["grad"], part.weights)
+    g = part.wmean(msgs["grad"])
     return tree_axpy(-hp.lr, g, params), sstate
 
 
@@ -165,11 +189,11 @@ def _fedavg_client(task, hp, params, cstate, sstate, batches, rng):
 
 
 def _fedavg_server(task, hp, params, sstate, msgs, part):
-    return _wmean(msgs["theta"], part.weights), sstate
+    return part.wmean(msgs["theta"]), sstate
 
 
 def _fedavgm_server(task, hp, params, sstate, msgs, part):
-    delta = tree_sub(_wmean(msgs["theta"], part.weights), params)
+    delta = tree_sub(part.wmean(msgs["theta"]), params)
     v = tree_axpy(hp.momentum, sstate, delta)   # v = m·v + Δ
     return tree_add(params, v), v
 
@@ -205,10 +229,10 @@ def _scaffold_client(task, hp, params, cstate, sstate, batches, rng):
 
 
 def _scaffold_server(task, hp, params, sstate, msgs, part):
-    theta = _wmean(msgs["theta"], part.weights)
+    theta = part.wmean(msgs["theta"])
     # c ← c + (S/N)·mean_S(Δc_i): explicit sampled fraction from part
     frac = part.n_sampled / jnp.float32(part.n_total)
-    c = tree_add(sstate, tree_scale(_wmean(msgs["dc"], part.weights), frac))
+    c = tree_add(sstate, tree_scale(part.wmean(msgs["dc"]), frac))
     new = tree_add(params, tree_scale(tree_sub(theta, params), hp.server_lr))
     return new, c
 
@@ -224,7 +248,7 @@ def _fedadam_client(task, hp, params, cstate, sstate, batches, rng):
 
 def _fedadam_server(task, hp, params, sstate, msgs, part):
     m, v = sstate
-    d = _wmean(msgs["delta"], part.weights)
+    d = part.wmean(msgs["delta"])
     m = tree_add(tree_scale(m, hp.beta1), tree_scale(d, 1 - hp.beta1))
     v = jax.tree.map(lambda vv, dd: hp.beta2 * vv + (1 - hp.beta2) * dd * dd, v, d)
     upd = jax.tree.map(lambda mm, vv: mm / (jnp.sqrt(vv) + hp.tau), m, v)
@@ -241,8 +265,8 @@ def _fednl_client(task, hp, params, cstate, sstate, batches, rng):
 
 
 def _fednl_server(task, hp, params, sstate, msgs, part):
-    g = _wmean(msgs["grad"], part.weights)
-    h = _wmean(msgs["hess"], part.weights)
+    g = part.wmean(msgs["grad"])
+    h = part.wmean(msgs["hess"])
     step = inv.solve(h, g[:, None], hp.damping, method=hp.inverse_method,
                      ns_iters=hp.ns_iters)[:, 0]
     return params - hp.lr * step, sstate
@@ -273,8 +297,8 @@ def _fedns_server(task, hp, params, sstate, msgs, part):
     """Explicit Nyström reconstruction Ĥ = Y(ΩᵀY)⁻¹Yᵀ, then a damped solve.
     (A Woodbury identity solve is cheaper but loses ~30% accuracy to fp32
     cancellation at δ ≲ 1e-3 — measured; EXPERIMENTS.md §Repro notes.)"""
-    g = _wmean(msgs["grad"], part.weights)
-    y = _wmean(msgs["sketch"], part.weights)
+    g = part.wmean(msgs["grad"])
+    y = part.wmean(msgs["sketch"])
     omega = sstate                                        # shared frame
     core = omega.T @ y
     core = 0.5 * (core + core.T) + 1e-6 * jnp.eye(core.shape[0])
@@ -311,9 +335,9 @@ def _fedpm_full_client(task, hp, params, cstate, sstate, batches, rng):
 
 def _fedpm_full_server(task, hp, params, sstate, msgs, part):
     """Preconditioned mixing (Eq. 9/10): θ = (P̄)⁻¹ · mean_i P_i θ_i."""
-    pbar = _wmean(msgs["precond"], part.weights)
-    ptheta = _wmean(jax.vmap(lambda p, t: p @ t)(msgs["precond"], msgs["theta"]),
-                    part.weights)
+    pbar = part.wmean(msgs["precond"])
+    ptheta = part.wmean(
+        jax.vmap(lambda p, t: p @ t)(msgs["precond"], msgs["theta"]))
     theta = inv.solve(pbar, ptheta[:, None], 0.0, method=hp.inverse_method,
                       ns_iters=hp.ns_iters)[:, 0]
     return theta, sstate
@@ -365,11 +389,14 @@ def _fedpm_foof_client(task, hp, params, cstate, sstate, batches, rng):
 
 def _fedpm_foof_server(task, hp, params, sstate, msgs, part):
     """Preconditioned mixing with FOOF blocks (Eq. 12) over the gathered
-    participants, weighted by ``part.weights``."""
+    participants, weighted by ``part.weights``.  ``part.axes`` rides into
+    the bank mixer so the sharded engine's per-shard participant buckets
+    reduce via one psum per block-size group."""
     mixed = F.mix_preconditioned(msgs["theta"], msgs["grams"],
                                  damping=hp.damping,
                                  method=hp.inverse_method,
-                                 ns_iters=hp.ns_iters, weights=part.weights)
+                                 ns_iters=hp.ns_iters, weights=part.weights,
+                                 axes=part.axes)
     return mixed, sstate
 
 

@@ -604,33 +604,58 @@ def _mix_engine(params, bank: GramBank, *, damping, method, ns_iters,
     return jax.tree_util.tree_unflatten(pdef, outs)
 
 
-def normalize_weights(weights: jax.Array | None, n: int) -> jax.Array:
+def normalize_weights(weights: jax.Array | None, n: int,
+                      axes: tuple = ()) -> jax.Array:
     """Participant aggregation weights, normalized to sum 1 (uniform when
     None).  Shared by the packed and per-leaf mixing paths — the two must
     stay identical for the packed≡per-leaf property to hold under
-    weighted mixing."""
-    if weights is None:
+    weighted mixing.
+
+    ``axes``: mesh axes the participant stack is sharded over (the
+    sharded engine's per-shard buckets) — the normalizing weight sum is
+    then the cross-shard psum total, so zero-weight padding slots and
+    uneven buckets normalize exactly like the single-device stack.
+    NOTE: ``weights=None`` with ``axes`` set means uniform over EVERY
+    local row on every shard — callers with padded buckets (the sharded
+    engine) must pass explicit weights with 0 at padding slots, or the
+    padding rows' garbage averages in."""
+    if weights is None and not axes:
         return jnp.full((n,), 1.0 / n, jnp.float32)
-    if weights.shape[0] != n:
-        raise ValueError(f"weights [{weights.shape[0]}] must match the "
+    w = (jnp.ones((n,), jnp.float32) if weights is None
+         else weights.astype(jnp.float32))
+    if w.shape[0] != n:
+        raise ValueError(f"weights [{w.shape[0]}] must match the "
                          f"gathered participant axis [{n}]")
-    return weights / jnp.maximum(jnp.sum(weights), 1e-12)
+    wsum = jnp.sum(w)
+    if axes:
+        wsum = jax.lax.psum(wsum, axes)
+    return w / jnp.maximum(wsum, 1e-12)
 
 
 def mix_preconditioned(params_stack: PyTree, grams_stack: PyTree, *,
                        damping: float, method: str = "cholesky",
                        ns_iters: int = 20,
-                       weights: jax.Array | None = None) -> PyTree:
-    """Packed FedPM server mixing over participant-stacked trees."""
+                       weights: jax.Array | None = None,
+                       axes: tuple = ()) -> PyTree:
+    """Packed FedPM server mixing over participant-stacked trees.
+
+    With ``axes`` set (inside a shard_map manual region) the leading
+    stack axis is each shard's LOCAL participant bucket: every bank
+    reduction becomes a per-shard partial tensordot + one cross-shard
+    psum per block-size group, so the full [S] stack never materializes
+    on a device and the packed-rhs banks stay sharded over their row
+    axis."""
     from repro.core import foof as F
+    axes = tuple(axes)
     n = jax.tree.leaves(params_stack)[0].shape[0]
-    w = normalize_weights(weights, n)
+    w = normalize_weights(weights, n, axes)
 
     def reduce_mats(x):
-        return jnp.tensordot(w, x.astype(jnp.float32), axes=1)
+        r = jnp.tensordot(w, x.astype(jnp.float32), axes=1)
+        return jax.lax.psum(r, axes) if axes else r
 
     def reduce_leaf(x):
-        return jnp.tensordot(w, x.astype(jnp.float32), axes=1).astype(x.dtype)
+        return reduce_mats(x).astype(x.dtype)
 
     bank = pack(grams_stack, stack=1)
 

@@ -124,7 +124,7 @@ def _precondition_leaf(p, g, a, damping, method, ns_iters):
 def mix_preconditioned(params_stack: PyTree, grams_stack: PyTree, *,
                        damping: float, method: str = "cholesky",
                        ns_iters: int = 20, weights: jax.Array | None = None,
-                       packed: bool = True) -> PyTree:
+                       packed: bool = True, axes: tuple = ()) -> PyTree:
     """FedPM server mixing (Eq. 12) over participant-stacked trees.
 
     Participation contract: the leading axis of params_stack / grams_stack
@@ -139,17 +139,27 @@ def mix_preconditioned(params_stack: PyTree, grams_stack: PyTree, *,
     ``packed=True`` (default) mixes through the gram bank: per block-size
     group ONE batched (A_i+δI)θ_i matmul, one Ā factorization and one
     solve; ``packed=False`` is the per-leaf reference.
+
+    ``axes``: mesh axes the participant stack is sharded over — inside
+    ``repro.fl.sharded``'s manual region the leading axis is each shard's
+    local bucket and every mean gains one cross-shard psum (per
+    block-size group when packed).
     """
+    axes = tuple(axes)
     if packed:
         return B.mix_preconditioned(params_stack, grams_stack,
                                     damping=damping, method=method,
-                                    ns_iters=ns_iters, weights=weights)
+                                    ns_iters=ns_iters, weights=weights,
+                                    axes=axes)
     n = jax.tree.leaves(params_stack)[0].shape[0]
-    w = B.normalize_weights(weights, n)
+    w = B.normalize_weights(weights, n, axes)
 
     def wmean(x):
-        return jnp.tensordot(w.astype(jnp.float32),
-                             x.astype(jnp.float32), axes=1).astype(x.dtype)
+        r = jnp.tensordot(w.astype(jnp.float32),
+                          x.astype(jnp.float32), axes=1)
+        if axes:
+            r = jax.lax.psum(r, axes)
+        return r.astype(x.dtype)
 
     def walk(p_level, a_level):
         if isinstance(p_level, dict):

@@ -22,6 +22,9 @@ DATA_AXIS = "data"
 MODEL_AXIS = "model"
 #: axes that together enumerate client cohorts (present axes only are used)
 CLIENT_AXES = (POD_AXIS, DATA_AXIS)
+#: the simulation engine's client-bank axis: ``repro.fl.sharded`` places the
+#: stacked [N, ...] client-state bank (and per-client batches) on this axis
+CLIENTS_AXIS = "clients"
 
 _HAS_AXIS_TYPE = hasattr(jax.sharding, "AxisType")
 _HAS_SET_MESH = hasattr(jax, "set_mesh")
@@ -101,6 +104,14 @@ def shard_map(f: Callable, *, mesh: jax.sharding.Mesh | None = None,
             if axis_names is not None else frozenset())
     return _shard_map(f, m, in_specs=in_specs, out_specs=out_specs,
                       check_rep=check, auto=auto)
+
+
+def make_client_mesh(n_shards: int | None = None) -> jax.sharding.Mesh:
+    """A 1-D ``("clients",)`` mesh over ``n_shards`` devices (all by
+    default) — the mesh shape ``repro.fl.sharded`` shards client banks
+    over.  Routed through ``make_auto_mesh`` so both jax APIs work."""
+    n = n_shards if n_shards is not None else len(jax.devices())
+    return make_auto_mesh((n,), (CLIENTS_AXIS,))
 
 
 def present_client_axes(mesh: jax.sharding.Mesh) -> tuple[str, ...]:

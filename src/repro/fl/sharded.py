@@ -1,0 +1,181 @@
+"""Mesh-sharded client banks for the simulation engine.
+
+The vmap engine (``repro.fl.simulate``) keeps the full stacked client-state
+bank ``[N, ...]`` on ONE device — its per-round memory wall.  This module
+places the bank (and the per-client batch bank) on a 1-D ``("clients",)``
+mesh axis and runs the gather/compute/scatter round as shard_map over the
+client shards, so per-device bank memory is N / n_shards and every future
+async/streaming cohort PR can build on the same seam.
+
+Contract (oracle: the vmap engine, bitwise-tolerant in fp32 mixing):
+
+* **bucketing** — participants are pre-bucketed per shard HOST-side
+  (:func:`bucket_participants`): client ``c`` lives on shard
+  ``c // shard_n`` at local row ``c % shard_n``.  Buckets are padded to a
+  capacity that is a static function of the cohort size S only
+  (``min(S, shard_n)``), so the jit cache keys once per cohort size, not
+  per random cohort.  Padding slots carry weight 0, a clipped position,
+  and the out-of-range local id ``shard_n``.
+* **gather** — each shard ``jnp.take``s its local participants' states
+  (and batch rows) from its bank shard; padded slots (sentinel id
+  ``shard_n``) clamp to the shard's LAST row and compute throwaway work
+  that cannot poison aggregation (weight 0) or state (scatter drop).
+* **compute** — vmap over the ≤ cap local participants per shard; client
+  rngs are ``split(rng, S)`` indexed by participant position, identical
+  to the vmap engine's per-participant keys.
+* **aggregate** — server fns run replicated per shard on the LOCAL
+  message bucket with ``Participation(weights, n_total, axes=("clients",))``:
+  weighted means become per-shard partial reductions + one cross-shard
+  psum (one per block-size group through the packed
+  ``mix_preconditioned`` bank — the GramBank's row axis stays sharded
+  with the participants; no per-leaf walks).
+* **scatter** — shard-local ``.at[idx].set(..., mode="drop")``: padded
+  slots write nowhere, non-participants (on any shard) are bit-untouched.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.algorithms import Participation
+from repro.distributed.axes import CLIENTS_AXIS, make_client_mesh, shard_map
+
+PyTree = Any
+
+__all__ = ["CLIENTS_AXIS", "make_client_mesh", "bucket_participants",
+           "shard_clients", "replicate", "make_sharded_round",
+           "bank_shard_rows"]
+
+
+def _n_shards(mesh: jax.sharding.Mesh) -> int:
+    if CLIENTS_AXIS not in mesh.axis_names:
+        raise ValueError(f"sharded engine needs a {CLIENTS_AXIS!r} mesh "
+                         f"axis; got {mesh.axis_names}")
+    return mesh.shape[CLIENTS_AXIS]
+
+
+def bucket_participants(idx: np.ndarray, weights: np.ndarray, n_clients: int,
+                        n_shards: int):
+    """Host-side bucketing of a participant cohort onto client shards.
+
+    Returns ``(local, pos, w)``, each ``[n_shards, cap]`` with
+    ``cap = min(S, shard_n)`` (static per cohort size):
+
+    * ``local`` — participant local row in the shard's bank slice; padding
+      is ``shard_n``, one past the end, so gathers clamp and scatters drop.
+    * ``pos`` — position in the cohort's participant order (indexes the
+      round's ``split(rng, S)`` keys and pre-gathered [S] batch banks);
+      padding clamps to 0.
+    * ``w`` — per-participant aggregation weights; padding is 0, so padded
+      slots vanish from every weighted reduction.
+    """
+    shard_n = n_clients // n_shards
+    idx = np.asarray(idx)
+    weights = np.asarray(weights, np.float32)
+    s = int(idx.shape[0])
+    cap = min(s, shard_n)
+    local = np.full((n_shards, cap), shard_n, np.int32)
+    pos = np.zeros((n_shards, cap), np.int32)
+    w = np.zeros((n_shards, cap), np.float32)
+    # vectorized bucketing (no per-participant Python loop — this runs
+    # host-side every round): group by owner shard, cohort order preserved
+    # within each shard by the stable sort; slot = rank within the group
+    d, r = np.divmod(idx.astype(np.int64), shard_n)
+    order = np.argsort(d, kind="stable")
+    ds = d[order]
+    slot = np.arange(s, dtype=np.int64) - np.searchsorted(ds, ds)
+    local[ds, slot] = r[order]
+    pos[ds, slot] = order
+    w[ds, slot] = weights[order]
+    return local, pos, w
+
+
+def shard_clients(mesh: jax.sharding.Mesh, clients: PyTree) -> PyTree:
+    """Place a stacked ``[N, ...]`` client bank on the clients axis —
+    per-device bank memory becomes N / n_shards rows."""
+    sh = NamedSharding(mesh, P(CLIENTS_AXIS))
+    return jax.tree.map(lambda x: jax.device_put(x, sh), clients)
+
+
+def replicate(mesh: jax.sharding.Mesh, tree: PyTree) -> PyTree:
+    """Replicate server-side state (params, server) over the mesh."""
+    sh = NamedSharding(mesh, P())
+    return jax.tree.map(lambda x: jax.device_put(x, sh), tree)
+
+
+def bank_shard_rows(clients: PyTree) -> list[tuple[int, ...]]:
+    """Leading-axis extents of each addressable shard of the first bank
+    leaf — the per-device client-bank memory footprint (tests/bench)."""
+    leaves = jax.tree.leaves(clients)
+    if not leaves:
+        return []
+    return [tuple(s.data.shape) for s in leaves[0].addressable_shards]
+
+
+def make_sharded_round(task, algo, hp, n_clients: int,
+                       mesh: jax.sharding.Mesh):
+    """Build the sharded gather/compute/scatter round body.
+
+    Returns ``round_fn(params, server, clients, batches, rng, local,
+    pos, w, *, s, bucketed)`` — jit it with ``static_argnames=("s",
+    "bucketed")``.  ``batches`` leaves lead with N (client-ordered bank,
+    sharded like the client bank and gathered shard-locally) when
+    ``bucketed=False``, or with ``n_shards·cap`` (pre-bucketed
+    participant rows, see :func:`bucket_participants`) when
+    ``bucketed=True``.
+    """
+    nd = _n_shards(mesh)
+    if n_clients % nd:
+        raise ValueError(f"n_clients={n_clients} must divide over the "
+                         f"{nd}-way {CLIENTS_AXIS!r} axis")
+
+    def round_fn(params, server, clients, batches, rng, local, pos, w, *,
+                 s: int, bucketed: bool):
+        def shard_fn(params, server, lclients, lbatches, li, lpos, lw, rng):
+            li, lpos, lw = li[0], lpos[0], lw[0]        # [1, cap] → [cap]
+            # ---- gather: this shard's participants only ---------------
+            gathered = jax.tree.map(
+                lambda x: jnp.take(x, li, axis=0, mode="clip"), lclients)
+            gbatches = lbatches if bucketed else jax.tree.map(
+                lambda x: jnp.take(x, li, axis=0, mode="clip"), lbatches)
+            # same per-participant keys as the vmap oracle: split over the
+            # FULL cohort (replicated compute), index by cohort position
+            crngs = jnp.take(jax.random.split(rng, s), lpos, axis=0)
+
+            # ---- compute: vmap over the local bucket ------------------
+            def client_fn(cstate, cb, cr):
+                return algo.client(task, hp, params, cstate, server, cb, cr)
+
+            msgs, updated = jax.vmap(client_fn)(gathered, gbatches, crngs)
+
+            # ---- aggregate: partial reductions + one psum per group ---
+            part = Participation(weights=lw, n_total=n_clients,
+                                 axes=(CLIENTS_AXIS,))
+            new_params, new_server = algo.server(task, hp, params, server,
+                                                 msgs, part)
+
+            # ---- scatter: shard-local writes; padding slots drop ------
+            new_clients = jax.tree.map(
+                lambda b, u: b.at[li].set(u, mode="drop"), lclients, updated)
+            metrics = {}
+            if isinstance(msgs, dict) and "loss" in msgs:
+                wf = lw.astype(jnp.float32)
+                num, den = jax.lax.psum(
+                    (jnp.sum(wf * msgs["loss"]), jnp.sum(wf)),
+                    (CLIENTS_AXIS,))
+                metrics["client_loss"] = num / jnp.maximum(den, 1e-12)
+            return new_params, new_server, new_clients, metrics
+
+        shd = P(CLIENTS_AXIS)
+        return shard_map(
+            shard_fn, mesh=mesh,
+            in_specs=(P(), P(), shd, shd, shd, shd, shd, P()),
+            out_specs=(P(), P(), shd, P()),
+            axis_names={CLIENTS_AXIS}, check=False)(
+                params, server, clients, batches, local, pos, w, rng)
+
+    return round_fn

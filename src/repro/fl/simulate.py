@@ -17,6 +17,13 @@ This engine reproduces Test 1 / Test 2 / FEMNIST-class experiments.  The
 production engine for the 10 assigned architectures is
 ``repro.fl.distributed`` (mesh collectives instead of a vmap axis; every
 cohort participates there, matching the gathered contract).
+
+``mesh=`` switches execution to the mesh-sharded engine
+(``repro.fl.sharded``): the client bank and batch bank live sharded on a
+``("clients",)`` axis, the round runs as shard_map over client shards,
+and server aggregation is per-shard partial reductions + cross-shard
+psums.  The default vmap path stays the single-device oracle the sharded
+path is contract-tested against.
 """
 from __future__ import annotations
 
@@ -68,14 +75,24 @@ class FedSim:
     """Federated simulation of N clients with algorithm ``algo``."""
 
     def __init__(self, task, algo: str | Algorithm, hp: HParams,
-                 n_clients: int):
+                 n_clients: int, *, mesh=None):
         self.task = task
         self.algo = get_algorithm(algo) if isinstance(algo, str) else algo
         self.hp = hp
         self.n = n_clients
+        self.mesh = mesh
         # one jit object; XLA caches a program per participant count S
         # (``full`` is static: the full-cohort program has no gather/scatter)
         self._round_jit = jax.jit(self._round, static_argnames=("full",))
+        if mesh is not None:
+            from repro.fl import sharded as Sh
+            self._sharded = Sh
+            self._n_shards = Sh._n_shards(mesh)
+            # jit cache keys on the cohort size S only: bucket shapes are
+            # [n_shards, min(S, shard_n)] regardless of the random cohort
+            self._sharded_round_jit = jax.jit(
+                Sh.make_sharded_round(task, self.algo, hp, n_clients, mesh),
+                static_argnames=("s", "bucketed"))
 
     def init(self, rng) -> FedState:
         params = self.task.init(rng)
@@ -83,6 +100,11 @@ class FedSim:
         one_client = self.algo.init_client(self.task, params)
         clients = jax.tree.map(
             lambda x: jnp.broadcast_to(x, (self.n, *x.shape)), one_client)
+        if self.mesh is not None:
+            # the bank lives sharded: per-device memory is N / n_shards rows
+            clients = self._sharded.shard_clients(self.mesh, clients)
+            params = self._sharded.replicate(self.mesh, params)
+            server = self._sharded.replicate(self.mesh, server)
         return FedState(params=params, server=server, clients=clients)
 
     # ------------------------------------------------------------ round ----
@@ -184,12 +206,41 @@ class FedSim:
             order = np.argsort(idx)
             idx = idx[order]
             weights = weights[jnp.asarray(order)]
-        p, s, c, metrics = self._round_jit(state.params, state.server,
-                                           state.clients, client_batches,
-                                           rng, jnp.asarray(idx, jnp.int32),
-                                           weights, full=full)
+        if self.mesh is not None:
+            p, s, c, metrics = self._round_sharded(state, client_batches,
+                                                   rng, idx, weights)
+        else:
+            p, s, c, metrics = self._round_jit(
+                state.params, state.server, state.clients, client_batches,
+                rng, jnp.asarray(idx, jnp.int32), weights, full=full)
         return FedState(params=p, server=s, clients=c,
                         round=state.round + 1), metrics
+
+    def _round_sharded(self, state: FedState, client_batches, rng, idx,
+                       weights):
+        """One round on the mesh-sharded engine: host-side participant
+        bucketing, then shard_map gather/compute/scatter."""
+        s = int(idx.size)
+        local, pos, w = self._sharded.bucket_participants(
+            idx, np.asarray(weights, np.float32), self.n, self._n_shards)
+        nb = jax.tree.leaves(client_batches)[0].shape[0]
+        if nb == self.n:
+            batches, bucketed = client_batches, False
+        elif nb == s:
+            # pre-gathered [S] participant batches → pre-bucketed rows
+            # [n_shards·cap] in shard order (padding clamps to row 0)
+            flat_pos = jnp.asarray(pos.reshape(-1))
+            batches = jax.tree.map(
+                lambda x: jnp.take(x, flat_pos, axis=0), client_batches)
+            bucketed = True
+        else:
+            raise ValueError(
+                f"client_batches lead with {nb}; expected N={self.n} "
+                f"or S={s} participants")
+        return self._sharded_round_jit(
+            state.params, state.server, state.clients, batches, rng,
+            jnp.asarray(local), jnp.asarray(pos), jnp.asarray(w),
+            s=s, bucketed=bucketed)
 
     # ------------------------------------------------------------ loop -----
 

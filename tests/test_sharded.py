@@ -1,0 +1,166 @@
+"""Mesh-sharded engine contract tests (separate process with 8 fake host
+devices — device count is locked at jax init, so this runs as a
+subprocess, like tests/test_moe_shardmap.py).
+
+Contracts (ISSUE 3 / ROADMAP "Sharded client banks"):
+
+* sharded round ≡ vmap-oracle round to fp32 mixing tolerance, for a
+  stateful FOPM method (SCAFFOLD) and the preconditioned-mixing SOPM
+  method (FedPM, full-Hessian and FOOF backends), sampled AND full
+  cohorts;
+* sampled-out clients on remote shards are provably (bitwise) untouched;
+* the jit cache keys once per cohort size S, not per random cohort;
+* the client bank lives sharded: every device holds N/8 rows;
+* pre-gathered [S] participant batches take the same round as the [N]
+  bank (the data path that scales with S).
+"""
+import os
+import subprocess
+import sys
+
+SCRIPT = r'''
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys; sys.path.insert(0, "src")
+import jax, jax.numpy as jnp, numpy as np
+from repro.core.algorithms import HParams
+from repro.data import (FederatedDataset, make_clustered_classification,
+                        make_libsvm_like)
+from repro.data.federated import build_round_batches
+from repro.fl.simulate import FedSim
+from repro.fl.sharded import bank_shard_rows, make_client_mesh
+from repro.fl.tasks import ConvexTask, DNNTask
+from repro.models.simple import LogisticModel, MLPModel
+
+N = 16
+assert jax.device_count() == 8
+mesh = make_client_mesh()
+
+def maxerr(a, b):
+    return max([float(jnp.max(jnp.abs(jnp.asarray(x, jnp.float32)
+                                      - jnp.asarray(y, jnp.float32))))
+                for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b))],
+               default=0.0)
+
+data = make_libsvm_like("a9a", seed=0)
+ds = FederatedDataset.from_arrays(data, N, alpha=0.0, seed=0, test_frac=0.1)
+convex_task = ConvexTask(LogisticModel(d=data["x"].shape[1], lam=1e-3))
+convex_batches = ds.client_full_batches(k_steps=1)
+
+dnn_data = make_clustered_classification(1600, 16, 4, seed=0)
+dnn_ds = FederatedDataset.from_arrays(dnn_data, N, alpha=0.5, seed=0)
+dnn_task = DNNTask(MLPModel(in_dim=16, hidden=(32,), num_classes=4))
+dnn_batches = build_round_batches(dnn_ds, 2, 16, np.random.default_rng(0))
+
+SETUPS = {
+    "scaffold": (convex_task, convex_batches, HParams(lr=0.3)),
+    "fedpm": (convex_task, convex_batches, HParams(lr=1.0, damping=1e-2)),
+    "fedpm_foof": (dnn_task, dnn_batches, HParams(lr=0.3, damping=1.0)),
+}
+
+# ---------------- sharded ≡ vmap oracle (sampled + full cohorts) ----------
+participants = np.array([1, 4, 6, 11, 13])
+for algo, (task, batches, hp) in SETUPS.items():
+    ref, sh = (FedSim(task, algo, hp, N),
+               FedSim(task, algo, hp, N, mesh=mesh))
+    st_r, st_s = ref.init(jax.random.PRNGKey(0)), sh.init(jax.random.PRNGKey(0))
+    rng = jax.random.PRNGKey(7)
+    a, _ = ref.round(st_r, batches, rng, participants=participants)
+    b, _ = sh.round(st_s, batches, rng, participants=participants)
+    assert maxerr(a.params, b.params) < 2e-4, algo
+    assert maxerr(a.server, b.server) < 2e-4, algo
+    assert maxerr(a.clients, b.clients) < 2e-4, algo
+    a2, _ = ref.round(a, batches, rng)                  # full cohort
+    b2, _ = sh.round(b, batches, rng)
+    assert maxerr(a2.params, b2.params) < 4e-4, algo
+print("EQUIV-OK")
+
+# ---------------- per-device bank memory: N/8 rows each -------------------
+sim = FedSim(convex_task, "scaffold", HParams(lr=0.3), N, mesh=mesh)
+st = sim.init(jax.random.PRNGKey(0))
+rows = bank_shard_rows(st.clients)
+assert len(rows) == 8 and all(r[0] == N // 8 for r in rows), rows
+print("SHARD-OK")
+
+# ------------- sampled-out clients on remote shards bit-untouched ---------
+# participants live on shards 0 and 2 only; every other shard's states
+# (and the non-participant slots of shards 0/2) must be bit-identical
+part = np.array([0, 4, 5])          # shard 0: local 0; shard 2: locals 0, 1
+out = np.setdiff1d(np.arange(N), part)
+before = np.asarray(st.clients)
+st1, _ = sim.round(st, convex_batches, jax.random.PRNGKey(1),
+                   participants=part)
+after = np.asarray(st1.clients)
+np.testing.assert_array_equal(after[out], before[out])
+assert np.abs(after[part] - before[part]).max() > 0      # participants moved
+print("UNTOUCHED-OK")
+
+# ------------------- jit cache keyed once per cohort size -----------------
+f = sim._sharded_round_jit
+n0 = f._cache_size()
+rng2 = np.random.default_rng(1)
+for t in range(3):                                # same S, different cohorts
+    chosen = np.sort(rng2.choice(N, size=3, replace=False))
+    st1, _ = sim.round(st1, convex_batches, jax.random.PRNGKey(t),
+                       participants=chosen)
+assert f._cache_size() == n0, (f._cache_size(), n0)
+st1, _ = sim.round(st1, convex_batches, jax.random.PRNGKey(9),
+                   participants=np.arange(8))     # new S → one new program
+assert f._cache_size() == n0 + 1
+print("CACHE-OK")
+
+# ----------- pre-gathered [S] batches ≡ [N] bank (sharded path) -----------
+sh = FedSim(dnn_task, "fedpm_foof", HParams(lr=0.3, damping=1.0), N,
+            mesh=mesh)
+st = sh.init(jax.random.PRNGKey(0))
+rng = jax.random.PRNGKey(3)
+full, _ = sh.round(st, dnn_batches, rng, participants=participants)
+sub = jax.tree.map(lambda x: x[participants], dnn_batches)
+pre, _ = sh.round(st, sub, rng, participants=participants)
+assert maxerr(full.params, pre.params) == 0.0
+print("PREGATHER-OK")
+
+# -------- weighted axes= mixing: packed ≡ per-leaf oracle under psum ------
+from jax.sharding import PartitionSpec as P
+from repro.core import foof as F
+from repro.distributed.axes import shard_map, use_mesh
+
+cap, nb, bs, dout, v = 2, 2, 8, 5, 11
+k = jax.random.PRNGKey(0)
+m = jax.random.normal(k, (8 * cap, nb, bs, bs))
+grams = {"w": jnp.einsum("snij,snkj->snik", m, m) / bs + 0.05 * jnp.eye(bs),
+         "embed": {"w": jax.random.uniform(jax.random.PRNGKey(1),
+                                           (8 * cap, v)) + 0.1}}
+params = {"w": jax.random.normal(k, (8 * cap, nb * bs, dout)),
+          "embed": {"w": jax.random.normal(k, (8 * cap, v, 3))}}
+w = jax.random.uniform(jax.random.PRNGKey(2), (8 * cap,))  # incl. ~0 weights
+
+def mix(packed):
+    def island(p, g, wl):
+        return F.mix_preconditioned(p, g, damping=0.1, weights=wl,
+                                    packed=packed, axes=("clients",))
+    with use_mesh(mesh):
+        return shard_map(island, mesh=mesh,
+                         in_specs=(P("clients"), P("clients"), P("clients")),
+                         out_specs=P(), axis_names={"clients"},
+                         check=False)(params, grams, w)
+
+got, ref = mix(True), mix(False)
+stacked = F.mix_preconditioned(params, grams, damping=0.1, weights=w)
+assert maxerr(got, ref) < 2e-4
+assert maxerr(got, stacked) < 2e-4
+print("MIXAXES-OK")
+print("OK")
+'''
+
+
+def test_sharded_engine_contracts():
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run([sys.executable, "-c", SCRIPT],
+                         cwd=os.path.join(os.path.dirname(__file__), ".."),
+                         capture_output=True, text=True, env=env, timeout=600)
+    assert res.returncode == 0, res.stderr[-3000:]
+    for marker in ("EQUIV-OK", "SHARD-OK", "UNTOUCHED-OK", "CACHE-OK",
+                   "PREGATHER-OK", "MIXAXES-OK"):
+        assert marker in res.stdout, (marker, res.stdout)
