@@ -1,0 +1,112 @@
+"""Dispatch-overhead bench (ISSUE 4): scanned vs per-round rounds/sec.
+
+FedPM-class experiments run hundreds of short rounds; at small model
+sizes the per-round driver's cost is dominated by one jit dispatch + host
+round-trip per round.  ``FedSim.run_scanned`` compiles a whole chunk of
+rounds into one ``lax.scan`` program, so the dispatch cost amortizes
+across the chunk.  This bench times both drivers on a deliberately TINY
+convex task (per-round math ≪ dispatch overhead) and emits the
+machine-independent speedup ratio — the ``scan_dispatch_*`` bench-gate
+metrics (≥2× expected; a ratio collapse means per-round host work crept
+back into the scanned path).
+
+Both drivers run the SAME banked data path (resident device bank,
+in-graph cohort sampling), so the ratio isolates dispatch + host-loop
+overhead, not data handling.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core.algorithms import HParams
+from repro.data import FederatedDataset
+from repro.fl.simulate import FedSim, round_keys
+from repro.fl.tasks import ConvexTask
+from repro.models.simple import LogisticModel
+
+from benchmarks.common import emit
+
+#: (algo, hparams) pairs timed by :func:`dispatch` — FedPM (the paper's
+#: method; per-round Hessian + cholesky) and FedAvg (the pure dispatch
+#: floor: almost no per-round math)
+DISPATCH_ALGOS = (
+    ("fedpm", HParams(lr=1.0, damping=1e-2)),
+    ("fedavg", HParams(lr=0.3)),
+)
+
+
+def tiny_convex_task(n=2048, d=32, n_clients=16, seed=0):
+    """A small logistic task with a resident full-shard data bank."""
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    w = rng.normal(size=d).astype(np.float32) / np.sqrt(d)
+    y = np.sign(x @ w + 0.1 * rng.normal(size=n)).astype(np.float32)
+    y[y == 0] = 1.0
+    ds = FederatedDataset.from_arrays({"x": x, "y": y}, n_clients,
+                                      alpha=0.0, seed=seed, test_frac=0.1)
+    task = ConvexTask(LogisticModel(d=d, lam=1e-3))
+    return task.with_data(ds.device_bank(steps=1, batch=0))
+
+
+def dispatch(rounds=32, n_clients=16, s=4, reps=3):
+    """us/round for the per-round banked loop vs one scanned chunk.
+
+    Both paths include one ``init`` per repetition and block only at the
+    end (async dispatch allowed — that's the realistic per-round cost);
+    min over ``reps`` repetitions per path."""
+    task = tiny_convex_task(n_clients=n_clients)
+    for algo, hp in DISPATCH_ALGOS:
+        sim = FedSim(task, algo, hp, n_clients)
+
+        def perround_once(seed):
+            k_init, keys = round_keys(jax.random.PRNGKey(seed), rounds)
+            st = sim.init(k_init)
+            t0 = time.perf_counter()
+            for t in range(rounds):
+                st, _ = sim.round(st, None, keys[t], sample_clients=s)
+            jax.block_until_ready(st.params)
+            return (time.perf_counter() - t0) / rounds * 1e6
+
+        def scanned_once(seed):
+            t0 = time.perf_counter()
+            st, _ = sim.run_scanned(jax.random.PRNGKey(seed), rounds,
+                                    sample_clients=s, eval_every=rounds)
+            jax.block_until_ready(st.params)
+            return (time.perf_counter() - t0) / rounds * 1e6
+
+        perround_once(0)                              # compile both paths
+        scanned_once(0)
+        us_pr = min(perround_once(r) for r in range(reps))
+        us_sc = min(scanned_once(r) for r in range(reps))
+        emit(f"scan_dispatch/{algo}/perround", us_pr,
+             f"rounds={rounds},S={s}/{n_clients}")
+        emit(f"scan_dispatch/{algo}/scanned", us_sc,
+             f"speedup_vs_perround={us_pr / us_sc:.2f}x")
+
+
+def chunking(rounds=64, n_clients=16, s=4):
+    """us/round vs eval_every (chunk length): the dispatch amortization
+    curve — chunk 1 pays the full per-chunk dispatch every round."""
+    task = tiny_convex_task(n_clients=n_clients)
+    sim = FedSim(task, "fedpm", HParams(lr=1.0, damping=1e-2), n_clients)
+    for ee in (1, 8, rounds):
+        sim.run_scanned(jax.random.PRNGKey(0), rounds, sample_clients=s,
+                        eval_every=ee)               # compile
+        t0 = time.perf_counter()
+        st, _ = sim.run_scanned(jax.random.PRNGKey(1), rounds,
+                                sample_clients=s, eval_every=ee)
+        jax.block_until_ready(st.params)
+        us = (time.perf_counter() - t0) / rounds * 1e6
+        emit(f"scan_chunking/fedpm/chunk{ee}", us, f"rounds={rounds}")
+
+
+def main():
+    dispatch()
+    chunking()
+
+
+if __name__ == "__main__":
+    main()

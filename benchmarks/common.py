@@ -23,7 +23,7 @@ from repro.models.simple import LogisticModel, MLPModel
 
 
 #: every ``emit`` also lands here — ``benchmarks.run --smoke`` serializes
-#: the registry (plus derived regression-gate ratios) to BENCH_pr3.json
+#: the registry (plus derived regression-gate ratios) to BENCH_pr4.json
 RECORDS: dict[str, dict] = {}
 
 
@@ -103,11 +103,13 @@ def time_convex_round(setup, algo, hp, sample_clients=0, reps=20, seed=0,
     st, _ = sim.round(st, batches, jax.random.PRNGKey(0),
                       participants=chosen)          # compile
     jax.block_until_ready(st.params)
+    # rounds DONATE their input state, so chain st forward (reusing one
+    # state would hand the jit deleted buffers)
     t0 = time.perf_counter()
     for t in range(reps):
-        st2, _ = sim.round(st, batches, jax.random.PRNGKey(t),
-                           participants=chosen)
-        jax.block_until_ready(st2.params)
+        st, _ = sim.round(st, batches, jax.random.PRNGKey(t),
+                          participants=chosen)
+        jax.block_until_ready(st.params)
     return (time.perf_counter() - t0) / reps * 1e6
 
 
@@ -147,9 +149,9 @@ def time_dnn_round(setup, algo, hp, k_steps, batch=64, reps=5, seed=0):
     st, _ = sim.round(st, batches, jax.random.PRNGKey(0))       # compile
     jax.block_until_ready(jax.tree.leaves(st.params)[0])
     t0 = time.perf_counter()
-    for t in range(reps):
-        st2, _ = sim.round(st, batches, jax.random.PRNGKey(t))
-        jax.block_until_ready(jax.tree.leaves(st2.params)[0])
+    for t in range(reps):   # chain st: rounds donate their input state
+        st, _ = sim.round(st, batches, jax.random.PRNGKey(t))
+        jax.block_until_ready(jax.tree.leaves(st.params)[0])
     return (time.perf_counter() - t0) / reps * 1e6
 
 

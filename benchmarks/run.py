@@ -10,11 +10,12 @@ benchmarks/common.py and EXPERIMENTS.md for the paper mapping:
   bench_profiling     → Table 16    bench_roofline     → §Roofline (dry-run)
 
 ``--smoke`` runs the CI perf-gate subset — packed-vs-per-leaf bank
-numbers, the K-sweep factor-once amortization, and the sharded-vs-vmap
-engine comparison on a forced 8-device host mesh — and serializes every
-emitted row plus machine-independent gate RATIOS to ``BENCH_pr3.json``.
+numbers, the K-sweep factor-once amortization, the sharded-vs-vmap
+engine comparison on a forced 8-device host mesh, and the scanned-vs-
+per-round dispatch ratio — and serializes every emitted row plus
+machine-independent gate RATIOS to ``BENCH_pr4.json``.
 ``benchmarks.bench_gate`` compares those ratios against the checked-in
-``benchmarks/baseline_pr3.json`` and fails tier-1 on >25% regressions
+``benchmarks/baseline_pr4.json`` and fails tier-1 on >25% regressions
 (scripts/ci.sh wires both up).
 """
 from __future__ import annotations
@@ -63,6 +64,15 @@ _GATE_SPECS = {
     "sharded_overhead_scaffold": (
         "sampling_sharded/scaffold/S16/sharded",
         "sampling_sharded/scaffold/S16/vmap", "higher", "sharded"),
+    # scan-compiled driver must keep amortizing dispatch: per-round us /
+    # scanned us ≥ 2x at the tiny smoke size (a collapse means per-round
+    # host work crept back into the scanned path)
+    "scan_dispatch_speedup_fedpm": (
+        "scan_dispatch/fedpm/perround", "scan_dispatch/fedpm/scanned",
+        "lower", "scan"),
+    "scan_dispatch_speedup_fedavg": (
+        "scan_dispatch/fedavg/perround", "scan_dispatch/fedavg/scanned",
+        "lower", "scan"),
 }
 
 
@@ -93,8 +103,9 @@ def _median_gates(samples: list[dict]) -> dict:
             for k, vs in merged.items()}
 
 
-def smoke(out_path: str = "BENCH_pr3.json") -> int:
-    from benchmarks import bench_cost, bench_local_epochs, bench_sampling
+def smoke(out_path: str = "BENCH_pr4.json") -> int:
+    from benchmarks import (bench_cost, bench_local_epochs, bench_sampling,
+                            bench_scan)
     from benchmarks.common import RECORDS, dnn_setup
 
     print("name,us_per_call,derived")
@@ -103,6 +114,11 @@ def smoke(out_path: str = "BENCH_pr3.json") -> int:
     failed = _run([
         ("cost", lambda: bench_cost.main(smoke=True)),
     ])
+    # scanned-vs-per-round dispatch ratio (bench does its own min-of-reps
+    # per path; outer repetitions median-merge the gate like the others)
+    for _ in range(2):
+        failed += _run([("scan", bench_scan.dispatch)])
+        samples.append(_gates(RECORDS, "scan"))
     # gate rows re-measured at default (non-smoke) sizes — the tiny smoke
     # shapes don't separate packed from per-leaf reliably — with the gate
     # ratio sampled per repetition and median-merged (see _GATE_SPECS)
@@ -119,7 +135,7 @@ def smoke(out_path: str = "BENCH_pr3.json") -> int:
     # repeating it would blow the ci.sh stage budget); its rows are
     # already steady-state means over 8 post-compile reps, and the
     # checked-in baselines carry the sharded family's wider noise
-    # envelope (see benchmarks/baseline_pr3.json meta)
+    # envelope (see benchmarks/baseline_pr4.json meta)
     failed += _run([("sharded", lambda: bench_sampling.sharded(reps=8))])
     samples.append(_gates(RECORDS, "sharded"))
 
@@ -138,7 +154,7 @@ def main() -> None:
     from benchmarks import (bench_convex, bench_cost, bench_dnn,
                             bench_femnist, bench_foof_samples,
                             bench_local_epochs, bench_profiling,
-                            bench_roofline, bench_sampling)
+                            bench_roofline, bench_sampling, bench_scan)
     print("name,us_per_call,derived")
     failed = _run([
         ("convex", lambda: bench_convex.main(rounds=10)),
@@ -148,6 +164,7 @@ def main() -> None:
         ("foof_samples", lambda: bench_foof_samples.main(rounds=8)),
         ("femnist", lambda: bench_femnist.main(rounds=8)),
         ("cost", bench_cost.main),
+        ("scan", bench_scan.main),
         ("profiling", bench_profiling.main),
         ("roofline", bench_roofline.main),
     ])

@@ -53,6 +53,21 @@ def main(rounds: int = 10, n_clients: int = 10, alpha: float = 0.1):
     for t, acc in zip(hist["round"], hist["metric"]):
         print(f"round {t:2d}  test_acc={acc:.3f}")
 
+    # The scan-compiled driver: attach a resident device bank to the task
+    # and whole chunks of eval_every rounds compile into ONE lax.scan
+    # program — cohorts and batches are drawn in-graph, so nothing
+    # touches the host between evals (~4-5x rounds/sec at small sizes).
+    print(f"\n== fedpm_foof, scan-compiled ({s} of {n_clients}/round) ==")
+    banked = task.with_data(ds.device_bank(steps=k, batch=64))
+    sim = FedSim(banked, "fedpm_foof", HParams(lr=0.3, damping=1.0),
+                 n_clients)
+    _, hist = sim.run_scanned(
+        jax.random.PRNGKey(0), rounds, sample_clients=s,
+        eval_every=max(1, rounds // 3),
+        eval_fn=lambda p: task.metric(p, test))
+    for t, acc in zip(hist["round"], hist["metric"]):
+        print(f"round {t:2d}  test_acc={acc:.3f}")
+
 
 if __name__ == "__main__":
     main()

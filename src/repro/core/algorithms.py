@@ -29,6 +29,17 @@ Categories (paper Table 1):
 Test 1's convex model) and a ``foof`` backend (per-layer input covariance,
 Test 2's DNNs).  FedPM with K = 1 and full Hessians is algebraically equal
 to FedNL's global update (Eq. 9 ≡ Eq. 6) — asserted in tests.
+
+Round-body PURITY contract: client/server fns (and anything they put in
+``msgs`` — per-round metrics like ``loss`` included) must be pure jax —
+no host callbacks (``jax.debug.callback`` / ``io_callback`` / ``print``
+side channels), no host-dependent control flow.  ``FedSim.run_scanned``
+compiles whole chunks of rounds into one ``lax.scan`` program; a host
+callback in the round body would force a host round-trip per round and
+break the scanned driver's one-dispatch-per-chunk guarantee (and its
+bit-for-bit equivalence with the per-round oracle).  Metrics that need
+host aggregation belong at chunk boundaries (``eval_fn``), not in the
+round body.
 """
 from __future__ import annotations
 

@@ -5,11 +5,20 @@ engine vmaps over.  Clients hold ragged shards (Dirichlet partition); each
 round every client samples K·B indices from its own shard (with replacement
 when the shard is small — the uniform-K requirement of a vmapped engine,
 DESIGN.md §7).
+
+``DeviceDataBank`` (built by :meth:`FederatedDataset.device_bank`) is the
+scan-compiled engine's data path: the whole federated dataset lives
+RESIDENT on device as padded per-client rows, and per-round batches are
+drawn in-graph by ``bank.sample(rng, participants)`` — no host round-trip
+between evals.  Ragged (FEMNIST-class writer) shards are padded to the max
+shard length; sampling draws indices uniformly below each client's TRUE
+shard size, so padding rows are never read.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -52,6 +61,24 @@ class FederatedDataset:
         return {"x": jnp.asarray(self.test_x[:max_n]),
                 "y": jnp.asarray(self.test_y[:max_n])}
 
+    def device_bank(self, steps: int, batch: int) -> "DeviceDataBank":
+        """Upload the whole partitioned dataset as a resident
+        :class:`DeviceDataBank` — the scan-compiled engine's data path.
+
+        ``batch == 0`` selects full-shard mode (each of ``steps`` steps
+        sees the client's first ``min-shard-size`` samples, matching
+        :meth:`client_full_batches`)."""
+        sizes = np.array([len(s) for s in self.shards], np.int32)
+        m = int(sizes.max())
+        # cyclic pad to M rows; padding is never sampled (ridx < size)
+        rows = [np.asarray(s)[np.arange(m) % len(s)] for s in self.shards]
+        idx = np.stack(rows)
+        return DeviceDataBank(
+            x=jnp.asarray(self.x[idx]), y=jnp.asarray(self.y[idx]),
+            sizes=jnp.asarray(sizes),
+            spec=_BankSpec(steps=steps, batch=batch,
+                           min_size=int(sizes.min())))
+
     def client_full_batches(self, k_steps: int) -> dict:
         """[N, K, M, ...] — every step sees the client's full shard (Test 1:
         full gradients/Hessians). Requires equal shard sizes."""
@@ -63,6 +90,73 @@ class FederatedDataset:
         return {"x": jnp.asarray(np.tile(xs[:, None], reps)),
                 "y": jnp.asarray(np.tile(ys[:, None],
                                          (1, k_steps) + (1,) * (self.y.ndim)))}
+
+
+@dataclass(frozen=True)
+class _BankSpec:
+    """Static half of a DeviceDataBank (shapes the scanned program keys on)."""
+    steps: int
+    batch: int                        # 0 → full-shard mode
+    min_size: int
+
+
+@dataclass(frozen=True)
+class DeviceDataBank:
+    """Resident federated data bank for in-graph batch construction.
+
+    ``x``/``y`` are ``[N, M, ...]`` padded per-client rows (cyclic pad to
+    the max shard length M); ``sizes[i] <= M`` is client *i*'s true shard
+    size.  Two sampling modes, fixed at construction:
+
+    * ``batch > 0`` — each call draws ``steps·batch`` indices per
+      participant, uniform WITH replacement below the client's true size
+      (the scan-compatible analog of :func:`build_round_batches`; the
+      without-replacement host path stays available as the seeded numpy
+      oracle for ``FedSim.run``), returning ``[S, steps, batch, ...]``.
+    * ``batch == 0`` — full-shard mode (Test 1): every step sees the
+      client's first ``min_size`` samples, tiled over ``steps``, matching
+      :meth:`FederatedDataset.client_full_batches`; the rng is unused.
+    """
+    x: jax.Array
+    y: jax.Array
+    sizes: jax.Array                  # [N] int32 true shard sizes
+    spec: _BankSpec
+
+    @property
+    def n_clients(self) -> int:
+        return self.x.shape[0]
+
+    def sample(self, rng, participants) -> dict:
+        """In-graph per-round batches for the cohort ``participants`` [S]."""
+        steps, batch = self.spec.steps, self.spec.batch
+        participants = jnp.asarray(participants, jnp.int32)
+        if batch == 0:
+            m = self.spec.min_size
+            take = lambda bank: jnp.take(bank, participants, axis=0)[:, :m]
+            tile = lambda rows: jnp.broadcast_to(
+                rows[:, None], (rows.shape[0], steps, *rows.shape[1:]))
+            return {"x": tile(take(self.x)), "y": tile(take(self.y))}
+        need = steps * batch
+        keys = jax.random.split(rng, participants.shape[0])
+
+        def one(key, cid):
+            ridx = jax.random.randint(key, (need,), 0,
+                                      jnp.take(self.sizes, cid))
+
+            def row(bank):
+                r = jnp.take(jnp.take(bank, cid, axis=0), ridx, axis=0)
+                return r.reshape(steps, batch, *r.shape[1:])
+
+            return {"x": row(self.x), "y": row(self.y)}
+
+        return jax.vmap(one)(keys, participants)
+
+
+# the bank crosses jit boundaries as an ARGUMENT (arrays traced, spec
+# static) — never closure-captured into a program as baked-in constants
+jax.tree_util.register_dataclass(DeviceDataBank,
+                                 data_fields=["x", "y", "sizes"],
+                                 meta_fields=["spec"])
 
 
 def build_round_batches(ds: FederatedDataset, steps: int, batch: int,

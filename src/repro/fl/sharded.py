@@ -47,8 +47,8 @@ from repro.distributed.axes import CLIENTS_AXIS, make_client_mesh, shard_map
 PyTree = Any
 
 __all__ = ["CLIENTS_AXIS", "make_client_mesh", "bucket_participants",
-           "shard_clients", "replicate", "make_sharded_round",
-           "bank_shard_rows"]
+           "bucket_cohort", "shard_clients", "replicate",
+           "make_sharded_round", "bank_shard_rows"]
 
 
 def _n_shards(mesh: jax.sharding.Mesh) -> int:
@@ -91,6 +91,32 @@ def bucket_participants(idx: np.ndarray, weights: np.ndarray, n_clients: int,
     local[ds, slot] = r[order]
     pos[ds, slot] = order
     w[ds, slot] = weights[order]
+    return local, pos, w
+
+
+def bucket_cohort(idx: jax.Array, weights: jax.Array, n_clients: int,
+                  n_shards: int):
+    """In-graph counterpart of :func:`bucket_participants` — traceable
+    inside the scanned round body (``FedSim.run_scanned``).
+
+    Requires ``idx`` SORTED ascending (what ``sample_cohort`` produces);
+    for sorted cohorts the output is bit-identical to the host bucketing
+    (both group by owner shard preserving cohort order).  The cap
+    ``min(S, shard_n)`` is a static function of S, so one program serves
+    every cohort of a chunk.
+    """
+    shard_n = n_clients // n_shards
+    s = idx.shape[0]
+    cap = min(s, shard_n)
+    d = idx // shard_n
+    r = (idx % shard_n).astype(jnp.int32)
+    # rank within the owner-shard group: position minus first occurrence
+    slot = jnp.arange(s) - jnp.searchsorted(d, d)
+    local = jnp.full((n_shards, cap), shard_n, jnp.int32).at[d, slot].set(r)
+    pos = jnp.zeros((n_shards, cap), jnp.int32).at[d, slot].set(
+        jnp.arange(s, dtype=jnp.int32))
+    w = jnp.zeros((n_shards, cap), jnp.float32).at[d, slot].set(
+        weights.astype(jnp.float32))
     return local, pos, w
 
 

@@ -24,6 +24,22 @@ cohort participates there, matching the gathered contract).
 and server aggregation is per-shard partial reductions + cross-shard
 psums.  The default vmap path stays the single-device oracle the sharded
 path is contract-tested against.
+
+Two drivers sit on top of the round:
+
+* ``run`` — the per-round host loop (numpy cohort sampling, host
+  ``batch_fn``, one jit dispatch per round);
+* ``run_scanned`` — the scan-compiled driver: chunks of ``eval_every``
+  rounds compile into ONE ``lax.scan`` program, cohorts drawn in-graph
+  (:func:`sample_cohort`) and batches drawn in-graph from the task's
+  resident :class:`~repro.data.federated.DeviceDataBank`.  The banked
+  per-round ``round(client_batches=None)`` over :func:`round_keys` keys
+  is its bit-for-bit oracle.
+
+Every round/chunk jit DONATES (params, server, clients): the [N, ...]
+client bank updates in place (single-buffered) and a ``FedState`` is
+consumed by the round it enters — chain states forward or
+``state.copy()`` to branch.
 """
 from __future__ import annotations
 
@@ -48,6 +64,40 @@ class FedState:
     server: PyTree
     clients: PyTree       # stacked leading N
     round: int = 0
+
+    def copy(self) -> "FedState":
+        """A deep on-device copy.  The round jits DONATE params/server/
+        clients (the [N, ...] bank updates in place instead of
+        double-buffering), so a state is consumed by the round it enters —
+        copy first to round twice from the same state."""
+        cp = partial(jax.tree.map, jnp.copy)
+        return FedState(params=cp(self.params), server=cp(self.server),
+                        clients=cp(self.clients), round=self.round)
+
+
+def sample_cohort(key, n: int, s: int) -> jax.Array:
+    """Draw S unique participant ids from [0, N), sorted ascending.
+
+    THE in-graph sampling oracle contract: ``run_scanned`` calls this
+    inside the scanned round body, and evaluating the same function
+    eagerly at the same key reproduces the scanned cohort exactly — the
+    per-round ``FedSim.round`` loop fed those cohorts is the bit-for-bit
+    oracle the scanned driver is contract-tested against.  (The host
+    numpy sampler in ``FedSim.run`` stays the seeded oracle for the
+    legacy per-round driver.)
+    """
+    return jnp.sort(jax.random.permutation(key, n)[:s]).astype(jnp.int32)
+
+
+def round_keys(rng, rounds: int):
+    """``run_scanned``'s rng discipline: ``(init_key, keys[rounds])``.
+
+    Round ``t`` consumes ``kc, kb, kr = jax.random.split(keys[t], 3)`` —
+    cohort draw, batch draw, round rng.  Oracle loops reproduce the
+    scanned stream by doing the same splits host-side.
+    """
+    k_init, k_rounds = jax.random.split(rng)
+    return k_init, jax.random.split(k_rounds, rounds)
 
 
 def _batch_fn_takes_participants(batch_fn) -> bool:
@@ -82,17 +132,38 @@ class FedSim:
         self.n = n_clients
         self.mesh = mesh
         # one jit object; XLA caches a program per participant count S
-        # (``full`` is static: the full-cohort program has no gather/scatter)
-        self._round_jit = jax.jit(self._round, static_argnames=("full",))
-        if mesh is not None:
+        # (``full`` is static: the full-cohort program has no gather/scatter).
+        # params/server/clients are DONATED: the scatter aliases the [N, ...]
+        # client bank in place instead of allocating a second copy — a state
+        # is consumed by the round it enters (FedState.copy to reuse one).
+        self._round_jit = jax.jit(self._round1, static_argnames=("full",),
+                                  donate_argnums=(0, 1, 2))
+        self._scan_jit = jax.jit(self._scan_rounds,
+                                 static_argnames=("s", "scheduled"),
+                                 donate_argnums=(0, 1, 2))
+        self._full_idx = None         # cached identity-cohort device arrays
+        self._full_w = None
+        if mesh is None:
+            self._banked_jit = jax.jit(self._round_banked,
+                                       static_argnames=("s", "sample"),
+                                       donate_argnums=(0, 1, 2))
+        else:
             from repro.fl import sharded as Sh
             self._sharded = Sh
             self._n_shards = Sh._n_shards(mesh)
             # jit cache keys on the cohort size S only: bucket shapes are
             # [n_shards, min(S, shard_n)] regardless of the random cohort
+            self._sharded_round_fn = Sh.make_sharded_round(
+                task, self.algo, hp, n_clients, mesh)
             self._sharded_round_jit = jax.jit(
-                Sh.make_sharded_round(task, self.algo, hp, n_clients, mesh),
-                static_argnames=("s", "bucketed"))
+                self._sharded_round1, static_argnames=("s", "bucketed"),
+                donate_argnums=(0, 1, 2))
+            self._scan_sharded_jit = jax.jit(
+                self._scan_rounds_sharded,
+                static_argnames=("s", "scheduled"), donate_argnums=(0, 1, 2))
+            self._banked_jit = jax.jit(self._sharded_round_banked,
+                                       static_argnames=("s", "sample"),
+                                       donate_argnums=(0, 1, 2))
 
     def init(self, rng) -> FedState:
         params = self.task.init(rng)
@@ -108,6 +179,100 @@ class FedSim:
         return FedState(params=params, server=server, clients=clients)
 
     # ------------------------------------------------------------ round ----
+
+    @staticmethod
+    def _scan_of_one(round_fn, carry):
+        """Run one round as a length-1 ``lax.scan`` over ``carry`` =
+        (params, server, clients).
+
+        The per-round jits go through here so their round body compiles in
+        the SAME loop-body context as ``run_scanned``'s chunked scan — XLA
+        fuses (FMA-contracts) straight-line code differently from while
+        bodies by ~1 ulp, and the scanned driver is contract-tested to
+        match the per-round oracle bit-for-bit (tests/test_scan.py).
+        """
+        def body(c, _):
+            p, sv, cl, m = round_fn(*c)
+            return (p, sv, cl), m
+
+        (p, sv, cl), ms = jax.lax.scan(body, carry, None, length=1)
+        return p, sv, cl, jax.tree.map(lambda x: x[0], ms)
+
+    def _round1(self, params, server, clients, client_batches, rng, idx,
+                weights, full):
+        """jit target for :meth:`round` — ``_round`` via a length-1 scan."""
+        return self._scan_of_one(
+            lambda p, sv, c: self._round(p, sv, c, client_batches, rng,
+                                         idx, weights, full=full),
+            (params, server, clients))
+
+    def _sharded_round1(self, params, server, clients, batches, rng, local,
+                        pos, w, *, s, bucketed):
+        """jit target for the sharded round — same length-1-scan context."""
+        return self._scan_of_one(
+            lambda p, sv, c: self._sharded_round_fn(
+                p, sv, c, batches, rng, local, pos, w, s=s,
+                bucketed=bucketed),
+            (params, server, clients))
+
+    # ------------------------------------------------- banked rounds -------
+
+    def _cohort(self, kc, idx, *, s, sample):
+        """The round body's cohort: identity, in-graph draw, or caller's."""
+        if s == self.n:
+            return jnp.arange(self.n, dtype=jnp.int32)
+        return sample_cohort(kc, self.n, s) if sample else idx
+
+    def _sharded_round_impl(self, params, server, clients, batches, kr, idx,
+                            weights, s: int):
+        """One sharded round from a cohort + [S] batches, fully in-graph:
+        bucket the cohort (``sharded.bucket_cohort``), pre-bucket the
+        participant batches into shard order, run the shard_map round."""
+        local, pos, w = self._sharded.bucket_cohort(idx, weights, self.n,
+                                                    self._n_shards)
+        flat_pos = pos.reshape(-1)
+        b = jax.tree.map(lambda x: jnp.take(x, flat_pos, axis=0), batches)
+        return self._sharded_round_fn(params, server, clients, b, kr, local,
+                                      pos, w, s=s, bucketed=True)
+
+    def _banked_body(self, round_impl, bank, *, s, sample):
+        """One banked round: split the round key, draw cohort + batches
+        in-graph, run the engine round.  Shared (same trace) between the
+        banked per-round jits and ``run_scanned``'s scan body — that
+        sharing is what makes the two bit-for-bit comparable."""
+        def fn(key, idx, params, server, clients):
+            kc, kb, kr = jax.random.split(key, 3)
+            ii = self._cohort(kc, idx, s=s, sample=sample)
+            weights = jnp.ones((s,), jnp.float32)
+            batches = bank.sample(kb, ii)
+            return round_impl(params, server, clients, batches, kr, ii,
+                              weights)
+        return fn
+
+    def _vmap_round_impl(self, s: int):
+        return lambda p, sv, c, b, kr, idx, w: self._round(
+            p, sv, c, b, kr, idx, w, full=s == self.n)
+
+    def _round_banked(self, params, server, clients, bank, key, idx, *,
+                      s, sample):
+        """jit target for banked rounds (``round(..., client_batches=None)``)
+        on the vmap engine."""
+        fn = self._banked_body(self._vmap_round_impl(s), bank, s=s,
+                               sample=sample)
+        return self._scan_of_one(
+            lambda p, sv, c: fn(key, idx, p, sv, c),
+            (params, server, clients))
+
+    def _sharded_round_banked(self, params, server, clients, bank, key, idx,
+                              *, s, sample):
+        """Banked-round jit target on the mesh-sharded engine."""
+        fn = self._banked_body(
+            lambda p, sv, c, b, kr, ii, w: self._sharded_round_impl(
+                p, sv, c, b, kr, ii, w, s),
+            bank, s=s, sample=sample)
+        return self._scan_of_one(
+            lambda p, sv, c: fn(key, idx, p, sv, c),
+            (params, server, clients))
 
     def _round(self, params, server, clients, client_batches, rng, idx,
                weights, full):
@@ -164,7 +329,8 @@ class FedSim:
         return new_params, new_server, new_clients, metrics
 
     def round(self, state: FedState, client_batches, rng,
-              mask=None, *, participants=None) -> tuple[FedState, dict]:
+              mask=None, *, participants=None,
+              sample_clients: int = 0) -> tuple[FedState, dict]:
         """One round.
 
         ``participants``: host int array [S] of unique client ids
@@ -177,17 +343,37 @@ class FedSim:
         ``client_batches`` is then unambiguously the client-ordered bank
         (pre-gathered batches in a permuted participant order are only
         meaningful for S < N).
+
+        ``client_batches=None`` selects the BANKED round: the task's
+        resident data bank draws the batches in-graph, and ``rng`` is the
+        round key (split three ways inside the program — cohort, batch,
+        round, exactly :func:`round_keys`' discipline).  With
+        ``sample_clients`` ∈ (0, N) the cohort itself is drawn in-graph
+        by :func:`sample_cohort`; with ``participants`` (sorted unique)
+        the cohort is the caller's; with neither, everyone participates.
+        A banked ``round()`` loop over :func:`round_keys` keys is the
+        per-round oracle ``run_scanned`` matches bit-for-bit.
         """
+        if client_batches is None:
+            return self._round_banked_host(state, rng, mask, participants,
+                                           sample_clients)
+        if sample_clients:
+            raise ValueError("sample_clients= is the banked round's "
+                             "in-graph cohort draw (client_batches=None); "
+                             "with explicit batches pass participants= for "
+                             "the cohort they belong to")
+        # weights stay NUMPY through canonicalization — one device upload
+        # at the jit boundary, no host→device transfer per reorder
         if participants is not None:
             idx = np.asarray(participants)
-            weights = jnp.ones((idx.shape[0],), jnp.float32)
+            weights = np.ones((idx.shape[0],), np.float32)
         elif mask is not None:
             mask_np = np.asarray(mask)
             idx = np.flatnonzero(mask_np > 0)
-            weights = jnp.asarray(mask_np[idx], jnp.float32)
+            weights = np.asarray(mask_np[idx], np.float32)
         else:
             idx = np.arange(self.n)
-            weights = jnp.ones((self.n,), jnp.float32)
+            weights = np.ones((self.n,), np.float32)
         if idx.size == 0:
             # empty cohort: nothing trains, nothing aggregates
             return FedState(params=state.params, server=state.server,
@@ -205,15 +391,65 @@ class FedSim:
             # exactly [0, N); reorder weights to match client order
             order = np.argsort(idx)
             idx = idx[order]
-            weights = weights[jnp.asarray(order)]
+            weights = weights[order]
         if self.mesh is not None:
             p, s, c, metrics = self._round_sharded(state, client_batches,
                                                    rng, idx, weights)
         else:
+            if full and np.all(weights == 1.0):
+                # identity cohort: reuse the cached device arrays instead
+                # of re-uploading idx/ones every round
+                if self._full_idx is None:
+                    self._full_idx = jnp.arange(self.n, dtype=jnp.int32)
+                    self._full_w = jnp.ones((self.n,), jnp.float32)
+                idx_dev, w_dev = self._full_idx, self._full_w
+            else:
+                idx_dev = jnp.asarray(idx, jnp.int32)
+                w_dev = jnp.asarray(weights, jnp.float32)
             p, s, c, metrics = self._round_jit(
                 state.params, state.server, state.clients, client_batches,
-                rng, jnp.asarray(idx, jnp.int32), weights, full=full)
+                rng, idx_dev, w_dev, full=full)
         return FedState(params=p, server=s, clients=c,
+                        round=state.round + 1), metrics
+
+    def _round_banked_host(self, state: FedState, rng, mask, participants,
+                           sample_clients: int):
+        """Host-side half of the banked round: resolve the cohort mode,
+        validate, dispatch the engine's banked jit."""
+        bank = getattr(self.task, "data", None)
+        if bank is None:
+            raise ValueError("banked rounds (client_batches=None) need a "
+                             "resident data bank: "
+                             "task.with_data(ds.device_bank(steps, batch))")
+        if mask is not None:
+            raise ValueError("banked rounds take participants=/"
+                             "sample_clients=, not mask= (weights are "
+                             "uniform in-graph)")
+        if sample_clients and participants is not None:
+            raise ValueError("pass sample_clients= OR participants=")
+        idx_dev = None
+        if 0 < sample_clients < self.n:
+            s, sample = int(sample_clients), True
+        elif participants is not None:
+            idx = np.asarray(participants)
+            if idx.size == 0:
+                return FedState(params=state.params, server=state.server,
+                                clients=state.clients,
+                                round=state.round + 1), {}
+            if (idx.min() < 0 or idx.max() >= self.n
+                    or np.unique(idx).size != idx.size
+                    or not np.all(np.diff(idx) > 0)):
+                raise ValueError("banked participants must be sorted unique "
+                                 f"ids in [0, {self.n})")
+            s, sample = int(idx.size), False
+            if s < self.n:
+                idx_dev = jnp.asarray(idx, jnp.int32)
+        else:
+            s, sample = self.n, False
+        p, sv, c, metrics = self._banked_jit(
+            state.params, state.server, state.clients, bank, rng, idx_dev,
+            s=s, sample=sample)
+        return FedState(params=p, server=sv, clients=c,
                         round=state.round + 1), metrics
 
     def _round_sharded(self, state: FedState, client_batches, rng, idx,
@@ -241,6 +477,146 @@ class FedSim:
             state.params, state.server, state.clients, batches, rng,
             jnp.asarray(local), jnp.asarray(pos), jnp.asarray(w),
             s=s, bucketed=bucketed)
+
+    # ------------------------------------------------- scanned rounds ------
+
+    def _scan_body(self, s: int, scheduled: bool, bank, round_impl):
+        """Shared scan body for both engines: one :meth:`_banked_body`
+        round per step.  A scheduled row whose first id is negative marks
+        an EMPTY cohort — the round is skipped entirely (lax.cond
+        identity), matching ``round()``'s S == 0 short-circuit.
+        """
+        fn = self._banked_body(round_impl, bank, s=s, sample=not scheduled)
+
+        def body(carry, xs):
+            key, cohort = xs if scheduled else (xs, None)
+
+            def live(args):
+                p, sv, c, m = fn(key, cohort, *args)
+                loss = m.get("client_loss", jnp.float32(jnp.nan)) \
+                    if isinstance(m, dict) else jnp.float32(jnp.nan)
+                return p, sv, c, jnp.asarray(loss, jnp.float32)
+
+            if scheduled:
+                p, sv, c, loss = jax.lax.cond(
+                    cohort[0] >= 0, live,
+                    lambda args: (*args, jnp.float32(jnp.nan)), carry)
+            else:
+                p, sv, c, loss = live(carry)
+            return (p, sv, c), loss
+
+        return body
+
+    def _scan_chunk(self, round_impl, carry, keys, cohorts, bank, *,
+                    s: int, scheduled: bool):
+        """Scan ``round_impl`` over one chunk of ``len(keys)`` rounds —
+        the engine-agnostic chunk tail shared by both scan jits."""
+        body = self._scan_body(s, scheduled, bank, round_impl)
+        xs = (keys, cohorts) if scheduled else keys
+        (p, sv, c), losses = jax.lax.scan(body, carry, xs)
+        return p, sv, c, losses
+
+    def _scan_rounds(self, params, server, clients, keys, cohorts, bank, *,
+                     s: int, scheduled: bool):
+        """One compiled chunk of ``len(keys)`` rounds on the vmap engine
+        (jit cache keys once per (chunk length, S); carry donated)."""
+        return self._scan_chunk(self._vmap_round_impl(s),
+                                (params, server, clients), keys, cohorts,
+                                bank, s=s, scheduled=scheduled)
+
+    def _scan_rounds_sharded(self, params, server, clients, keys, cohorts,
+                             bank, *, s: int, scheduled: bool):
+        """One compiled chunk on the mesh-sharded engine: lax.scan OUTSIDE
+        shard_map, in-graph cohort bucketing (``sharded.bucket_cohort``),
+        fixed cohort cap ``min(S, shard_n)`` per chunk so the program
+        compiles once per (chunk length, S)."""
+        return self._scan_chunk(
+            lambda p, sv, c, b, kr, idx, w: self._sharded_round_impl(
+                p, sv, c, b, kr, idx, w, s),
+            (params, server, clients), keys, cohorts, bank, s=s,
+            scheduled=scheduled)
+
+    def run_scanned(self, rng, rounds: int, *, sample_clients: int = 0,
+                    eval_fn=None, eval_every: int = 1, cohorts=None):
+        """Scan-compiled multi-round driver: chunks of ``eval_every``
+        rounds compile into ONE ``lax.scan`` program — one dispatch per
+        chunk instead of one per round, no host round-trips between evals.
+
+        Requires a task with a resident data bank
+        (``task.with_data(ds.device_bank(...))``): batches are drawn
+        in-graph by ``task.sample_batches``.  Cohorts are drawn in-graph
+        by :func:`sample_cohort` when ``sample_clients`` ∈ (0, N), or
+        supplied as ``cohorts`` — a host int array [rounds, S] of sorted
+        unique ids per row (a row of all -1 is an empty cohort: that
+        round is skipped, matching ``round()``'s short-circuit), e.g.
+        pre-drawn by a seeded numpy oracle.
+
+        params/server/clients are donated through each chunk (the client
+        bank updates in place); per-chunk boundaries run ``eval_fn`` on
+        the host.  Returns ``(final_state, history)`` like ``run`` —
+        evals land at chunk ends (rounds eval_every-1, 2·eval_every-1,
+        ..., rounds-1) rather than ``run``'s chunk starts.
+
+        Contract: at a fixed ``rng``, this matches the per-round banked
+        ``round()`` oracle bit-for-bit on both engines
+        (tests/test_scan.py)::
+
+            k_init, keys = round_keys(rng, rounds)
+            state = sim.init(k_init)
+            for t in range(rounds):
+                state, _ = sim.round(state, None, keys[t],
+                                     sample_clients=S)   # or participants=
+        """
+        bank = getattr(self.task, "data", None)
+        if bank is None:
+            raise ValueError(
+                "run_scanned needs a resident data bank: "
+                "task.with_data(ds.device_bank(steps, batch))")
+        if eval_every < 1:
+            raise ValueError(f"eval_every must be >= 1 (one chunk per "
+                             f"eval); got {eval_every} — for no evals, "
+                             f"pass eval_every=rounds and eval_fn=None")
+        if cohorts is not None:
+            cohorts = np.asarray(cohorts, np.int32)
+            if cohorts.ndim != 2 or cohorts.shape[0] != rounds:
+                raise ValueError(f"cohorts must be [rounds={rounds}, S]; "
+                                 f"got {cohorts.shape}")
+            s = int(cohorts.shape[1])
+            live = cohorts[cohorts[:, 0] >= 0]
+            dead = cohorts[cohorts[:, 0] < 0]
+            if live.size and (np.any(np.diff(live, axis=1) <= 0)
+                              or live.min() < 0 or live.max() >= self.n):
+                raise ValueError("cohort rows must be sorted unique ids in "
+                                 f"[0, {self.n}) (or all -1 for an empty "
+                                 "round)")
+            if dead.size and not np.all(dead == -1):
+                raise ValueError("an empty cohort row must be ALL -1 — a "
+                                 "row mixing -1 with real ids is ambiguous "
+                                 "(it would be silently skipped, not "
+                                 "partially trained)")
+            scheduled = True
+        else:
+            s = (sample_clients if 0 < sample_clients < self.n else self.n)
+            scheduled = False
+        k_init, keys = round_keys(rng, rounds)
+        state = self.init(k_init)
+        scan = (self._scan_sharded_jit if self.mesh is not None
+                else self._scan_jit)
+        hist = {"round": [], "metric": [], "loss": []}
+        t = 0
+        while t < rounds:
+            chunk = min(eval_every, rounds - t)
+            co = (jnp.asarray(cohorts[t:t + chunk]) if scheduled else None)
+            p, sv, c, losses = scan(state.params, state.server,
+                                    state.clients, keys[t:t + chunk], co,
+                                    bank, s=s, scheduled=scheduled)
+            t += chunk
+            state = FedState(params=p, server=sv, clients=c, round=t)
+            if eval_fn is not None:
+                hist["round"].append(t - 1)
+                hist["metric"].append(float(eval_fn(state.params)))
+                hist["loss"].append(float(losses[-1]))
+        return state, hist
 
     # ------------------------------------------------------------ loop -----
 

@@ -4,9 +4,17 @@ A *task* exposes exactly what algorithms consume:
     loss_grad(params, batch) -> (loss, grads)
     grams(params, batch)     -> FOOF gram tree       (SOPM/foof methods)
     hessian(params, batch)   -> [d, d]               (flat convex only)
+
+Tasks optionally carry a RESIDENT federated data bank (``data``, a
+:class:`repro.data.federated.DeviceDataBank`): ``sample_batches(rng,
+participants)`` then draws per-round client batches entirely in-graph —
+the data path ``FedSim.run_scanned`` scans over, so synthetic/FEMNIST-class
+workloads never leave the device between evals.  ``with_data`` attaches a
+bank to an existing task.
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass
 from typing import Any
 
@@ -17,10 +25,29 @@ from repro.models.simple import (CNNModel, LogisticModel, MLPModel,
                                  ce_loss_and_grams)
 
 
+class _DataBankMixin:
+    """``sample_batches`` for tasks that carry a resident data bank."""
+
+    def with_data(self, bank):
+        """A copy of this task with the resident data bank attached."""
+        return dataclasses.replace(self, data=bank)
+
+    def sample_batches(self, rng, participants):
+        """In-graph [S, K, B, ...] batches for the cohort ``participants``
+        (scan-safe: pure jax.random draws from the resident bank)."""
+        if self.data is None:
+            raise ValueError(
+                f"{type(self).__name__} has no resident data bank; build "
+                "one with FederatedDataset.device_bank(...) and attach it "
+                "via task.with_data(bank) to use the scanned driver")
+        return self.data.sample(rng, participants)
+
+
 @dataclass(frozen=True)
-class ConvexTask:
+class ConvexTask(_DataBankMixin):
     """Test 1: logistic regression with analytic grad/Hessian, flat θ ∈ R^d."""
     model: LogisticModel
+    data: Any = None                  # optional resident DeviceDataBank
 
     def init(self, rng):
         return self.model.init(rng)
@@ -40,9 +67,10 @@ class ConvexTask:
 
 
 @dataclass(frozen=True)
-class DNNTask:
+class DNNTask(_DataBankMixin):
     """Test 2: MLP / CNN classification with FOOF grams."""
     model: Any   # MLPModel | CNNModel
+    data: Any = None                  # optional resident DeviceDataBank
 
     def init(self, rng):
         return self.model.init(rng)

@@ -34,6 +34,13 @@ def ns_inverse(a: jax.Array, *, iters: int = 20, damping: float = 0.0,
     return out.reshape(*lead, bs, bs)
 
 
+#: MXU lane width — the fused kernel's RHS is zero-padded up to this so
+#: the X@B matmul runs full-tile (narrow packed RHS groups, e.g. a lone
+#: k=8 output column group, otherwise occupy a sliver of the 128-wide
+#: systolic array)
+_MXU_LANE = 128
+
+
 @partial(jax.jit, static_argnames=("iters", "damping", "use_pallas"))
 def ns_solve(a: jax.Array, b: jax.Array, *, iters: int = 20,
              damping: float = 0.0, use_pallas: bool | None = None
@@ -41,25 +48,34 @@ def ns_solve(a: jax.Array, b: jax.Array, *, iters: int = 20,
     """Fused batched (A+δI)⁻¹ @ B over a packed bank [..., bs, bs] /
     [..., bs, k] — the inverse stays in VMEM (one kernel per call).
 
-    Leading dims flatten into the kernel grid.  Mismatched leading dims
-    (one A applied to many B) route through ns_inverse + a broadcasting
-    matmul — fusing there would re-iterate NS per broadcast copy.  Shapes
-    whose VMEM footprint (A, X, AX + B, XB fp32) would exceed ~12 MB fall
-    back the same way; non-TPU interpret mode additionally caps work."""
+    Leading dims flatten into the kernel grid.  The RHS lane k is
+    zero-padded up to the 128-wide MXU tile before the kernel (the extra
+    zero columns cost nothing beyond the tile already being resident) and
+    sliced back after — padded ≡ unpadded, covered in tests/test_kernels.
+    Mismatched leading dims (one A applied to many B) route through
+    ns_inverse + a broadcasting matmul — fusing there would re-iterate NS
+    per broadcast copy.  Shapes whose VMEM footprint (A, X, AX + B_pad,
+    XB_pad fp32) would exceed ~12 MB fall back the same way; non-TPU
+    interpret mode additionally caps work."""
     use_pallas = _on_tpu() if use_pallas is None else use_pallas
     bs, k = a.shape[-1], b.shape[-1]
+    # pad exactly when the MXU executes — CPU interpret mode has no
+    # systolic array to fill, and 16x-ing its column work is pure waste
+    kp = -(-k // _MXU_LANE) * _MXU_LANE if _on_tpu() else k
     lead = a.shape[:-2]
     if lead != b.shape[:-2]:
         inv = ns_inverse(a, iters=iters, damping=damping,
                          use_pallas=use_pallas)
         return inv @ b.astype(jnp.float32)
-    if not use_pallas and (bs > 256 or bs * k > 1 << 16):
+    if not use_pallas and (bs > 256 or bs * kp > 1 << 16):
         return ns_solve_ref(a, b, iters=iters, damping=damping)
-    if bs > 1024 or (3 * bs * bs + 2 * bs * k) * 4 > 12 * 2 ** 20:
+    if bs > 1024 or (3 * bs * bs + 2 * bs * kp) * 4 > 12 * 2 ** 20:
         inv = ns_inverse(a, iters=iters, damping=damping,
                          use_pallas=use_pallas)
         return (inv @ b.astype(jnp.float32))
-    out = ns_solve_blocks(a.reshape(-1, bs, bs), b.reshape(-1, bs, k),
+    bp = b if kp == k else jnp.concatenate(
+        [b, jnp.zeros((*lead, bs, kp - k), b.dtype)], axis=-1)
+    out = ns_solve_blocks(a.reshape(-1, bs, bs), bp.reshape(-1, bs, kp),
                           iters=iters, damping=damping,
                           interpret=not _on_tpu())
-    return out.reshape(*lead, bs, k)
+    return out.reshape(*lead, bs, kp)[..., :k]

@@ -99,11 +99,12 @@ def test_client_sampling_mask(convex_setup):
     st = sim.init(rng)
     st.params = convex_setup["theta_star"] + 0.05
     mask = jnp.zeros((ds.n_clients,)).at[jnp.arange(8)].set(1.0)
+    params0 = jax.tree.map(jnp.copy, st.params)   # round() donates st
     st2, _ = sim.round(st, convex_setup["batches"], rng, mask)
     # manual: run the algorithm on only the first 8 clients
     sub = FedSim(task, "fedpm", hp, 8)
     sts = sub.init(rng)
-    sts.params = st.params
+    sts.params = params0
     sub_batches = jax.tree.map(lambda x: x[:8], convex_setup["batches"])
     st3, _ = sub.round(sts, sub_batches, rng)
     np.testing.assert_allclose(np.asarray(st2.params), np.asarray(st3.params),

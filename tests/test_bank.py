@@ -184,13 +184,14 @@ def test_fedpm_foof_round_packed_matches_reference(dnn_setup):
     hp = HParams(lr=0.3, damping=1.0)
     sim = FedSim(task, "fedpm_foof", hp, ds.n_clients)
     st_ = sim.init(jax.random.PRNGKey(0))
+    params0 = jax.tree.map(jnp.copy, st_.params)  # round() donates st_
     batches = build_round_batches(ds, 3, 16, np.random.default_rng(0))
     new, _ = sim.round(st_, batches, jax.random.PRNGKey(1))
     # reference: per-leaf local loops + per-leaf mixing
     thetas, grams = [], []
     for c in range(ds.n_clients):
         cb = jax.tree.map(lambda x: x[c], batches)
-        th = _foof_local_perstep(task, hp, st_.params, cb)
+        th = _foof_local_perstep(task, hp, params0, cb)
         last = jax.tree.map(lambda x: x[-1], cb)
         thetas.append(th)
         grams.append(task.grams(th, last))

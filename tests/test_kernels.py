@@ -121,6 +121,26 @@ def test_ns_solve_broadcast_and_wide_fallback():
                                rtol=1e-4, atol=1e-4)
 
 
+@pytest.mark.parametrize("nb,bs,k", [(2, 32, 8), (1, 64, 100), (3, 48, 7)])
+def test_ns_solve_mxu_pad_equals_unpadded(nb, bs, k):
+    """On TPU, ns_solve zero-pads the RHS lane to the 128-wide MXU tile
+    before the kernel and slices after.  This asserts the invariant that
+    padding relies on, on the same kernel the TPU runs: a zero-padded
+    RHS's first k output columns are IDENTICAL to the unpadded solve
+    (zero columns can't perturb X@B), and both match the oracle."""
+    m = jax.random.normal(jax.random.PRNGKey(20), (nb, bs, bs))
+    a = jnp.einsum("nij,nkj->nik", m, m) / bs + 0.1 * jnp.eye(bs)
+    b = jax.random.normal(jax.random.PRNGKey(21), (nb, bs, k))
+    got = ns_ops.ns_solve(a, b, iters=25, use_pallas=True)
+    kp = -(-k // 128) * 128
+    bp = jnp.concatenate([b, jnp.zeros((nb, bs, kp - k))], axis=-1)
+    padded = ns_ops.ns_solve(a, bp, iters=25, use_pallas=True)[..., :k]
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(padded))
+    ref = ns_solve_ref(a, b, iters=25)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
 def test_gram_kernel_batched_leading_dims():
     """gram() over [..., T, d] builds the whole bank in one call."""
     x = jax.random.normal(jax.random.PRNGKey(12), (3, 2, 128, 64))

@@ -111,7 +111,9 @@ def _check_masked_equals_gathered(task, batches, algo, hp):
     rng = jax.random.PRNGKey(7)
     ref_params, ref_server = _legacy_full_mask_round(
         sim, st, batches, rng, mask)
-    got, _ = sim.round(st, batches, rng, participants=participants)
+    # ref_* may alias st's buffers (server fns pass state through), and
+    # round() donates its input state — round a copy
+    got, _ = sim.round(st.copy(), batches, rng, participants=participants)
     _assert_trees_close(got.params, ref_params, rtol=2e-4, atol=2e-5)
     _assert_trees_close(got.server, ref_server, rtol=2e-4, atol=2e-5)
 
@@ -140,7 +142,8 @@ def test_pregathered_batches_equal_full_bank(convex):
     st = sim.init(jax.random.PRNGKey(0))
     participants = np.array([0, 3, 7])
     rng = jax.random.PRNGKey(3)
-    full, _ = sim.round(st, convex["batches"], rng,
+    # rounds donate their input state — copy to round twice from one state
+    full, _ = sim.round(st.copy(), convex["batches"], rng,
                         participants=participants)
     sub_batches = jax.tree.map(lambda x: x[participants], convex["batches"])
     pre, _ = sim.round(st, sub_batches, rng, participants=participants)
@@ -153,7 +156,7 @@ def test_legacy_mask_api_equals_participants_api(convex):
     participants = np.array([2, 4, 5])
     mask = jnp.zeros((N_CLIENTS,)).at[jnp.asarray(participants)].set(1.0)
     rng = jax.random.PRNGKey(5)
-    a, _ = sim.round(st, convex["batches"], rng, mask)
+    a, _ = sim.round(st.copy(), convex["batches"], rng, mask)
     b, _ = sim.round(st, convex["batches"], rng, participants=participants)
     _assert_trees_close(a.params, b.params, rtol=0, atol=0)
     _assert_trees_close(a.clients, b.clients, rtol=0, atol=0)

@@ -1,0 +1,334 @@
+"""Scan-compiled multi-round driver contracts (ISSUE 4):
+
+* ``run_scanned`` ≡ the per-round banked ``round()`` oracle BIT-FOR-BIT
+  after R rounds (params/server/clients) at fixed seeds — in-graph cohort
+  sampling, scheduled cohorts (including an EMPTY round inside a chunk),
+  and full participation, on the vmap engine here and the mesh-sharded
+  engine in an 8-fake-device subprocess;
+* eval_every chunk boundaries don't change the trajectory (chunk sizes
+  1, 3, R all bitwise-identical);
+* the scan jit cache keys once per (chunk length, S), not per chunk;
+* the per-round jits DONATE params/server/clients: the [N, ...] client
+  bank is single-buffered (input-output aliasing covers the bank bytes)
+  and a state is consumed by the round it enters.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.algorithms import HParams
+from repro.data import FederatedDataset, make_clustered_classification
+from repro.fl.simulate import FedSim, round_keys
+from repro.fl.tasks import DNNTask
+from repro.models.simple import MLPModel
+
+N, R = 8, 5
+
+
+@pytest.fixture(scope="module")
+def task():
+    data = make_clustered_classification(1200, 16, 4, seed=0)
+    ds = FederatedDataset.from_arrays(data, N, alpha=0.5, seed=0)
+    return DNNTask(MLPModel(in_dim=16, hidden=(32,), num_classes=4)
+                   ).with_data(ds.device_bank(steps=2, batch=16))
+
+
+def _assert_states_equal(a, b):
+    for name in ("params", "server", "clients"):
+        for x, y in zip(jax.tree.leaves(getattr(a, name)),
+                        jax.tree.leaves(getattr(b, name))):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                          err_msg=name)
+
+
+def _oracle(task, algo, hp, rng, *, sample_clients=0, cohorts=None):
+    """The documented per-round oracle: banked ``round()`` over
+    ``round_keys`` keys (empty scheduled rows are skipped)."""
+    sim = FedSim(task, algo, hp, N)
+    k_init, keys = round_keys(rng, R)
+    st = sim.init(k_init)
+    for t in range(R):
+        if cohorts is not None:
+            row = cohorts[t]
+            st, _ = sim.round(st, None, keys[t],
+                              participants=row[row >= 0])
+        elif sample_clients:
+            st, _ = sim.round(st, None, keys[t],
+                              sample_clients=sample_clients)
+        else:
+            st, _ = sim.round(st, None, keys[t])
+    return st
+
+
+# ------------------------------------------- scanned ≡ per-round oracle ----
+
+@pytest.mark.parametrize("algo,hp", [
+    ("scaffold", HParams(lr=0.1)),                   # stateful clients
+    ("fedpm_foof", HParams(lr=0.3, damping=1.0)),    # preconditioned mixing
+])
+def test_scanned_matches_oracle_sampled(task, algo, hp):
+    rng = jax.random.PRNGKey(0)
+    got, _ = FedSim(task, algo, hp, N).run_scanned(rng, R, sample_clients=3,
+                                                   eval_every=2)
+    want = _oracle(task, algo, hp, rng, sample_clients=3)
+    _assert_states_equal(got, want)
+
+
+def test_scanned_matches_oracle_full_cohort(task):
+    rng = jax.random.PRNGKey(1)
+    hp = HParams(lr=0.1)
+    got, _ = FedSim(task, "fedavg", hp, N).run_scanned(rng, R, eval_every=2)
+    want = _oracle(task, "fedavg", hp, rng)
+    _assert_states_equal(got, want)
+
+
+def test_scheduled_cohorts_and_empty_round_inside_chunk(task):
+    """An all--1 cohort row inside a chunk is a skipped round — the
+    scanned chunk must land exactly where the oracle loop (which skips
+    that round()) lands."""
+    rng = jax.random.PRNGKey(2)
+    hp = HParams(lr=0.1)
+    np_rng = np.random.default_rng(7)
+    cohorts = np.stack([np.sort(np_rng.choice(N, 3, replace=False))
+                        for _ in range(R)]).astype(np.int32)
+    cohorts[2] = -1                       # empty round mid-chunk
+    got, _ = FedSim(task, "scaffold", hp, N).run_scanned(
+        rng, R, cohorts=cohorts, eval_every=R)
+    want = _oracle(task, "scaffold", hp, rng, cohorts=cohorts)
+    _assert_states_equal(got, want)
+
+
+def test_empty_round_in_full_width_schedule_is_skipped(task):
+    """A schedule as wide as N (full-participation rounds) must still
+    SKIP its all--1 rows — regression: the empty-row cond used to be
+    dropped for S == N, silently training everyone on the idle round."""
+    rng = jax.random.PRNGKey(5)
+    hp = HParams(lr=0.1)
+    cohorts = np.tile(np.arange(N, dtype=np.int32), (R, 1))
+    cohorts[1] = -1
+    got, _ = FedSim(task, "scaffold", hp, N).run_scanned(
+        rng, R, cohorts=cohorts, eval_every=R)
+    want = _oracle(task, "scaffold", hp, rng, cohorts=cohorts)
+    _assert_states_equal(got, want)
+
+
+def test_mixed_empty_cohort_row_rejected(task):
+    """A row mixing -1 with real ids is ambiguous (the scan would skip
+    what the oracle would partially train) — must raise, not silently
+    skip."""
+    sim = FedSim(task, "fedavg", HParams(), N)
+    cohorts = np.array([[0, 1, 2], [-1, 2, 5]], np.int32)
+    with pytest.raises(ValueError, match="ALL -1"):
+        sim.run_scanned(jax.random.PRNGKey(0), 2, cohorts=cohorts)
+
+
+def test_chunk_boundaries_do_not_change_trajectory(task):
+    """eval_every ∈ {1, 3, R} (ragged last chunk included) are all
+    bitwise-identical runs; history is bookkeeping only."""
+    rng = jax.random.PRNGKey(3)
+    hp = HParams(lr=0.3, damping=1.0)
+    runs = {}
+    for ee in (1, 3, R):
+        runs[ee] = FedSim(task, "fedpm_foof", hp, N).run_scanned(
+            rng, R, sample_clients=3, eval_every=ee,
+            eval_fn=lambda p: 0.0)
+    _assert_states_equal(runs[1][0], runs[3][0])
+    _assert_states_equal(runs[1][0], runs[R][0])
+    assert runs[1][1]["round"] == [0, 1, 2, 3, 4]
+    assert runs[3][1]["round"] == [2, 4]              # chunks 3 + ragged 2
+    assert runs[R][1]["round"] == [4]
+
+
+def test_scan_jit_cache_keys_once_per_chunk_and_s(task):
+    sim = FedSim(task, "fedavg", HParams(lr=0.1), N)
+    rng = jax.random.PRNGKey(4)
+    sim.run_scanned(rng, 6, sample_clients=3, eval_every=3)   # chunks 3,3
+    n0 = sim._scan_jit._cache_size()
+    assert n0 == 1                                    # one (chunk=3, S=3)
+    sim.run_scanned(rng, 6, sample_clients=3, eval_every=3)   # same key
+    assert sim._scan_jit._cache_size() == n0
+    sim.run_scanned(rng, 7, sample_clients=3, eval_every=3)   # ragged +1
+    assert sim._scan_jit._cache_size() == n0 + 1
+    sim.run_scanned(rng, 6, sample_clients=4, eval_every=3)   # new S +1
+    assert sim._scan_jit._cache_size() == n0 + 2
+
+
+def test_round_rejects_sample_clients_with_explicit_batches(task):
+    """sample_clients= is the banked round's in-graph draw — with
+    explicit batches it must raise, not silently run a full round."""
+    sim = FedSim(task, "fedavg", HParams(), N)
+    st = sim.init(jax.random.PRNGKey(0))
+    batches = task.data.sample(jax.random.PRNGKey(1),
+                               jnp.arange(N, dtype=jnp.int32))
+    with pytest.raises(ValueError, match="banked round"):
+        sim.round(st, batches, jax.random.PRNGKey(2), sample_clients=3)
+
+
+def test_run_scanned_requires_bank_and_valid_cohorts(task):
+    bare = DNNTask(MLPModel(in_dim=16, hidden=(32,), num_classes=4))
+    with pytest.raises(ValueError, match="resident data bank"):
+        FedSim(bare, "fedavg", HParams(), N).run_scanned(
+            jax.random.PRNGKey(0), 2)
+    sim = FedSim(task, "fedavg", HParams(), N)
+    with pytest.raises(ValueError, match="sorted unique"):
+        sim.run_scanned(jax.random.PRNGKey(0), 2,
+                        cohorts=np.array([[3, 1, 2], [0, 1, 2]]))
+    with pytest.raises(ValueError, match="rounds"):
+        sim.run_scanned(jax.random.PRNGKey(0), 2,
+                        cohorts=np.array([[0, 1, 2]]))
+    with pytest.raises(ValueError, match="eval_every"):
+        sim.run_scanned(jax.random.PRNGKey(0), 2, eval_every=0)
+
+
+# -------------------------------------------------- donation invariants ----
+
+def test_round_jit_single_buffers_client_bank(task):
+    """The per-round jit declares input-output aliasing that covers (at
+    least) the client bank — the scatter updates the [N, ...] bank in
+    place instead of allocating a second copy."""
+    sim = FedSim(task, "scaffold", HParams(lr=0.1), N)
+    st = sim.init(jax.random.PRNGKey(0))
+    bank = sim.task.data
+    idx = jnp.arange(3, dtype=jnp.int32)
+    batches = bank.sample(jax.random.PRNGKey(1), idx)
+    lowered = sim._round_jit.lower(
+        st.params, st.server, st.clients, batches, jax.random.PRNGKey(2),
+        idx, jnp.ones((3,), jnp.float32), full=False)
+    ma = lowered.compile().memory_analysis()
+    bank_bytes = sum(x.size * x.dtype.itemsize
+                     for x in jax.tree.leaves(st.clients))
+    state_bytes = bank_bytes + sum(
+        x.size * x.dtype.itemsize
+        for t in (st.params, st.server) for x in jax.tree.leaves(t))
+    assert ma.alias_size_in_bytes >= bank_bytes, \
+        (ma.alias_size_in_bytes, bank_bytes)
+    # and the declared aliasing covers the whole donated carry
+    assert ma.alias_size_in_bytes >= state_bytes, \
+        (ma.alias_size_in_bytes, state_bytes)
+
+
+def test_round_consumes_state_and_copy_survives(task):
+    """Donation semantics: the input state's buffers are deleted by the
+    round (proof the runtime actually aliased them), FedState.copy gives
+    a reusable snapshot, and an empty-cohort round (no jit dispatch)
+    leaves the state alive."""
+    sim = FedSim(task, "scaffold", HParams(lr=0.1), N)
+    st = sim.init(jax.random.PRNGKey(0))
+    keep = st.copy()
+    leaf = jax.tree.leaves(st.clients)[0]
+    st1, _ = sim.round(st, None, jax.random.PRNGKey(1), sample_clients=3)
+    assert leaf.is_deleted()
+    assert not jax.tree.leaves(keep.clients)[0].is_deleted()
+    st2, _ = sim.round(keep, None, jax.random.PRNGKey(2),
+                       participants=np.array([], np.int32))
+    assert not jax.tree.leaves(st2.clients)[0].is_deleted()
+
+
+# ------------------------------------------------- sharded engine (8 dev) --
+
+SHARDED_SCRIPT = r'''
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys; sys.path.insert(0, "src")
+import jax, jax.numpy as jnp, numpy as np
+from repro.core.algorithms import HParams
+from repro.data import FederatedDataset, make_clustered_classification, \
+    make_libsvm_like
+from repro.fl.simulate import FedSim, round_keys
+from repro.fl.sharded import make_client_mesh
+from repro.fl.tasks import ConvexTask, DNNTask
+from repro.models.simple import LogisticModel, MLPModel
+
+assert jax.device_count() == 8
+mesh = make_client_mesh()
+N, R = 16, 4
+
+data = make_clustered_classification(1600, 16, 4, seed=0)
+ds = FederatedDataset.from_arrays(data, N, alpha=0.5, seed=0)
+dnn = DNNTask(MLPModel(in_dim=16, hidden=(32,), num_classes=4)
+              ).with_data(ds.device_bank(steps=2, batch=16))
+cdata = make_libsvm_like("a9a", seed=0)
+cds = FederatedDataset.from_arrays(cdata, N, alpha=0.0, seed=0,
+                                   test_frac=0.1)
+cvx = ConvexTask(LogisticModel(d=cdata["x"].shape[1], lam=1e-3)
+                 ).with_data(cds.device_bank(steps=1, batch=0))
+
+def check_equal(a, b, tag):
+    for name in ("params", "server", "clients"):
+        for x, y in zip(jax.tree.leaves(getattr(a, name)),
+                        jax.tree.leaves(getattr(b, name))):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                          err_msg=f"{tag}:{name}")
+
+def oracle(task, algo, hp, rng, sample_clients=0, cohorts=None):
+    sim = FedSim(task, algo, hp, N, mesh=mesh)
+    k_init, keys = round_keys(rng, R)
+    st = sim.init(k_init)
+    for t in range(R):
+        if cohorts is not None:
+            row = cohorts[t]
+            st, _ = sim.round(st, None, keys[t], participants=row[row >= 0])
+        elif sample_clients:
+            st, _ = sim.round(st, None, keys[t],
+                              sample_clients=sample_clients)
+        else:
+            st, _ = sim.round(st, None, keys[t])
+    return st
+
+rng = jax.random.PRNGKey(0)
+np_rng = np.random.default_rng(5)
+cohorts = np.stack([np.sort(np_rng.choice(N, 5, replace=False))
+                    for _ in range(R)]).astype(np.int32)
+cohorts[1] = -1                                  # empty round mid-chunk
+
+for tag, task, algo, hp, kw in [
+    ("scaffold-S5", cvx, "scaffold", HParams(lr=0.3),
+     dict(sample_clients=5)),
+    ("fedpm-S5", cvx, "fedpm", HParams(lr=1.0, damping=1e-2),
+     dict(sample_clients=5)),
+    ("foof-full", dnn, "fedpm_foof", HParams(lr=0.3, damping=1.0), {}),
+    ("sched-empty", cvx, "scaffold", HParams(lr=0.3),
+     dict(cohorts=cohorts)),
+]:
+    got, _ = FedSim(task, algo, hp, N, mesh=mesh).run_scanned(
+        rng, R, eval_every=2, **kw)
+    check_equal(got, oracle(task, algo, hp, rng, **kw), tag)
+print("SHARDED-SCAN-EQUIV-OK")
+
+# scan jit cache: one program per (chunk length, S)
+sim = FedSim(cvx, "scaffold", HParams(lr=0.3), N, mesh=mesh)
+sim.run_scanned(rng, 4, sample_clients=5, eval_every=2)
+n0 = sim._scan_sharded_jit._cache_size()
+sim.run_scanned(rng, 4, sample_clients=5, eval_every=2)
+assert sim._scan_sharded_jit._cache_size() == n0
+sim.run_scanned(rng, 4, sample_clients=4, eval_every=2)
+assert sim._scan_sharded_jit._cache_size() == n0 + 1
+print("SHARDED-SCAN-CACHE-OK")
+
+# donation: the sharded per-round jit consumes its input state too
+sim = FedSim(cvx, "scaffold", HParams(lr=0.3), N, mesh=mesh)
+st = sim.init(jax.random.PRNGKey(0))
+leaf = jax.tree.leaves(st.clients)[0]
+st1, _ = sim.round(st, None, jax.random.PRNGKey(1), sample_clients=5)
+assert leaf.is_deleted()
+print("SHARDED-DONATE-OK")
+print("OK")
+'''
+
+
+def test_sharded_scan_contracts():
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run([sys.executable, "-c", SHARDED_SCRIPT],
+                         cwd=os.path.join(os.path.dirname(__file__), ".."),
+                         capture_output=True, text=True, env=env,
+                         timeout=600)
+    assert res.returncode == 0, res.stderr[-3000:]
+    for marker in ("SHARDED-SCAN-EQUIV-OK", "SHARDED-SCAN-CACHE-OK",
+                   "SHARDED-DONATE-OK"):
+        assert marker in res.stdout, (marker, res.stdout)
