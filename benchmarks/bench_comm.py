@@ -1,0 +1,78 @@
+"""Communication-cost bench: exact per-round wire bytes from the registry.
+
+Unlike the timing benches, the numeric CSV slot here is BYTES per client
+per round (``derived`` says which direction) — computed by
+``repro.core.api.comm_cost`` (pure ``jax.eval_shape``, no compilation),
+so the rows are exact and machine-independent.  The smoke gates ratio a
+wire transform OFF over ON (bf16, top-k, gram sketch): a transform that
+silently stops shrinking the payload collapses its ratio and fails the
+bench gate.
+
+Reference sizes match the README registry table: the Test-2 MLP
+(64→128→64→10, K=2 steps of batch 64) for layer-wise methods and the
+Test-1 convex model (d=123, full batch) for flat/Hessian methods.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import api
+from repro.core.algorithms import ALGORITHMS, HParams
+from repro.fl.tasks import ConvexTask, DNNTask
+from repro.models.simple import LogisticModel, MLPModel
+
+from benchmarks.common import emit
+
+#: transform-on/off pairs the smoke gates ratio (off ÷ on, worse=lower)
+TRANSFORM_PAIRS = (
+    ("fedavg", "fedavg_bf16"),
+    ("fedadam", "fedadam_topk"),
+    ("fedpm_foof", "fedpm_foof_sketch"),
+)
+
+
+def reference_tasks():
+    """THE reference sizes for comm accounting — also consumed by
+    ``scripts/gen_alg_table.py``, so the README registry table and the
+    gated ``comm/*`` rows can never report different models."""
+    cvx = ConvexTask(LogisticModel(d=123, lam=1e-3))
+    cvx_batch = {"x": jnp.zeros((1, 500, 123), jnp.float32),
+                 "y": jnp.zeros((1, 500), jnp.float32)}
+    dnn = DNNTask(MLPModel(in_dim=64, hidden=(128, 64), num_classes=10))
+    dnn_batch = {"x": jnp.zeros((2, 64, 64), jnp.float32),
+                 "y": jnp.zeros((2, 64), jnp.int32)}
+    return (cvx, cvx_batch), (dnn, dnn_batch)
+
+
+def hp_for(name: str) -> HParams:
+    """Reference hparams: defaults, except FedNS reports at sketch=32
+    (sketch=0 would degenerate to the full d×d frame)."""
+    return HParams(sketch=32) if name == "fedns" else HParams()
+
+
+def reference_cost(name: str) -> dict:
+    """``api.comm_cost`` of one registered algorithm at the reference
+    sizes (shared by the bench rows and the README table)."""
+    (cvx, cb), (dnn, db) = reference_tasks()
+    a = ALGORITHMS[name]
+    task, batch = (cvx, cb) if a.needs_hessian else (dnn, db)
+    return api.comm_cost(a, task, hp_for(name), batch)
+
+
+def main(algos=None) -> None:
+    for name in sorted(algos or ALGORITHMS):
+        c = reference_cost(name)
+        emit(f"comm/{name}/up", c["bytes_up_per_client"],
+             "bytes_up/client/round")
+        emit(f"comm/{name}/down", c["bytes_down_per_client"],
+             "bytes_down/client/round")
+
+
+def smoke_section() -> None:
+    """The gate subset: every transform pair's on/off rows."""
+    names = sorted({n for pair in TRANSFORM_PAIRS for n in pair})
+    main(algos=names)
+
+
+if __name__ == "__main__":
+    main()

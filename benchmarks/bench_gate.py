@@ -3,9 +3,9 @@ baseline and fail tier-1 on >tol regressions.
 
 Usage (scripts/ci.sh wires this up)::
 
-    python -m benchmarks.run --smoke            # writes BENCH_pr4.json
-    python -m benchmarks.bench_gate BENCH_pr4.json \
-        benchmarks/baseline_pr4.json --tol 0.25
+    python -m benchmarks.run --smoke            # writes BENCH_pr5.json
+    python -m benchmarks.bench_gate BENCH_pr5.json \
+        benchmarks/baseline_pr5.json --tol 0.25
 
 Both files carry a ``gates`` section of machine-independent RATIOS
 (packed-vs-per-leaf speedup, K-sweep growth, sharded-vs-vmap overhead,
@@ -13,8 +13,8 @@ scanned-vs-per-round dispatch speedup — see ``benchmarks.run._gates``).
 A gate regresses when its value moves past baseline·(1 ± tol) in its
 ``worse`` direction; a gate present in the baseline but missing from the
 current run also fails (a silently dropped bench must not read as a
-pass).  Refresh the baseline by copying a trusted run's BENCH_pr4.json
-over benchmarks/baseline_pr4.json.
+pass).  Refresh the baseline by copying a trusted run's BENCH_pr5.json
+over benchmarks/baseline_pr5.json.
 """
 from __future__ import annotations
 
@@ -51,7 +51,7 @@ def check(current: dict, baseline: dict, tol: float) -> list[str]:
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("current", help="BENCH_pr4.json from this run")
+    ap.add_argument("current", help="BENCH_pr5.json from this run")
     ap.add_argument("baseline", help="checked-in baseline json")
     ap.add_argument("--tol", type=float, default=0.25,
                     help="allowed fractional regression (default 0.25)")

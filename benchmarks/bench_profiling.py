@@ -1,8 +1,10 @@
 """Paper Table 16 (Appendix D.5): per-round client train time, client→server
 communication volume, and state memory per method.
 
-Comm bytes are EXACT message-tree sizes (the mesh collective payloads), not
-simulated link timings (DESIGN.md §7).  derived = comm bytes/round."""
+Comm bytes are EXACT declared-wire-field sizes (the mesh collective
+payloads; ``Message.bytes_on_wire`` — telemetry fields like ``loss``
+excluded), not simulated link timings (DESIGN.md §7).
+derived = comm bytes/round."""
 from __future__ import annotations
 
 import time
@@ -10,6 +12,7 @@ import time
 import jax
 import numpy as np
 
+from repro.core.api import message_wire_bytes
 from repro.data.federated import build_round_batches, steps_per_epoch
 from repro.fl.simulate import FedSim
 from repro.utils import tree_bytes
@@ -34,7 +37,7 @@ def main(rounds=3):
         cstate = jax.tree.map(lambda x: x[0], st.clients)
         msg, _ = sim.algo.client(task, sim.hp, st.params, cstate, st.server,
                                  one, jax.random.PRNGKey(0))
-        comm = tree_bytes(msg)
+        comm = message_wire_bytes(msg)
         state_mem = tree_bytes(st.params) + tree_bytes(st.server)
         t0 = time.perf_counter()
         for t in range(rounds):

@@ -11,12 +11,12 @@ benchmarks/common.py and EXPERIMENTS.md for the paper mapping:
 
 ``--smoke`` runs the CI perf-gate subset — packed-vs-per-leaf bank
 numbers, the K-sweep factor-once amortization, the sharded-vs-vmap
-engine comparison on a forced 8-device host mesh, and the scanned-vs-
-per-round dispatch ratio — and serializes every emitted row plus
-machine-independent gate RATIOS to ``BENCH_pr4.json``.
-``benchmarks.bench_gate`` compares those ratios against the checked-in
-``benchmarks/baseline_pr4.json`` and fails tier-1 on >25% regressions
-(scripts/ci.sh wires both up).
+engine comparison on a forced 8-device host mesh, the scanned-vs-
+per-round dispatch ratio, and the comm-bytes wire-transform on/off
+ratios — and serializes every emitted row plus machine-independent gate
+RATIOS to ``BENCH_pr5.json``.  ``benchmarks.bench_gate`` compares those
+ratios against the checked-in ``benchmarks/baseline_pr5.json`` and
+fails tier-1 on >25% regressions (scripts/ci.sh wires both up).
 """
 from __future__ import annotations
 
@@ -73,6 +73,14 @@ _GATE_SPECS = {
     "scan_dispatch_speedup_fedavg": (
         "scan_dispatch/fedavg/perround", "scan_dispatch/fedavg/scanned",
         "lower", "scan"),
+    # wire-transform uplink savings (EXACT byte ratios, off ÷ on — a
+    # transform that stops shrinking its payload collapses the ratio)
+    "comm_bf16_ratio": (
+        "comm/fedavg/up", "comm/fedavg_bf16/up", "lower", "comm"),
+    "comm_topk_ratio": (
+        "comm/fedadam/up", "comm/fedadam_topk/up", "lower", "comm"),
+    "comm_sketch_ratio": (
+        "comm/fedpm_foof/up", "comm/fedpm_foof_sketch/up", "lower", "comm"),
 }
 
 
@@ -103,9 +111,9 @@ def _median_gates(samples: list[dict]) -> dict:
             for k, vs in merged.items()}
 
 
-def smoke(out_path: str = "BENCH_pr4.json") -> int:
-    from benchmarks import (bench_cost, bench_local_epochs, bench_sampling,
-                            bench_scan)
+def smoke(out_path: str = "BENCH_pr5.json") -> int:
+    from benchmarks import (bench_comm, bench_cost, bench_local_epochs,
+                            bench_sampling, bench_scan)
     from benchmarks.common import RECORDS, dnn_setup
 
     print("name,us_per_call,derived")
@@ -114,6 +122,9 @@ def smoke(out_path: str = "BENCH_pr4.json") -> int:
     failed = _run([
         ("cost", lambda: bench_cost.main(smoke=True)),
     ])
+    # comm-bytes gates are exact eval_shape ratios — one sample suffices
+    failed += _run([("comm", bench_comm.smoke_section)])
+    samples.append(_gates(RECORDS, "comm"))
     # scanned-vs-per-round dispatch ratio (bench does its own min-of-reps
     # per path; outer repetitions median-merge the gate like the others)
     for _ in range(2):
@@ -135,7 +146,7 @@ def smoke(out_path: str = "BENCH_pr4.json") -> int:
     # repeating it would blow the ci.sh stage budget); its rows are
     # already steady-state means over 8 post-compile reps, and the
     # checked-in baselines carry the sharded family's wider noise
-    # envelope (see benchmarks/baseline_pr4.json meta)
+    # envelope (see benchmarks/baseline_pr5.json meta)
     failed += _run([("sharded", lambda: bench_sampling.sharded(reps=8))])
     samples.append(_gates(RECORDS, "sharded"))
 
@@ -151,12 +162,13 @@ def smoke(out_path: str = "BENCH_pr4.json") -> int:
 def main() -> None:
     if "--smoke" in sys.argv:
         sys.exit(smoke())
-    from benchmarks import (bench_convex, bench_cost, bench_dnn,
+    from benchmarks import (bench_comm, bench_convex, bench_cost, bench_dnn,
                             bench_femnist, bench_foof_samples,
                             bench_local_epochs, bench_profiling,
                             bench_roofline, bench_sampling, bench_scan)
     print("name,us_per_call,derived")
     failed = _run([
+        ("comm", bench_comm.main),
         ("convex", lambda: bench_convex.main(rounds=10)),
         ("dnn", lambda: bench_dnn.main(rounds=10)),
         ("local_epochs", bench_local_epochs.main),

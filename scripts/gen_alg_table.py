@@ -1,0 +1,47 @@
+"""Generate the README's algorithm-registry table from the live registry.
+
+Usage::
+
+    python scripts/gen_alg_table.py
+
+and paste the output between the ``<!-- registry-table -->`` markers in
+README.md (tests/test_api.py fails if a registered algorithm is missing
+from the README).  Byte columns are EXACT per-client per-round wire
+volumes at the shared reference sizes — the SAME
+``benchmarks.bench_comm.reference_cost`` the gated ``comm/*`` bench rows
+use (Test-2 MLP 64→128→64→10 at K=2×B=64 for layer-wise methods; the
+Test-1 convex model, d=123 full-batch, for flat/Hessian methods), so the
+README and the bench gate can never drift apart.
+"""
+import os
+import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for p in (_ROOT, os.path.join(_ROOT, "src")):
+    if p not in sys.path:
+        sys.path.insert(0, p)
+
+from benchmarks.bench_comm import reference_cost           # noqa: E402
+from repro.core.algorithms import ALGORITHMS               # noqa: E402
+
+
+def _kb(b: int) -> str:
+    return f"{b / 1024:.1f} KiB" if b < 1 << 20 else f"{b / (1 << 20):.2f} MiB"
+
+
+def main() -> None:
+    print("| algorithm | cat | local update | server mixer | wire fields "
+          "| transform | up/client | down/client |")
+    print("|---|---|---|---|---|---|---|---|")
+    for name in sorted(ALGORITHMS):
+        a = ALGORITHMS[name]
+        c = reference_cost(name)
+        wire = ", ".join(a.message_cls.WIRE)
+        tr = a.wire.name if a.wire is not None else "—"
+        print(f"| `{name}` | {a.category} | {a.local.name} | {a.mixer.name} "
+              f"| {wire} | {tr} | {_kb(c['bytes_up_per_client'])} "
+              f"| {_kb(c['bytes_down_per_client'])} |")
+
+
+if __name__ == "__main__":
+    main()

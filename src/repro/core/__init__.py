@@ -1,5 +1,9 @@
-"""FedPM core: preconditioned mixing, FOOF, inverses, the algorithm zoo."""
+"""FedPM core: preconditioned mixing, FOOF, inverses, the algorithm zoo
+(a compositional LocalUpdate × Message × ServerMixer registry)."""
 from repro.core.algorithms import ALGORITHMS, Algorithm, HParams, get_algorithm
+from repro.core.api import (LocalUpdate, Message, ServerMixer, WireTransform,
+                            comm_cost, register, register_local,
+                            register_mixer)
 from repro.core.bank import (GramBank, PackedPreconditioner,
                              apply_preconditioner, build_preconditioner)
 from repro.core.foof import mix_preconditioned, precondition_tree, GRAM_ROUTES

@@ -1,13 +1,30 @@
 """The FL algorithm zoo (paper Table 1 + Sec 4 comparison methods).
 
-Every algorithm is a triple of pure functions
+Every algorithm is a COMPOSITION registered through
+:mod:`repro.core.api`::
+
+    register(name, category, local_update, server_mixer, wire=transform?)
+
+* :class:`~repro.core.api.LocalUpdate` — the client-side solver.  Each
+  declares ``provides`` (message fields it can furnish, some lazily) and
+  ``hparams`` (the :class:`HParams` fields it reads).
+* :class:`~repro.core.api.Message` — the typed pytree that crosses the
+  wire (built by the registry from exactly the mixer's ``needs`` plus the
+  solver's metric fields).
+* :class:`~repro.core.api.ServerMixer` — the server aggregation,
+  consuming a ``Participation`` so it is engine-agnostic.
+
+The engine contract is unchanged: ``get_algorithm(name)`` returns an
+``Algorithm`` whose pure functions
 
     init_server(task, hp, params)                  -> sstate
-    client(task, hp, params, cstate, sstate, batches, rng) -> (msg, new_cstate)
+    client(task, hp, params, cstate, sstate, batches, rng) -> (msg, cstate)
     server(task, hp, params, sstate, msgs, part)   -> (new_params, sstate)
 
-vmapped over clients by ``repro.fl.simulate``.  ``batches`` has a leading
-local-step axis K.
+are vmapped over clients by ``repro.fl.simulate``.  ``batches`` has a
+leading local-step axis K.  The 14 named compositions below reproduce the
+pre-compositional monolithic closures BIT-FOR-BIT (contract-tested in
+tests/test_api.py against the frozen oracle in tests/legacy_zoo.py).
 
 Participation contract (client sampling, Appendix D.2): the engine gathers
 the S sampled clients BEFORE the client vmap, so ``msgs`` are stacked over
@@ -30,6 +47,11 @@ Test 1's convex model) and a ``foof`` backend (per-layer input covariance,
 Test 2's DNNs).  FedPM with K = 1 and full Hessians is algebraically equal
 to FedNL's global update (Eq. 9 ≡ Eq. 6) — asserted in tests.
 
+Cross-products beyond the paper (one-line registrations near the bottom):
+``fedprox_pm`` (prox local + preconditioned mixing), ``scaffold_pm``
+(SCAFFOLD control variates + preconditioned mixing), and wire-transform
+scenarios ``fedavg_bf16`` / ``fedadam_topk`` / ``fedpm_foof_sketch``.
+
 Round-body PURITY contract: client/server fns (and anything they put in
 ``msgs`` — per-round metrics like ``loss`` included) must be pure jax —
 no host callbacks (``jax.debug.callback`` / ``io_callback`` / ``print``
@@ -39,27 +61,42 @@ callback in the round body would force a host round-trip per round and
 break the scanned driver's one-dispatch-per-chunk guarantee (and its
 bit-for-bit equivalence with the per-round oracle).  Metrics that need
 host aggregation belong at chunk boundaries (``eval_fn``), not in the
-round body.
+round body.  Typed messages are plain pytrees, so the contract survives
+the compositional registry (wire transforms included).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from functools import partial
-from typing import Any, Callable, NamedTuple
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import foof as F
 from repro.core import inverse as inv
+from repro.core.api import (ALGORITHMS, Algorithm, Bf16Wire, GramSketchWire,
+                            LocalUpdate, ServerMixer, TopKWire, get_algorithm,
+                            register, register_local, register_mixer)
 from repro.utils import (tree_add, tree_axpy, tree_scale, tree_sub,
                          tree_zeros_like, global_norm_clip)
 
 PyTree = Any
 
+__all__ = ["HParams", "Participation", "Algorithm", "ALGORITHMS",
+           "get_algorithm", "batches_len"]
+
 
 @dataclass(frozen=True)
 class HParams:
+    """The experiment-level hyperparameter record.
+
+    Deliberately flat (one config object per run), but no longer an
+    implicit grab-bag: every LocalUpdate/ServerMixer declares the subset
+    it reads (``Algorithm.hparams`` is the union;
+    ``api.unused_hparams(algo, hp)`` lints a config against it, and the
+    registry sweep test enforces the declarations bitwise).
+    """
     lr: float = 0.1
     local_steps: int = 1
     damping: float = 1.0            # δ for SO methods ({1.0, 0.01, 1e-4} in paper)
@@ -76,18 +113,6 @@ class HParams:
     ns_iters: int = 20
     foof_timing: str = "end"        # grams at round "end" (paper trick) | "start"
     sophia_gamma: float = 0.05
-
-
-@dataclass(frozen=True)
-class Algorithm:
-    name: str
-    category: str                   # FOGM | FOPM | SOGM | SOPM
-    init_server: Callable
-    init_client: Callable
-    client: Callable
-    server: Callable
-    needs_hessian: bool = False
-    needs_grams: bool = False
 
 
 class Participation(NamedTuple):
@@ -135,7 +160,9 @@ def _wmean(tree_stack: PyTree, part: Participation) -> PyTree:
 
     With ``part.axes`` set (sharded engine), the stack is each shard's
     local bucket: the numerator/denominator partial sums cross shards as
-    ONE psum, so no device ever materializes the full [S] stack.
+    ONE psum, so no device ever materializes the full [S] stack.  This is
+    also the engines' ``client_loss`` metric aggregation — both the vmap
+    and sharded metric paths go through here.
     """
     wf = part.weights.astype(jnp.float32)
     num = jax.tree.map(
@@ -149,13 +176,11 @@ def _wmean(tree_stack: PyTree, part: Participation) -> PyTree:
                         num, tree_stack)
 
 
-def _no_server_state(task, hp, params):
-    return ()
+def batches_len(batches) -> int:
+    return jax.tree.leaves(batches)[0].shape[0]
 
 
-def _no_client_state(task, params):
-    return ()
-
+# ========================================================== local solvers ==
 
 def _grad_step(task, hp, params, batch, extra=None):
     loss, g = task.loss_grad(params, batch)
@@ -178,54 +203,60 @@ def _sgd_local(task, hp, params, batches, extra_fn=None):
     return theta, jnp.mean(losses)
 
 
-# ================================================================= FOGM =====
+def _tx_grams(task, hp, theta, params, batches):
+    """Grams to TRANSMIT for preconditioned mixing, per ``hp.foof_timing``
+    — 'end' computes at θ_K on the last batch (the paper's trick), 'start'
+    at θ₀ on the first.  Lazily attached to every theta-producing local
+    solver so any of them composes with a preconditioned mixer."""
+    if hp.foof_timing == "end":
+        last = jax.tree.map(lambda x: x[-1], batches)
+        return task.grams(theta, last)
+    first = jax.tree.map(lambda x: x[0], batches)
+    return task.grams(params, first)
 
-def _psgd_client(task, hp, params, cstate, sstate, batches, rng):
+
+def _derived(out, task, hp, params, theta, batches):
+    """Lazy cross-product fields every theta-producing solver can furnish:
+    ``delta`` (θ − θ₀, for delta-consuming mixers like adam) and ``grams``
+    (for preconditioned mixers).  Thunks — only materialized when the
+    registered mixer's message actually carries the field."""
+    out.setdefault("delta", lambda: tree_sub(theta, params))
+    out.setdefault("grams", lambda: _tx_grams(task, hp, theta, params,
+                                              batches))
+    return out
+
+
+# ------------------------------------------------------------- grad-only ---
+
+def _grad_only_run(task, hp, params, cstate, sstate, batches, rng):
     first = jax.tree.map(lambda x: x[0], batches)
     _, g = task.loss_grad(params, first)
     g = global_norm_clip(g, hp.clip)
     return {"grad": g}, cstate
 
 
-def _psgd_server(task, hp, params, sstate, msgs, part):
-    g = part.wmean(msgs["grad"])
-    return tree_axpy(-hp.lr, g, params), sstate
+# ------------------------------------------------------------------- sgd ----
 
-
-# ================================================================= FOPM =====
-
-def _fedavg_client(task, hp, params, cstate, sstate, batches, rng):
+def _sgd_run(task, hp, params, cstate, sstate, batches, rng):
     theta, loss = _sgd_local(task, hp, params, batches)
-    return {"theta": theta, "loss": loss}, cstate
+    return _derived({"theta": theta, "loss": loss},
+                    task, hp, params, theta, batches), cstate
 
 
-def _fedavg_server(task, hp, params, sstate, msgs, part):
-    return part.wmean(msgs["theta"]), sstate
-
-
-def _fedavgm_server(task, hp, params, sstate, msgs, part):
-    delta = tree_sub(part.wmean(msgs["theta"]), params)
-    v = tree_axpy(hp.momentum, sstate, delta)   # v = m·v + Δ
-    return tree_add(params, v), v
-
-
-def _fedprox_client(task, hp, params, cstate, sstate, batches, rng):
+def _prox_run(task, hp, params, cstate, sstate, batches, rng):
     theta0 = params
     theta, loss = _sgd_local(
         task, hp, params, batches,
         extra_fn=lambda th: tree_scale(tree_sub(th, theta0), hp.prox_mu))
-    return {"theta": theta, "loss": loss}, cstate
+    return _derived({"theta": theta, "loss": loss},
+                    task, hp, params, theta, batches), cstate
 
 
 def _scaffold_init_client(task, params):
     return tree_zeros_like(params)
 
 
-def _scaffold_init_server(task, hp, params):
-    return tree_zeros_like(params)
-
-
-def _scaffold_client(task, hp, params, cstate, sstate, batches, rng):
+def _scaffold_run(task, hp, params, cstate, sstate, batches, rng):
     # correction: g - c_i + c ; c (server control variate) rides in sstate
     c_i, c = cstate, sstate
     corr = tree_sub(c, c_i)
@@ -236,91 +267,21 @@ def _scaffold_client(task, hp, params, cstate, sstate, batches, rng):
     # canonical option-II update: c_i⁺ = c_i − c + (θ0 − θ_K)/(K·η)
     c_i_new = tree_add(tree_sub(c_i, c),
                        tree_scale(tree_sub(theta0, theta), 1.0 / (k * hp.lr)))
-    return {"theta": theta, "dc": tree_sub(c_i_new, c_i), "loss": loss}, c_i_new
+    out = _derived({"theta": theta, "dc": tree_sub(c_i_new, c_i),
+                    "loss": loss}, task, hp, params, theta, batches)
+    return out, c_i_new
 
 
-def _scaffold_server(task, hp, params, sstate, msgs, part):
-    theta = part.wmean(msgs["theta"])
-    # c ← c + (S/N)·mean_S(Δc_i): explicit sampled fraction from part
-    frac = part.n_sampled / jnp.float32(part.n_total)
-    c = tree_add(sstate, tree_scale(part.wmean(msgs["dc"]), frac))
-    new = tree_add(params, tree_scale(tree_sub(theta, params), hp.server_lr))
-    return new, c
+# ------------------------------------------------- full-Hessian solvers -----
 
-
-def _fedadam_init_server(task, hp, params):
-    return (tree_zeros_like(params), tree_zeros_like(params))
-
-
-def _fedadam_client(task, hp, params, cstate, sstate, batches, rng):
-    theta, loss = _sgd_local(task, hp, params, batches)
-    return {"delta": tree_sub(theta, params), "loss": loss}, cstate
-
-
-def _fedadam_server(task, hp, params, sstate, msgs, part):
-    m, v = sstate
-    d = part.wmean(msgs["delta"])
-    m = tree_add(tree_scale(m, hp.beta1), tree_scale(d, 1 - hp.beta1))
-    v = jax.tree.map(lambda vv, dd: hp.beta2 * vv + (1 - hp.beta2) * dd * dd, v, d)
-    upd = jax.tree.map(lambda mm, vv: mm / (jnp.sqrt(vv) + hp.tau), m, v)
-    return tree_axpy(hp.server_lr, upd, params), (m, v)
-
-
-# ======================================================= SOGM (flat only) ===
-
-def _fednl_client(task, hp, params, cstate, sstate, batches, rng):
+def _fednl_run(task, hp, params, cstate, sstate, batches, rng):
     first = jax.tree.map(lambda x: x[0], batches)
     _, g = task.loss_grad(params, first)
     h = task.hessian(params, first)
-    return {"grad": g, "hess": h}, cstate
+    # sketch: h @ Ω against the server-broadcast frame (FedNS; the frame
+    # is shared via sstate, so it never rides the uplink)
+    return {"grad": g, "hess": h, "sketch": lambda: h @ sstate}, cstate
 
-
-def _fednl_server(task, hp, params, sstate, msgs, part):
-    g = part.wmean(msgs["grad"])
-    h = part.wmean(msgs["hess"])
-    step = inv.solve(h, g[:, None], hp.damping, method=hp.inverse_method,
-                     ns_iters=hp.ns_iters)[:, 0]
-    return params - hp.lr * step, sstate
-
-
-def _fedns_init_server(task, hp, params):
-    """The sketch frame is SHARED across clients: built once here and
-    broadcast to every client via ``sstate`` (it rides into the vmapped
-    client fn as a closure, not per-client state).  Orthonormal columns
-    (QR of a gaussian): a raw square gaussian has cond ≈ d, which squares
-    through the Nyström core solve and destroys fp32 accuracy."""
-    d = params.shape[0]
-    s = hp.sketch or d
-    gauss = jax.random.normal(jax.random.PRNGKey(42), (d, s))
-    omega, _ = jnp.linalg.qr(gauss)
-    return omega
-
-
-def _fedns_client(task, hp, params, cstate, sstate, batches, rng):
-    first = jax.tree.map(lambda x: x[0], batches)
-    _, g = task.loss_grad(params, first)
-    h = task.hessian(params, first)
-    omega = sstate                                        # broadcast frame
-    return {"grad": g, "sketch": h @ omega}, cstate
-
-
-def _fedns_server(task, hp, params, sstate, msgs, part):
-    """Explicit Nyström reconstruction Ĥ = Y(ΩᵀY)⁻¹Yᵀ, then a damped solve.
-    (A Woodbury identity solve is cheaper but loses ~30% accuracy to fp32
-    cancellation at δ ≲ 1e-3 — measured; EXPERIMENTS.md §Repro notes.)"""
-    g = part.wmean(msgs["grad"])
-    y = part.wmean(msgs["sketch"])
-    omega = sstate                                        # shared frame
-    core = omega.T @ y
-    core = 0.5 * (core + core.T) + 1e-6 * jnp.eye(core.shape[0])
-    h_hat = y @ jnp.linalg.solve(core, y.T)
-    h_hat = 0.5 * (h_hat + h_hat.T)
-    x = inv.solve(h_hat, g[:, None], max(hp.damping, 1e-6),
-                  method=hp.inverse_method, ns_iters=hp.ns_iters)[:, 0]
-    return params - hp.lr * x, sstate
-
-
-# ================================================ SOPM with full Hessian ====
 
 def _newton_local(task, hp, params, batches):
     def step(theta, batch):
@@ -334,27 +295,12 @@ def _newton_local(task, hp, params, batches):
     return theta, jax.tree.map(lambda x: x[-1], hs)   # last-iterate Hessian
 
 
-def _localnewton_full_client(task, hp, params, cstate, sstate, batches, rng):
-    theta, _ = _newton_local(task, hp, params, batches)
-    return {"theta": theta}, cstate
-
-
-def _fedpm_full_client(task, hp, params, cstate, sstate, batches, rng):
+def _newton_run(task, hp, params, cstate, sstate, batches, rng):
     theta, h_last = _newton_local(task, hp, params, batches)
     return {"theta": theta, "precond": h_last}, cstate
 
 
-def _fedpm_full_server(task, hp, params, sstate, msgs, part):
-    """Preconditioned mixing (Eq. 9/10): θ = (P̄)⁻¹ · mean_i P_i θ_i."""
-    pbar = part.wmean(msgs["precond"])
-    ptheta = part.wmean(
-        jax.vmap(lambda p, t: p @ t)(msgs["precond"], msgs["theta"]))
-    theta = inv.solve(pbar, ptheta[:, None], 0.0, method=hp.inverse_method,
-                      ns_iters=hp.ns_iters)[:, 0]
-    return theta, sstate
-
-
-# ==================================================== SOPM with FOOF ========
+# ---------------------------------------------------------------- foof ------
 
 def _foof_local(task, hp, params, batches):
     """K FOOF-preconditioned steps (Eq. 11).  Grams for preconditioning are
@@ -388,30 +334,14 @@ def _foof_local(task, hp, params, batches):
     return theta, grams_tx, jnp.mean(losses)
 
 
-def _localnewton_foof_client(task, hp, params, cstate, sstate, batches, rng):
-    theta, _, loss = _foof_local(task, hp, params, batches)
-    return {"theta": theta, "loss": loss}, cstate
-
-
-def _fedpm_foof_client(task, hp, params, cstate, sstate, batches, rng):
+def _foof_run(task, hp, params, cstate, sstate, batches, rng):
     theta, grams, loss = _foof_local(task, hp, params, batches)
-    return {"theta": theta, "grams": grams, "loss": loss}, cstate
+    out = {"theta": theta, "grams": grams, "loss": loss,
+           "delta": lambda: tree_sub(theta, params)}
+    return out, cstate
 
 
-def _fedpm_foof_server(task, hp, params, sstate, msgs, part):
-    """Preconditioned mixing with FOOF blocks (Eq. 12) over the gathered
-    participants, weighted by ``part.weights``.  ``part.axes`` rides into
-    the bank mixer so the sharded engine's per-shard participant buckets
-    reduce via one psum per block-size group."""
-    mixed = F.mix_preconditioned(msgs["theta"], msgs["grams"],
-                                 damping=hp.damping,
-                                 method=hp.inverse_method,
-                                 ns_iters=hp.ns_iters, weights=part.weights,
-                                 axes=part.axes)
-    return mixed, sstate
-
-
-# ------------------------------------------------ diagonal SOPM baselines ---
+# ------------------------------------------------ diagonal SOPM solvers -----
 
 def _diag_local(task, hp, params, batches, *, sophia: bool):
     """LTDA / FedSophia local steps with a diagonal curvature estimate
@@ -442,59 +372,226 @@ def _diag_local(task, hp, params, batches, *, sophia: bool):
     return theta, jnp.mean(losses)
 
 
-def _ltda_client(task, hp, params, cstate, sstate, batches, rng):
-    theta, loss = _diag_local(task, hp, params, batches, sophia=False)
-    return {"theta": theta, "loss": loss}, cstate
+def _diag_run(task, hp, params, cstate, sstate, batches, rng, *, sophia):
+    theta, loss = _diag_local(task, hp, params, batches, sophia=sophia)
+    return _derived({"theta": theta, "loss": loss},
+                    task, hp, params, theta, batches), cstate
 
 
-def _fedsophia_client(task, hp, params, cstate, sstate, batches, rng):
-    theta, loss = _diag_local(task, hp, params, batches, sophia=True)
-    return {"theta": theta, "loss": loss}, cstate
+# ============================================================ server mixers ==
+
+def _mean_mix(task, hp, params, sstate, msg, part):
+    return part.wmean(msg.theta), sstate
 
 
-# ================================================================ registry ==
-
-def batches_len(batches) -> int:
-    return jax.tree.leaves(batches)[0].shape[0]
-
-
-def _alg(name, cat, client, server, init_server=_no_server_state,
-         init_client=_no_client_state, **kw) -> Algorithm:
-    return Algorithm(name=name, category=cat, client=client, server=server,
-                     init_server=init_server, init_client=init_client, **kw)
+def _momentum_mix(task, hp, params, sstate, msg, part):
+    delta = tree_sub(part.wmean(msg.theta), params)
+    v = tree_axpy(hp.momentum, sstate, delta)   # v = m·v + Δ
+    return tree_add(params, v), v
 
 
-ALGORITHMS: dict[str, Algorithm] = {
-    "psgd": _alg("psgd", "FOGM", _psgd_client, _psgd_server),
-    "fedavg": _alg("fedavg", "FOPM", _fedavg_client, _fedavg_server),
-    "fedavgm": _alg("fedavgm", "FOPM", _fedavg_client, _fedavgm_server,
-                    init_server=lambda task, hp, p: tree_zeros_like(p)),
-    "fedprox": _alg("fedprox", "FOPM", _fedprox_client, _fedavg_server),
-    "scaffold": _alg("scaffold", "FOPM", _scaffold_client, _scaffold_server,
-                     init_server=_scaffold_init_server,
-                     init_client=_scaffold_init_client),
-    "fedadam": _alg("fedadam", "FOPM", _fedadam_client, _fedadam_server,
-                    init_server=_fedadam_init_server),
-    "fednl": _alg("fednl", "SOGM", _fednl_client, _fednl_server,
-                  needs_hessian=True),
-    "fedns": _alg("fedns", "SOGM", _fedns_client, _fedns_server,
-                  init_server=_fedns_init_server, needs_hessian=True),
-    "localnewton": _alg("localnewton", "SOPM", _localnewton_full_client,
-                        _fedavg_server, needs_hessian=True),
-    "fedpm": _alg("fedpm", "SOPM", _fedpm_full_client, _fedpm_full_server,
-                  needs_hessian=True),
-    "localnewton_foof": _alg("localnewton_foof", "SOPM",
-                             _localnewton_foof_client, _fedavg_server,
-                             needs_grams=True),
-    "ltda": _alg("ltda", "SOPM", _ltda_client, _fedavg_server),
-    "fedsophia": _alg("fedsophia", "SOPM", _fedsophia_client, _fedavg_server),
-    "fedpm_foof": _alg("fedpm_foof", "SOPM", _fedpm_foof_client,
-                       _fedpm_foof_server, needs_grams=True),
-}
+def _grad_step_mix(task, hp, params, sstate, msg, part):
+    g = part.wmean(msg.grad)
+    return tree_axpy(-hp.lr, g, params), sstate
 
 
-def get_algorithm(name: str) -> Algorithm:
-    if name not in ALGORITHMS:
-        raise KeyError(f"unknown algorithm {name!r}; "
-                       f"choose from {sorted(ALGORITHMS)}")
-    return ALGORITHMS[name]
+def _scaffold_init_server(task, hp, params):
+    return tree_zeros_like(params)
+
+
+def _scaffold_mix(task, hp, params, sstate, msg, part):
+    theta = part.wmean(msg.theta)
+    # c ← c + (S/N)·mean_S(Δc_i): explicit sampled fraction from part
+    frac = part.n_sampled / jnp.float32(part.n_total)
+    c = tree_add(sstate, tree_scale(part.wmean(msg.dc), frac))
+    new = tree_add(params, tree_scale(tree_sub(theta, params), hp.server_lr))
+    return new, c
+
+
+def _fedadam_init_server(task, hp, params):
+    return (tree_zeros_like(params), tree_zeros_like(params))
+
+
+def _adam_mix(task, hp, params, sstate, msg, part):
+    m, v = sstate
+    d = part.wmean(msg.delta)
+    m = tree_add(tree_scale(m, hp.beta1), tree_scale(d, 1 - hp.beta1))
+    v = jax.tree.map(lambda vv, dd: hp.beta2 * vv + (1 - hp.beta2) * dd * dd, v, d)
+    upd = jax.tree.map(lambda mm, vv: mm / (jnp.sqrt(vv) + hp.tau), m, v)
+    return tree_axpy(hp.server_lr, upd, params), (m, v)
+
+
+def _newton_mix(task, hp, params, sstate, msg, part):
+    g = part.wmean(msg.grad)
+    h = part.wmean(msg.hess)
+    step = inv.solve(h, g[:, None], hp.damping, method=hp.inverse_method,
+                     ns_iters=hp.ns_iters)[:, 0]
+    return params - hp.lr * step, sstate
+
+
+def _fedns_init_server(task, hp, params):
+    """The sketch frame is SHARED across clients: built once here and
+    broadcast to every client via ``sstate`` (it rides into the vmapped
+    client fn as a closure, not per-client state).  Orthonormal columns
+    (QR of a gaussian): a raw square gaussian has cond ≈ d, which squares
+    through the Nyström core solve and destroys fp32 accuracy."""
+    d = params.shape[0]
+    s = hp.sketch or d
+    gauss = jax.random.normal(jax.random.PRNGKey(42), (d, s))
+    omega, _ = jnp.linalg.qr(gauss)
+    return omega
+
+
+def _nystrom_mix(task, hp, params, sstate, msg, part):
+    """Explicit Nyström reconstruction Ĥ = Y(ΩᵀY)⁻¹Yᵀ, then a damped solve.
+    (A Woodbury identity solve is cheaper but loses ~30% accuracy to fp32
+    cancellation at δ ≲ 1e-3 — measured; EXPERIMENTS.md §Repro notes.)"""
+    g = part.wmean(msg.grad)
+    y = part.wmean(msg.sketch)
+    omega = sstate                                        # shared frame
+    core = omega.T @ y
+    core = 0.5 * (core + core.T) + 1e-6 * jnp.eye(core.shape[0])
+    h_hat = y @ jnp.linalg.solve(core, y.T)
+    h_hat = 0.5 * (h_hat + h_hat.T)
+    x = inv.solve(h_hat, g[:, None], max(hp.damping, 1e-6),
+                  method=hp.inverse_method, ns_iters=hp.ns_iters)[:, 0]
+    return params - hp.lr * x, sstate
+
+
+def _precond_full_mix(task, hp, params, sstate, msg, part):
+    """Preconditioned mixing (Eq. 9/10): θ = (P̄)⁻¹ · mean_i P_i θ_i."""
+    pbar = part.wmean(msg.precond)
+    ptheta = part.wmean(
+        jax.vmap(lambda p, t: p @ t)(msg.precond, msg.theta))
+    theta = inv.solve(pbar, ptheta[:, None], 0.0, method=hp.inverse_method,
+                      ns_iters=hp.ns_iters)[:, 0]
+    return theta, sstate
+
+
+def _precond_foof_mix(task, hp, params, sstate, msg, part):
+    """Preconditioned mixing with FOOF blocks (Eq. 12) over the gathered
+    participants, weighted by ``part.weights``.  ``part.axes`` rides into
+    the bank mixer so the sharded engine's per-shard participant buckets
+    reduce via one psum per block-size group."""
+    mixed = F.mix_preconditioned(msg.theta, msg.grams,
+                                 damping=hp.damping,
+                                 method=hp.inverse_method,
+                                 ns_iters=hp.ns_iters, weights=part.weights,
+                                 axes=part.axes)
+    return mixed, sstate
+
+
+def _scaffold_pm_mix(task, hp, params, sstate, msg, part):
+    """SCAFFOLD control variates + FedPM preconditioned mixing: the
+    cross-product the compositional registry exists for — drift-corrected
+    local steps whose results still mix through Eq. 12."""
+    mixed = F.mix_preconditioned(msg.theta, msg.grams,
+                                 damping=hp.damping,
+                                 method=hp.inverse_method,
+                                 ns_iters=hp.ns_iters, weights=part.weights,
+                                 axes=part.axes)
+    frac = part.n_sampled / jnp.float32(part.n_total)
+    c = tree_add(sstate, tree_scale(part.wmean(msg.dc), frac))
+    new = tree_add(params, tree_scale(tree_sub(mixed, params), hp.server_lr))
+    return new, c
+
+
+# ============================================================ registrations ==
+
+_SGD_HP = ("lr", "weight_decay", "clip")
+_GRAMS_HP = {"grams": ("foof_timing",)}
+_SOLVE_HP = ("damping", "inverse_method", "ns_iters")
+
+register_local(LocalUpdate(
+    "grad_only", _grad_only_run, provides=("grad",), hparams=("clip",)))
+register_local(LocalUpdate(
+    "sgd", _sgd_run, provides=("theta", "delta", "grams", "loss"),
+    metrics=("loss",), hparams=_SGD_HP, field_hparams=_GRAMS_HP))
+register_local(LocalUpdate(
+    "prox", _prox_run, provides=("theta", "delta", "grams", "loss"),
+    metrics=("loss",), hparams=_SGD_HP + ("prox_mu",),
+    field_hparams=_GRAMS_HP))
+register_local(LocalUpdate(
+    "scaffold_sgd", _scaffold_run,
+    provides=("theta", "dc", "delta", "grams", "loss"), metrics=("loss",),
+    hparams=_SGD_HP, field_hparams=_GRAMS_HP,
+    init_client=_scaffold_init_client))
+register_local(LocalUpdate(
+    "grad_hess", _fednl_run, provides=("grad", "hess", "sketch"),
+    needs_hessian=True))
+register_local(LocalUpdate(
+    "full_newton", _newton_run, provides=("theta", "precond"),
+    hparams=("lr",) + _SOLVE_HP, needs_hessian=True))
+register_local(LocalUpdate(
+    "foof", _foof_run, provides=("theta", "grams", "delta", "loss"),
+    metrics=("loss",), hparams=_SGD_HP + _SOLVE_HP + ("foof_timing",),
+    needs_grams=True))
+register_local(LocalUpdate(
+    "diag_ltda", partial(_diag_run, sophia=False),
+    provides=("theta", "delta", "grams", "loss"), metrics=("loss",),
+    hparams=_SGD_HP + ("damping", "beta2"), field_hparams=_GRAMS_HP))
+register_local(LocalUpdate(
+    "diag_sophia", partial(_diag_run, sophia=True),
+    provides=("theta", "delta", "grams", "loss"), metrics=("loss",),
+    hparams=_SGD_HP + ("beta1", "beta2", "sophia_gamma"),
+    field_hparams=_GRAMS_HP))
+
+register_mixer(ServerMixer("grad_step", needs=("grad",), mix=_grad_step_mix,
+                           hparams=("lr",)))
+register_mixer(ServerMixer("mean", needs=("theta",), mix=_mean_mix))
+register_mixer(ServerMixer(
+    "momentum", needs=("theta",), mix=_momentum_mix,
+    init_server=lambda task, hp, p: tree_zeros_like(p),
+    hparams=("momentum",)))
+register_mixer(ServerMixer(
+    "scaffold", needs=("theta", "dc"), mix=_scaffold_mix,
+    init_server=_scaffold_init_server, hparams=("server_lr",),
+    broadcasts_state=True))
+register_mixer(ServerMixer(
+    "adam", needs=("delta",), mix=_adam_mix,
+    init_server=_fedadam_init_server,
+    hparams=("server_lr", "beta1", "beta2", "tau")))
+register_mixer(ServerMixer("newton", needs=("grad", "hess"), mix=_newton_mix,
+                           hparams=("lr",) + _SOLVE_HP))
+register_mixer(ServerMixer(
+    "nystrom", needs=("grad", "sketch"), mix=_nystrom_mix,
+    init_server=_fedns_init_server, hparams=("lr", "sketch") + _SOLVE_HP,
+    broadcasts_state=True))
+register_mixer(ServerMixer(
+    "precond_full", needs=("theta", "precond"), mix=_precond_full_mix,
+    hparams=("inverse_method", "ns_iters")))
+register_mixer(ServerMixer(
+    "precond_foof", needs=("theta", "grams"), mix=_precond_foof_mix,
+    hparams=_SOLVE_HP))
+register_mixer(ServerMixer(
+    "scaffold_precond_foof", needs=("theta", "grams", "dc"),
+    mix=_scaffold_pm_mix, init_server=_scaffold_init_server,
+    hparams=_SOLVE_HP + ("server_lr",), broadcasts_state=True))
+
+# ---- the paper zoo (Table 1): bit-compatible with the pre-compositional
+# ---- monolithic closures (tests/test_api.py vs tests/legacy_zoo.py) -------
+register("psgd", "FOGM", "grad_only", "grad_step")
+register("fedavg", "FOPM", "sgd", "mean")
+register("fedavgm", "FOPM", "sgd", "momentum")
+register("fedprox", "FOPM", "prox", "mean")
+register("scaffold", "FOPM", "scaffold_sgd", "scaffold")
+register("fedadam", "FOPM", "sgd", "adam")
+register("fednl", "SOGM", "grad_hess", "newton")
+register("fedns", "SOGM", "grad_hess", "nystrom")
+register("localnewton", "SOPM", "full_newton", "mean")
+register("fedpm", "SOPM", "full_newton", "precond_full")
+register("localnewton_foof", "SOPM", "foof", "mean")
+register("ltda", "SOPM", "diag_ltda", "mean")
+register("fedsophia", "SOPM", "diag_sophia", "mean")
+register("fedpm_foof", "SOPM", "foof", "precond_foof")
+
+# ---- cross-products beyond the paper: one-line scenario registrations -----
+register("fedprox_pm", "SOPM", "prox", "precond_foof")
+register("scaffold_pm", "SOPM", "scaffold_sgd", "scaffold_precond_foof")
+
+# ---- wire-transform scenarios: same compositions, cheaper uplink ----------
+register("fedavg_bf16", "FOPM", "sgd", "mean", wire=Bf16Wire())
+register("fedadam_topk", "FOPM", "sgd", "adam",
+         wire=TopKWire(frac=0.125, fields=("delta",)))
+register("fedpm_foof_sketch", "SOPM", "foof", "precond_foof",
+         wire=GramSketchWire(rank=8, fields=("grams",)))

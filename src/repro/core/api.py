@@ -1,0 +1,525 @@
+"""Compositional algorithm API: LocalUpdate × Message × ServerMixer.
+
+The paper's core move is a *decomposition* — the ideal second-order update
+splits into local client solves and preconditioned mixing on the server
+(Eq. 6 → Eq. 9/12).  This module makes that decomposition the programming
+model: an :class:`Algorithm` is the composition of
+
+* a :class:`LocalUpdate` — the client-side solver (sgd / prox / scaffold /
+  full-newton / foof / diagonal-sophia ...).  Each declares ``provides``
+  (the message fields it can furnish, some lazily) and ``hparams`` (the
+  :class:`~repro.core.algorithms.HParams` fields it actually reads, instead
+  of implicitly depending on the whole flat grab-bag);
+* a :class:`Message` — a typed, pytree-registered dataclass replacing the
+  ad-hoc ``{"theta": ..., "loss": ...}`` dicts.  Its ``WIRE`` fields are
+  exactly what crosses the client→server wire; ``METRICS`` fields (the
+  per-round ``loss``) are telemetry and excluded from
+  :meth:`Message.bytes_on_wire`;
+* a :class:`ServerMixer` — the server-side aggregation (mean / momentum /
+  adam / scaffold-control / preconditioned-mix ...).  Each declares
+  ``needs`` — the wire fields it consumes — and aggregates through the
+  engine-supplied ``Participation`` only, so mixers stay engine-agnostic
+  (vmap stack, or sharded buckets with psum axes).
+
+:func:`register` composes the three into the engine-facing
+``(init_server, init_client, client, server)`` quadruple: the registry is
+a *cross-product* — new scenarios (fedprox local + preconditioned mixing,
+scaffold + FOOF) are one-line registrations, not copy-pasted closures.
+
+Wire transforms
+---------------
+A registration may attach a :class:`WireTransform` — a pure-jax
+encode/decode pair applied at the client→server boundary (encode inside
+the vmapped client fn, decode on the stacked messages before the mixer).
+Transforms change what the ``WIRE`` fields *hold* (bf16 leaves, top-k
+(values, indices) pairs, rank-r gram sketches), which is exactly what the
+bytes accounting measures — the communication-cost axis that Fed-Sophia
+and FedNS-style sketching make central to second-order FL.
+
+Everything stays a pure pytree: messages (transformed or not) scan, vmap,
+donate, and shard exactly like the dicts they replace — the round-body
+purity contract of ``repro.fl.simulate.FedSim.run_scanned`` is unchanged.
+
+Communication accounting
+------------------------
+:func:`comm_cost` computes exact per-client ``bytes_up`` (the encoded
+message's wire fields) and ``bytes_down`` (params, plus server state for
+mixers that broadcast it — SCAFFOLD's control variate, FedNS's sketch
+frame) via ``jax.eval_shape`` — no compilation, no execution.  The
+simulation engine surfaces these as per-round ``bytes_up``/``bytes_down``
+metrics.
+
+This module is framework only; the concrete solvers/mixers and the zoo
+registrations live in :mod:`repro.core.algorithms`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from functools import lru_cache
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+CATEGORIES = ("FOGM", "FOPM", "SOGM", "SOPM")
+
+
+def _no_server_state(task, hp, params):
+    return ()
+
+
+def _no_client_state(task, params):
+    return ()
+
+
+# ================================================================ messages ==
+
+class Message:
+    """Base for typed wire messages.
+
+    Subclasses (built by :func:`message_cls`) are frozen dataclasses
+    registered as jax pytrees.  ``WIRE`` names the fields that cross the
+    client→server wire; ``METRICS`` names telemetry fields (``loss``)
+    that ride along for the engine's per-round metrics but are not part
+    of the communication payload.
+    """
+    WIRE: tuple = ()
+    METRICS: tuple = ()
+
+    def wire_tree(self) -> dict:
+        """The wire payload as a dict pytree (what a transport would send)."""
+        return {f: getattr(self, f) for f in self.WIRE}
+
+    def bytes_on_wire(self) -> int:
+        """Exact payload bytes of the WIRE fields.  Works on concrete
+        arrays and on ``jax.eval_shape`` structs alike."""
+        return wire_bytes(self.wire_tree())
+
+
+def wire_bytes(tree: PyTree) -> int:
+    """Total bytes of a pytree's leaves (arrays or ShapeDtypeStructs)."""
+    total = 0
+    for x in jax.tree.leaves(tree):
+        total += int(np.prod(getattr(x, "shape", ()))) * \
+            np.dtype(x.dtype).itemsize
+    return total
+
+
+@lru_cache(maxsize=None)
+def message_cls(wire: tuple, metrics: tuple = ()) -> type:
+    """The typed message dataclass for a (wire, metrics) field set.
+
+    Cached so every registration with the same field set shares one
+    class (and one pytree registration).  Field order is wire then
+    metrics — stable, so jaxpr/pytree structure is deterministic.
+    """
+    fields = tuple(wire) + tuple(metrics)
+    if len(set(fields)) != len(fields):
+        raise ValueError(f"duplicate message fields: {fields}")
+    name = "Msg_" + "_".join(fields) if fields else "Msg_empty"
+    cls = dataclasses.make_dataclass(name, fields, bases=(Message,),
+                                     frozen=True)
+    cls.WIRE = tuple(wire)
+    cls.METRICS = tuple(metrics)
+    jax.tree_util.register_pytree_node(
+        cls,
+        lambda m: (tuple(getattr(m, f) for f in fields), None),
+        lambda _, children: cls(*children))
+    return cls
+
+
+def client_loss(msgs):
+    """The per-round loss metric of a stacked message, or None.
+
+    Accepts typed messages and legacy dict messages (custom Algorithm
+    objects built outside the registry keep working).
+    """
+    if isinstance(msgs, Message):
+        return getattr(msgs, "loss", None) if "loss" in msgs.METRICS else None
+    if isinstance(msgs, dict):
+        return msgs.get("loss")
+    return None
+
+
+# ========================================================= wire transforms ==
+
+class WireTransform:
+    """Pure-jax encode/decode applied at the client→server boundary.
+
+    ``encode`` runs inside the (vmapped) client fn on a single client's
+    message; ``decode`` runs server-side on the participant-stacked
+    message (leading axis S) and receives the server's ``params`` as the
+    reference tree for fields that mirror the parameter structure.
+    Both must be pure jax (scan/vmap/shard_map safe).
+    """
+    name: str = "identity"
+    #: message fields the transform touches; () = every WIRE field
+    fields: tuple = ()
+
+    def _targets(self, msg: Message) -> tuple:
+        return tuple(self.fields) or msg.WIRE
+
+    def encode(self, msg: Message) -> Message:
+        return msg
+
+    def decode(self, msgs: Message, params: PyTree) -> Message:
+        return msgs
+
+    def _map_fields(self, msg, fn):
+        return dataclasses.replace(
+            msg, **{f: fn(getattr(msg, f)) for f in self._targets(msg)
+                    if f in msg.WIRE})
+
+
+@dataclass(frozen=True)
+class Bf16Wire(WireTransform):
+    """Cast float wire leaves to bfloat16 on the wire (2× uplink saving);
+    the server decodes back to float32 before aggregation."""
+    fields: tuple = ()
+    name: str = "bf16"
+
+    def encode(self, msg):
+        cast = lambda t: jax.tree.map(
+            lambda x: x.astype(jnp.bfloat16)
+            if jnp.issubdtype(x.dtype, jnp.floating) else x, t)
+        return self._map_fields(msg, cast)
+
+    def decode(self, msgs, params):
+        up = lambda t: jax.tree.map(
+            lambda x: x.astype(jnp.float32)
+            if x.dtype == jnp.bfloat16 else x, t)
+        return self._map_fields(msgs, up)
+
+
+@dataclass(frozen=True)
+class TopKWire(WireTransform):
+    """Magnitude top-k sparsification of params-shaped wire fields
+    (``delta``/``theta``/``grad``): each leaf becomes a
+    ``{"v": [k], "i": [k] int32}`` pair; the server scatters back to
+    dense (zeros elsewhere).  ``frac`` is the kept fraction per leaf."""
+    frac: float = 0.1
+    fields: tuple = ("delta",)
+    name: str = "topk"
+
+    def _k(self, n: int) -> int:
+        return max(1, int(n * self.frac))
+
+    def encode(self, msg):
+        def enc_leaf(x):
+            flat = x.reshape(-1)
+            _, i = jax.lax.top_k(jnp.abs(flat), self._k(flat.shape[0]))
+            return {"v": jnp.take(flat, i), "i": i.astype(jnp.int32)}
+        return self._map_fields(msg, lambda t: jax.tree.map(enc_leaf, t))
+
+    def decode(self, msgs, params):
+        def dec_field(enc_tree, ref_tree):
+            def dec_leaf(enc, ref):
+                n = int(np.prod(ref.shape))
+                dense = jax.vmap(
+                    lambda v, i: jnp.zeros((n,), v.dtype).at[i].set(v))(
+                        enc["v"], enc["i"])
+                return dense.reshape(enc["v"].shape[0], *ref.shape)
+            # enc_tree nests {"v","i"} below each ref leaf — walk ref
+            return jax.tree.map(
+                lambda ref, enc: dec_leaf(enc, ref), ref_tree, enc_tree,
+                is_leaf=lambda x: isinstance(x, dict) and set(x) == {"v", "i"})
+        return dataclasses.replace(
+            msgs, **{f: dec_field(getattr(msgs, f), params)
+                     for f in self._targets(msgs) if f in msgs.WIRE})
+
+
+@lru_cache(maxsize=None)
+def _sketch_frame(bs: int, rank: int) -> np.ndarray:
+    """Deterministic orthonormal [bs, rank] test frame (shared by every
+    client and the server — the FedNS trick, no frame on the wire)."""
+    gauss = np.random.default_rng(7).normal(size=(bs, rank))
+    q, _ = np.linalg.qr(gauss)
+    return q.astype(np.float32)
+
+
+@dataclass(frozen=True)
+class GramSketchWire(WireTransform):
+    """Rank-r Nyström sketch of square gram blocks: a ``[..., bs, bs]``
+    SPD block ships as ``{"ny": Y = A @ Ω}`` (``[..., bs, r]``, r < bs);
+    the server reconstructs ``Â = Y (ΩᵀY)⁻¹ Yᵀ``.  Leaves that are not
+    square blocks (diagonal embedding grams, size-0 placeholders,
+    rectangular arrays) — or already at/below the rank — pass through
+    untouched.  The ``{"ny": ...}`` wrapper marks exactly the encoded
+    leaves, so decode can never mistake an unencoded tall array (e.g. a
+    params-shaped field the transform was misregistered on) for a
+    sketch; wrapping adds pytree structure, not wire bytes."""
+    rank: int = 8
+    fields: tuple = ("grams",)
+    name: str = "gram_sketch"
+
+    def _is_block(self, x) -> bool:
+        return (getattr(x, "ndim", 0) >= 2 and x.shape[-1] == x.shape[-2]
+                and x.shape[-1] > 1 and x.size > 0)
+
+    def encode(self, msg):
+        def enc_leaf(x):
+            if not self._is_block(x) or x.shape[-1] <= self.rank:
+                return x          # nothing to compress: ship A itself
+            omega = jnp.asarray(_sketch_frame(x.shape[-1], self.rank))
+            return {"ny": x.astype(jnp.float32) @ omega}
+        return self._map_fields(msg, lambda t: jax.tree.map(enc_leaf, t))
+
+    def decode(self, msgs, params):
+        def dec_leaf(leaf):
+            if not (isinstance(leaf, dict) and set(leaf) == {"ny"}):
+                return leaf                        # was never encoded
+            y = leaf["ny"]
+            bs, r = y.shape[-2], y.shape[-1]
+            omega = jnp.asarray(_sketch_frame(bs, r))
+            core = jnp.swapaxes(y, -1, -2) @ omega    # YᵀΩ = ΩᵀAΩ (A SPD)
+            core = 0.5 * (core + jnp.swapaxes(core, -1, -2)) \
+                + 1e-6 * jnp.eye(r, dtype=y.dtype)
+            a_hat = y @ jnp.linalg.solve(core, jnp.swapaxes(y, -1, -2))
+            return 0.5 * (a_hat + jnp.swapaxes(a_hat, -1, -2))
+        is_enc = lambda x: isinstance(x, dict) and set(x) == {"ny"}
+        return self._map_fields(
+            msgs, lambda t: jax.tree.map(dec_leaf, t, is_leaf=is_enc))
+
+
+# ============================================================== components ==
+
+@dataclass(frozen=True)
+class LocalUpdate:
+    """A client-side solver.
+
+    ``run(task, hp, params, cstate, sstate, batches, rng) ->
+    (fields, new_cstate)`` where ``fields`` maps every name in
+    ``provides`` to a value or a 0-arg thunk (lazy — only the fields the
+    composed message actually carries are materialized, so e.g. grams
+    are never computed for a plain-mean registration).
+
+    ``hparams`` declares the :class:`HParams` fields the solver reads;
+    ``field_hparams`` adds per-optional-field extras (e.g. transmitting
+    ``grams`` reads ``foof_timing``).  Declarations are enforced by the
+    registry sweep test: perturbing any *undeclared* field must not
+    change the round's output bitwise.
+    """
+    name: str
+    run: Callable
+    provides: tuple
+    metrics: tuple = ()
+    hparams: tuple = ()
+    field_hparams: dict = field(default_factory=dict)
+    init_client: Callable = _no_client_state
+    needs_hessian: bool = False
+    needs_grams: bool = False
+
+
+@dataclass(frozen=True)
+class ServerMixer:
+    """A server-side aggregation rule.
+
+    ``mix(task, hp, params, sstate, msg, part) -> (new_params, sstate)``
+    consumes the participant-stacked typed message and aggregates ONLY
+    through ``part`` (``wmean`` / ``n_sampled`` / ``axes``) so the same
+    mixer runs on the vmap stack and inside sharded shard_map buckets.
+    ``needs`` are the wire fields it consumes — the registry builds the
+    message from exactly these.  ``broadcasts_state = True`` marks
+    mixers whose server state rides the downlink to every client
+    (SCAFFOLD's control variate, FedNS's sketch frame) for the
+    ``bytes_down`` accounting.
+    """
+    name: str
+    needs: tuple
+    mix: Callable
+    init_server: Callable = _no_server_state
+    hparams: tuple = ()
+    broadcasts_state: bool = False
+
+
+@dataclass(frozen=True)
+class Algorithm:
+    """An engine-facing algorithm (possibly composed via :func:`register`).
+
+    The engine contract is unchanged from the monolithic zoo:
+    ``init_server/init_client/client/server`` with ``client`` vmapped
+    over participants and ``server`` consuming the stacked messages plus
+    a ``Participation``.  Composed instances additionally carry their
+    parts (``local``, ``mixer``, ``wire``, ``message_cls``) for
+    introspection, docs tables, and comm accounting.
+    """
+    name: str
+    category: str
+    init_server: Callable
+    init_client: Callable
+    client: Callable
+    server: Callable
+    needs_hessian: bool = False
+    needs_grams: bool = False
+    local: LocalUpdate | None = None
+    mixer: ServerMixer | None = None
+    wire: WireTransform | None = None
+    message_cls: type | None = None
+
+    @property
+    def hparams(self) -> tuple:
+        """HParams fields this algorithm reads (sorted union of its
+        parts' declarations, including per-wire-field extras)."""
+        if self.local is None or self.mixer is None:
+            return ()
+        hs = set(self.local.hparams) | set(self.mixer.hparams)
+        for f in self.mixer.needs:
+            hs |= set(self.local.field_hparams.get(f, ()))
+        return tuple(sorted(hs))
+
+
+# ================================================================ registry ==
+
+LOCAL_UPDATES: dict[str, LocalUpdate] = {}
+SERVER_MIXERS: dict[str, ServerMixer] = {}
+ALGORITHMS: dict[str, Algorithm] = {}
+
+
+def register_local(lu: LocalUpdate) -> LocalUpdate:
+    if lu.name in LOCAL_UPDATES:
+        raise ValueError(f"local update {lu.name!r} already registered")
+    LOCAL_UPDATES[lu.name] = lu
+    return lu
+
+
+def register_mixer(m: ServerMixer) -> ServerMixer:
+    if m.name in SERVER_MIXERS:
+        raise ValueError(f"server mixer {m.name!r} already registered")
+    SERVER_MIXERS[m.name] = m
+    return m
+
+
+def _compose_client(local: LocalUpdate, mcls: type,
+                    wire: WireTransform | None) -> Callable:
+    def client(task, hp, params, cstate, sstate, batches, rng):
+        out, new_cstate = local.run(task, hp, params, cstate, sstate,
+                                    batches, rng)
+        kw = {}
+        for f in mcls.WIRE + mcls.METRICS:
+            v = out[f]
+            kw[f] = v() if callable(v) else v
+        msg = mcls(**kw)
+        if wire is not None:
+            msg = wire.encode(msg)
+        return msg, new_cstate
+    return client
+
+
+def _compose_server(mixer: ServerMixer, wire: WireTransform | None
+                    ) -> Callable:
+    def server(task, hp, params, sstate, msgs, part):
+        if wire is not None:
+            msgs = wire.decode(msgs, params)
+        return mixer.mix(task, hp, params, sstate, msgs, part)
+    return server
+
+
+def register(name: str, category: str, local: str | LocalUpdate,
+             mixer: str | ServerMixer, *, wire: WireTransform | None = None
+             ) -> Algorithm:
+    """Compose a LocalUpdate and a ServerMixer (plus an optional wire
+    transform) into a named, engine-ready :class:`Algorithm`."""
+    if name in ALGORITHMS:
+        raise ValueError(f"algorithm {name!r} already registered")
+    if category not in CATEGORIES:
+        raise ValueError(f"category {category!r} not in {CATEGORIES}")
+    lu = LOCAL_UPDATES[local] if isinstance(local, str) else local
+    mx = SERVER_MIXERS[mixer] if isinstance(mixer, str) else mixer
+    missing = [f for f in mx.needs if f not in lu.provides]
+    if missing:
+        raise ValueError(
+            f"{name!r}: mixer {mx.name!r} needs {missing} which local "
+            f"update {lu.name!r} does not provide (provides {lu.provides})")
+    mcls = message_cls(tuple(mx.needs), tuple(lu.metrics))
+    algo = Algorithm(
+        name=name, category=category,
+        init_server=mx.init_server, init_client=lu.init_client,
+        client=_compose_client(lu, mcls, wire),
+        server=_compose_server(mx, wire),
+        needs_hessian=lu.needs_hessian,
+        needs_grams=lu.needs_grams or "grams" in mx.needs,
+        local=lu, mixer=mx, wire=wire, message_cls=mcls)
+    ALGORITHMS[name] = algo
+    return algo
+
+
+def get_algorithm(name: str) -> Algorithm:
+    import repro.core.algorithms  # noqa: F401  (populates the registry)
+    if name not in ALGORITHMS:
+        raise KeyError(f"unknown algorithm {name!r}; "
+                       f"choose from {sorted(ALGORITHMS)}")
+    return ALGORITHMS[name]
+
+
+def unused_hparams(algo: Algorithm, hp) -> tuple:
+    """HParams fields set away from their defaults that ``algo`` declares
+    it never reads — a registration-metadata lint for experiment configs."""
+    if algo.local is None:
+        return ()
+    read = set(algo.hparams)
+    out = []
+    for f in dataclasses.fields(hp):
+        if f.name not in read and getattr(hp, f.name) != f.default:
+            out.append(f.name)
+    return tuple(out)
+
+
+# ========================================================= comm accounting ==
+
+def message_struct(algo: Algorithm, task, hp, params, cstate, sstate,
+                   batch) -> Message:
+    """Shape-only evaluation of one client's (encoded) message.
+
+    All tree args may be concrete arrays or ShapeDtypeStructs; nothing is
+    executed or compiled.  ``batch`` is ONE client's ``[K, B, ...]``
+    batches."""
+    msg, _ = jax.eval_shape(
+        lambda p, c, sv, b, r: algo.client(task, hp, p, c, sv, b, r),
+        params, cstate, sstate, batch, jax.random.PRNGKey(0))
+    return msg
+
+
+def downlink_bytes(algo: Algorithm, params, sstate) -> int:
+    """Per-client downlink payload: the params broadcast, plus server
+    state for mixers that broadcast it (SCAFFOLD's control variate,
+    FedNS's sketch frame).  THE definition of ``bytes_down`` — shared by
+    :func:`comm_cost` and the engine's per-round metrics."""
+    down = wire_bytes(params)
+    if algo.mixer is not None and algo.mixer.broadcasts_state:
+        down += wire_bytes(sstate)
+    return down
+
+
+def message_wire_bytes(msg) -> int:
+    """Uplink payload bytes of one client's message (typed messages count
+    WIRE fields only; legacy dict messages count everything but the
+    ``loss`` metric)."""
+    if isinstance(msg, Message):
+        return msg.bytes_on_wire()
+    if isinstance(msg, dict):                  # legacy dict message
+        return wire_bytes({k: v for k, v in msg.items() if k != "loss"})
+    return wire_bytes(msg)
+
+
+def comm_cost(algo: Algorithm | str, task, hp, batch, *, s: int = 1,
+              rng=None) -> dict:
+    """Exact per-round communication cost for a cohort of ``s`` clients.
+
+    ``bytes_up`` counts the encoded WIRE fields of every participant's
+    message; ``bytes_down`` counts the params broadcast (plus server
+    state for ``broadcasts_state`` mixers).  Pure ``eval_shape`` — safe
+    to call on any model size."""
+    algo = get_algorithm(algo) if isinstance(algo, str) else algo
+    rng = jax.random.PRNGKey(0) if rng is None else rng
+    params = jax.eval_shape(task.init, rng)
+    sstate = jax.eval_shape(lambda p: algo.init_server(task, hp, p), params)
+    cstate = jax.eval_shape(lambda p: algo.init_client(task, p), params)
+    msg = message_struct(algo, task, hp, params, cstate, sstate, batch)
+    up = message_wire_bytes(msg)
+    down = downlink_bytes(algo, params, sstate)
+    return {"bytes_up": up * s, "bytes_down": down * s,
+            "bytes_up_per_client": up, "bytes_down_per_client": down}

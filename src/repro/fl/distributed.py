@@ -28,6 +28,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import foof as F
 from repro.core.algorithms import HParams
+from repro.core.api import wire_bytes
 from repro.distributed.axes import present_client_axes, shard_map
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
@@ -181,6 +182,21 @@ def make_local_steps_round(cfg: ModelConfig, hp: HParams,
         return mixed, {"loss": loss}
 
     return round_fn
+
+
+def round_wire_cost(cfg: ModelConfig, batch, hp: HParams) -> dict:
+    """Exact per-cohort communication volume of one ``local_steps`` round
+    (what the mesh collectives move per client cohort): uplink is the
+    Eq. 12 mixing payload — local params θ_K plus the transmitted FOOF
+    grams — and downlink is the mixed params broadcast.  Pure
+    ``jax.eval_shape`` (safe at 405B-scale configs); same accounting as
+    ``repro.core.api.comm_cost`` for the simulation engines."""
+    params = T.abstract_params(cfg)
+    grams = jax.eval_shape(
+        lambda p, b: T.loss_fn(cfg, p, b, collect_foof=True)[1]["grams"],
+        params, batch)
+    p_bytes = wire_bytes(params)
+    return {"bytes_up": p_bytes + wire_bytes(grams), "bytes_down": p_bytes}
 
 
 # ============================================================== serving =====

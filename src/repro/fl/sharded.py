@@ -43,6 +43,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.algorithms import Participation
 from repro.distributed.axes import CLIENTS_AXIS, make_client_mesh, shard_map
+from repro.fl.simulate import round_metrics
 
 PyTree = Any
 
@@ -187,13 +188,9 @@ def make_sharded_round(task, algo, hp, n_clients: int,
             # ---- scatter: shard-local writes; padding slots drop ------
             new_clients = jax.tree.map(
                 lambda b, u: b.at[li].set(u, mode="drop"), lclients, updated)
-            metrics = {}
-            if isinstance(msgs, dict) and "loss" in msgs:
-                wf = lw.astype(jnp.float32)
-                num, den = jax.lax.psum(
-                    (jnp.sum(wf * msgs["loss"]), jnp.sum(wf)),
-                    (CLIENTS_AXIS,))
-                metrics["client_loss"] = num / jnp.maximum(den, 1e-12)
+            # metrics go through the SAME fp32 wmean as the vmap engine
+            # (part.axes turns the mean into partial sums + one psum)
+            metrics = round_metrics(msgs, part)
             return new_params, new_server, new_clients, metrics
 
         shd = P(CLIENTS_AXIS)

@@ -52,10 +52,21 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import api as API
 from repro.core.algorithms import (Algorithm, HParams, Participation,
                                    get_algorithm)
 
 PyTree = Any
+
+
+def round_metrics(msgs, part: Participation) -> dict:
+    """Engine-shared per-round metrics from the stacked client messages:
+    the weighted-mean ``client_loss`` (when the message carries a loss),
+    aggregated through ``part.wmean`` so the vmap and sharded engines
+    share ONE fp32 aggregation path (``part.axes`` inserts the
+    cross-shard psum)."""
+    loss = API.client_loss(msgs)
+    return {} if loss is None else {"client_loss": part.wmean(loss)}
 
 
 @dataclass
@@ -143,6 +154,7 @@ class FedSim:
                                  donate_argnums=(0, 1, 2))
         self._full_idx = None         # cached identity-cohort device arrays
         self._full_w = None
+        self._comm_cache = {}         # per-batch-struct (up, down) bytes
         if mesh is None:
             self._banked_jit = jax.jit(self._round_banked,
                                        static_argnames=("s", "sample"),
@@ -177,6 +189,54 @@ class FedSim:
             params = self._sharded.replicate(self.mesh, params)
             server = self._sharded.replicate(self.mesh, server)
         return FedState(params=params, server=server, clients=clients)
+
+    # ---------------------------------------------------- comm accounting --
+
+    def _comm_metrics(self, state: FedState, one_batch, s: int) -> dict:
+        """Per-round ``bytes_up``/``bytes_down`` for a cohort of S clients.
+
+        ``one_batch`` is ONE client's ``[K, B, ...]`` batch pytree (arrays
+        or structs).  Pure ``jax.eval_shape`` through the algorithm's
+        client fn — the ENCODED message's declared WIRE fields are what's
+        counted, so wire transforms (bf16 / top-k / gram sketch) show up
+        directly in the metric.  Cached per batch struct; must run before
+        the round jit (which donates/deletes the state's buffers).
+        """
+        key = tuple((tuple(x.shape), str(np.dtype(x.dtype)))
+                    for x in jax.tree.leaves(one_batch))
+        cached = self._comm_cache.get(key)
+        if cached is None:
+            sds = partial(jax.tree.map,
+                          lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype))
+            p, sv = sds(state.params), sds(state.server)
+            c = jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype),
+                state.clients)
+            msg = API.message_struct(self.algo, self.task, self.hp, p, c,
+                                     sv, one_batch)
+            up = API.message_wire_bytes(msg)
+            down = API.downlink_bytes(self.algo, p, sv)
+            cached = self._comm_cache[key] = (up, down)
+        up, down = cached
+        return {"bytes_up": up * s, "bytes_down": down * s}
+
+    def _banked_batch_struct(self, bank):
+        """ONE client's batch struct as drawn from the resident bank
+        (cached — the banked per-round path calls this every round).
+        Keyed by the bank's own leaf shapes/dtypes plus its static spec,
+        never by object identity (ids get recycled, and the spec alone
+        omits the feature shapes)."""
+        key = ("bank", bank.spec,
+               tuple((tuple(x.shape), str(np.dtype(x.dtype)))
+                     for x in jax.tree.leaves(bank)))
+        cached = self._comm_cache.get(key)
+        if cached is None:
+            one = jax.eval_shape(
+                lambda b: b.sample(jax.random.PRNGKey(0),
+                                   jnp.zeros((1,), jnp.int32)), bank)
+            cached = self._comm_cache[key] = jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype), one)
+        return cached
 
     # ------------------------------------------------------------ round ----
 
@@ -322,11 +382,7 @@ class FedSim:
         # ---- scatter: write back ONLY the participants' states ----------
         new_clients = updated if full else jax.tree.map(
             lambda bank, upd: bank.at[idx].set(upd), clients, updated)
-        metrics = {}
-        if isinstance(msgs, dict) and "loss" in msgs:
-            metrics["client_loss"] = jnp.sum(msgs["loss"] * weights) / \
-                jnp.maximum(jnp.sum(weights), 1e-12)
-        return new_params, new_server, new_clients, metrics
+        return new_params, new_server, new_clients, round_metrics(msgs, part)
 
     def round(self, state: FedState, client_batches, rng,
               mask=None, *, participants=None,
@@ -343,6 +399,12 @@ class FedSim:
         ``client_batches`` is then unambiguously the client-ordered bank
         (pre-gathered batches in a permuted participant order are only
         meaningful for S < N).
+
+        Returned metrics include the round's exact communication volume
+        (``bytes_up``/``bytes_down`` — host ints from the eval_shape
+        accounting in :mod:`repro.core.api`, scaled by the cohort size)
+        and, when the algorithm's message carries a loss, the
+        ``client_loss`` weighted mean.
 
         ``client_batches=None`` selects the BANKED round: the task's
         resident data bank draws the batches in-graph, and ``rng`` is the
@@ -392,6 +454,10 @@ class FedSim:
             order = np.argsort(idx)
             idx = idx[order]
             weights = weights[order]
+        one_batch = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype),
+            client_batches)
+        comm = self._comm_metrics(state, one_batch, int(idx.size))
         if self.mesh is not None:
             p, s, c, metrics = self._round_sharded(state, client_batches,
                                                    rng, idx, weights)
@@ -409,6 +475,7 @@ class FedSim:
             p, s, c, metrics = self._round_jit(
                 state.params, state.server, state.clients, client_batches,
                 rng, idx_dev, w_dev, full=full)
+        metrics = dict(metrics, **comm)
         return FedState(params=p, server=s, clients=c,
                         round=state.round + 1), metrics
 
@@ -446,9 +513,11 @@ class FedSim:
                 idx_dev = jnp.asarray(idx, jnp.int32)
         else:
             s, sample = self.n, False
+        comm = self._comm_metrics(state, self._banked_batch_struct(bank), s)
         p, sv, c, metrics = self._banked_jit(
             state.params, state.server, state.clients, bank, rng, idx_dev,
             s=s, sample=sample)
+        metrics = dict(metrics, **comm)
         return FedState(params=p, server=sv, clients=c,
                         round=state.round + 1), metrics
 

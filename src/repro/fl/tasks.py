@@ -1,8 +1,11 @@
 """Task adapters binding models to the algorithm interface.
 
-A *task* exposes exactly what algorithms consume:
+A *task* exposes exactly what the registry's LocalUpdate solvers
+(``repro.core.api``) consume:
     loss_grad(params, batch) -> (loss, grads)
-    grams(params, batch)     -> FOOF gram tree       (SOPM/foof methods)
+    grams(params, batch)     -> FOOF gram tree       (any solver composed
+                                with a preconditioned mixer — foof, or the
+                                sgd-family's lazy ``grams`` wire field)
     hessian(params, batch)   -> [d, d]               (flat convex only)
 
 Tasks optionally carry a RESIDENT federated data bank (``data``, a

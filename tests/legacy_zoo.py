@@ -1,0 +1,339 @@
+"""FROZEN pre-compositional algorithm zoo — the bit-compat oracle.
+
+This is a verbatim copy of the monolithic ``_xxx_client``/``_xxx_server``
+closure pairs that ``repro.core.algorithms`` shipped before the
+compositional LocalUpdate × Message × ServerMixer registry (PR 5).  The
+registry's 14 paper compositions must reproduce these BITWISE through the
+same engine (tests/test_api.py) — do not "fix" or modernize this module;
+its value is that it does not change.
+
+Messages here are the historical untyped dicts; the engine still accepts
+them (``repro.core.api.client_loss`` and the comm accounting handle dict
+messages), which this oracle also exercises.
+"""
+import jax
+import jax.numpy as jnp
+
+import sys
+
+from repro.core import foof as F
+import repro.core.inverse  # noqa: F401  (repro.core.__init__ shadows the
+# submodule attribute with the same-named function; fetch the module)
+inv = sys.modules["repro.core.inverse"]
+from repro.core.algorithms import batches_len
+from repro.core.api import Algorithm
+from repro.utils import (tree_add, tree_axpy, tree_scale, tree_sub,
+                         tree_zeros_like, global_norm_clip)
+
+
+def _no_server_state(task, hp, params):
+    return ()
+
+
+def _no_client_state(task, params):
+    return ()
+
+
+def _grad_step(task, hp, params, batch, extra=None):
+    loss, g = task.loss_grad(params, batch)
+    if extra is not None:
+        g = tree_add(g, extra)
+    if hp.weight_decay:
+        g = tree_axpy(hp.weight_decay, params, g)
+    g = global_norm_clip(g, hp.clip)
+    return tree_axpy(-hp.lr, g, params), loss
+
+
+def _sgd_local(task, hp, params, batches, extra_fn=None):
+    def step(theta, batch):
+        extra = extra_fn(theta) if extra_fn is not None else None
+        theta, loss = _grad_step(task, hp, theta, batch, extra)
+        return theta, loss
+
+    theta, losses = jax.lax.scan(step, params, batches)
+    return theta, jnp.mean(losses)
+
+
+# ================================================================= FOGM =====
+
+def _psgd_client(task, hp, params, cstate, sstate, batches, rng):
+    first = jax.tree.map(lambda x: x[0], batches)
+    _, g = task.loss_grad(params, first)
+    g = global_norm_clip(g, hp.clip)
+    return {"grad": g}, cstate
+
+
+def _psgd_server(task, hp, params, sstate, msgs, part):
+    g = part.wmean(msgs["grad"])
+    return tree_axpy(-hp.lr, g, params), sstate
+
+
+# ================================================================= FOPM =====
+
+def _fedavg_client(task, hp, params, cstate, sstate, batches, rng):
+    theta, loss = _sgd_local(task, hp, params, batches)
+    return {"theta": theta, "loss": loss}, cstate
+
+
+def _fedavg_server(task, hp, params, sstate, msgs, part):
+    return part.wmean(msgs["theta"]), sstate
+
+
+def _fedavgm_server(task, hp, params, sstate, msgs, part):
+    delta = tree_sub(part.wmean(msgs["theta"]), params)
+    v = tree_axpy(hp.momentum, sstate, delta)
+    return tree_add(params, v), v
+
+
+def _fedprox_client(task, hp, params, cstate, sstate, batches, rng):
+    theta0 = params
+    theta, loss = _sgd_local(
+        task, hp, params, batches,
+        extra_fn=lambda th: tree_scale(tree_sub(th, theta0), hp.prox_mu))
+    return {"theta": theta, "loss": loss}, cstate
+
+
+def _scaffold_init_client(task, params):
+    return tree_zeros_like(params)
+
+
+def _scaffold_init_server(task, hp, params):
+    return tree_zeros_like(params)
+
+
+def _scaffold_client(task, hp, params, cstate, sstate, batches, rng):
+    c_i, c = cstate, sstate
+    corr = tree_sub(c, c_i)
+    theta0 = params
+    theta, loss = _sgd_local(task, hp, params, batches,
+                             extra_fn=lambda th: corr)
+    k = batches_len(batches)
+    c_i_new = tree_add(tree_sub(c_i, c),
+                       tree_scale(tree_sub(theta0, theta), 1.0 / (k * hp.lr)))
+    return {"theta": theta, "dc": tree_sub(c_i_new, c_i), "loss": loss}, c_i_new
+
+
+def _scaffold_server(task, hp, params, sstate, msgs, part):
+    theta = part.wmean(msgs["theta"])
+    frac = part.n_sampled / jnp.float32(part.n_total)
+    c = tree_add(sstate, tree_scale(part.wmean(msgs["dc"]), frac))
+    new = tree_add(params, tree_scale(tree_sub(theta, params), hp.server_lr))
+    return new, c
+
+
+def _fedadam_init_server(task, hp, params):
+    return (tree_zeros_like(params), tree_zeros_like(params))
+
+
+def _fedadam_client(task, hp, params, cstate, sstate, batches, rng):
+    theta, loss = _sgd_local(task, hp, params, batches)
+    return {"delta": tree_sub(theta, params), "loss": loss}, cstate
+
+
+def _fedadam_server(task, hp, params, sstate, msgs, part):
+    m, v = sstate
+    d = part.wmean(msgs["delta"])
+    m = tree_add(tree_scale(m, hp.beta1), tree_scale(d, 1 - hp.beta1))
+    v = jax.tree.map(lambda vv, dd: hp.beta2 * vv + (1 - hp.beta2) * dd * dd, v, d)
+    upd = jax.tree.map(lambda mm, vv: mm / (jnp.sqrt(vv) + hp.tau), m, v)
+    return tree_axpy(hp.server_lr, upd, params), (m, v)
+
+
+# ======================================================= SOGM (flat only) ===
+
+def _fednl_client(task, hp, params, cstate, sstate, batches, rng):
+    first = jax.tree.map(lambda x: x[0], batches)
+    _, g = task.loss_grad(params, first)
+    h = task.hessian(params, first)
+    return {"grad": g, "hess": h}, cstate
+
+
+def _fednl_server(task, hp, params, sstate, msgs, part):
+    g = part.wmean(msgs["grad"])
+    h = part.wmean(msgs["hess"])
+    step = inv.solve(h, g[:, None], hp.damping, method=hp.inverse_method,
+                     ns_iters=hp.ns_iters)[:, 0]
+    return params - hp.lr * step, sstate
+
+
+def _fedns_init_server(task, hp, params):
+    d = params.shape[0]
+    s = hp.sketch or d
+    gauss = jax.random.normal(jax.random.PRNGKey(42), (d, s))
+    omega, _ = jnp.linalg.qr(gauss)
+    return omega
+
+
+def _fedns_client(task, hp, params, cstate, sstate, batches, rng):
+    first = jax.tree.map(lambda x: x[0], batches)
+    _, g = task.loss_grad(params, first)
+    h = task.hessian(params, first)
+    omega = sstate
+    return {"grad": g, "sketch": h @ omega}, cstate
+
+
+def _fedns_server(task, hp, params, sstate, msgs, part):
+    g = part.wmean(msgs["grad"])
+    y = part.wmean(msgs["sketch"])
+    omega = sstate
+    core = omega.T @ y
+    core = 0.5 * (core + core.T) + 1e-6 * jnp.eye(core.shape[0])
+    h_hat = y @ jnp.linalg.solve(core, y.T)
+    h_hat = 0.5 * (h_hat + h_hat.T)
+    x = inv.solve(h_hat, g[:, None], max(hp.damping, 1e-6),
+                  method=hp.inverse_method, ns_iters=hp.ns_iters)[:, 0]
+    return params - hp.lr * x, sstate
+
+
+# ================================================ SOPM with full Hessian ====
+
+def _newton_local(task, hp, params, batches):
+    def step(theta, batch):
+        _, g = task.loss_grad(theta, batch)
+        h = task.hessian(theta, batch)
+        d = inv.solve(h, g[:, None], hp.damping, method=hp.inverse_method,
+                      ns_iters=hp.ns_iters)[:, 0]
+        return theta - hp.lr * d, h
+
+    theta, hs = jax.lax.scan(step, params, batches)
+    return theta, jax.tree.map(lambda x: x[-1], hs)
+
+
+def _localnewton_full_client(task, hp, params, cstate, sstate, batches, rng):
+    theta, _ = _newton_local(task, hp, params, batches)
+    return {"theta": theta}, cstate
+
+
+def _fedpm_full_client(task, hp, params, cstate, sstate, batches, rng):
+    theta, h_last = _newton_local(task, hp, params, batches)
+    return {"theta": theta, "precond": h_last}, cstate
+
+
+def _fedpm_full_server(task, hp, params, sstate, msgs, part):
+    pbar = part.wmean(msgs["precond"])
+    ptheta = part.wmean(
+        jax.vmap(lambda p, t: p @ t)(msgs["precond"], msgs["theta"]))
+    theta = inv.solve(pbar, ptheta[:, None], 0.0, method=hp.inverse_method,
+                      ns_iters=hp.ns_iters)[:, 0]
+    return theta, sstate
+
+
+# ==================================================== SOPM with FOOF ========
+
+def _foof_local(task, hp, params, batches):
+    first = jax.tree.map(lambda x: x[0], batches)
+    grams0 = task.grams(params, first)
+    precond = F.build_preconditioner(grams0, damping=hp.damping,
+                                     method=hp.inverse_method,
+                                     ns_iters=hp.ns_iters)
+
+    def step(theta, batch):
+        loss, g = task.loss_grad(theta, batch)
+        if hp.weight_decay:
+            g = tree_axpy(hp.weight_decay, theta, g)
+        g = global_norm_clip(g, hp.clip)
+        pre = F.apply_preconditioner(precond, theta, g)
+        return tree_axpy(-hp.lr, pre, theta), loss
+
+    theta, losses = jax.lax.scan(step, params, batches)
+    if hp.foof_timing == "end":
+        last = jax.tree.map(lambda x: x[-1], batches)
+        grams_tx = task.grams(theta, last)
+    else:
+        grams_tx = grams0
+    return theta, grams_tx, jnp.mean(losses)
+
+
+def _localnewton_foof_client(task, hp, params, cstate, sstate, batches, rng):
+    theta, _, loss = _foof_local(task, hp, params, batches)
+    return {"theta": theta, "loss": loss}, cstate
+
+
+def _fedpm_foof_client(task, hp, params, cstate, sstate, batches, rng):
+    theta, grams, loss = _foof_local(task, hp, params, batches)
+    return {"theta": theta, "grams": grams, "loss": loss}, cstate
+
+
+def _fedpm_foof_server(task, hp, params, sstate, msgs, part):
+    mixed = F.mix_preconditioned(msgs["theta"], msgs["grams"],
+                                 damping=hp.damping,
+                                 method=hp.inverse_method,
+                                 ns_iters=hp.ns_iters, weights=part.weights,
+                                 axes=part.axes)
+    return mixed, sstate
+
+
+# ------------------------------------------------ diagonal SOPM baselines ---
+
+def _diag_local(task, hp, params, batches, *, sophia: bool):
+    def step(carry, batch):
+        theta, m, h = carry
+        loss, g = task.loss_grad(theta, batch)
+        if hp.weight_decay:
+            g = tree_axpy(hp.weight_decay, theta, g)
+        g = global_norm_clip(g, hp.clip)
+        h = jax.tree.map(lambda hh, gg: hp.beta2 * hh + (1 - hp.beta2) * gg * gg,
+                         h, g)
+        if sophia:
+            m = jax.tree.map(lambda mm, gg: hp.beta1 * mm + (1 - hp.beta1) * gg,
+                             m, g)
+            upd = jax.tree.map(
+                lambda mm, hh: jnp.clip(mm / jnp.maximum(hp.sophia_gamma * hh,
+                                                         1e-12), -1.0, 1.0),
+                m, h)
+        else:
+            upd = jax.tree.map(lambda gg, hh: gg / (jnp.sqrt(hh) + hp.damping),
+                               g, h)
+        theta = tree_axpy(-hp.lr, upd, theta)
+        return (theta, m, h), loss
+
+    z = tree_zeros_like(params)
+    (theta, _, _), losses = jax.lax.scan(step, (params, z, z), batches)
+    return theta, jnp.mean(losses)
+
+
+def _ltda_client(task, hp, params, cstate, sstate, batches, rng):
+    theta, loss = _diag_local(task, hp, params, batches, sophia=False)
+    return {"theta": theta, "loss": loss}, cstate
+
+
+def _fedsophia_client(task, hp, params, cstate, sstate, batches, rng):
+    theta, loss = _diag_local(task, hp, params, batches, sophia=True)
+    return {"theta": theta, "loss": loss}, cstate
+
+
+# ================================================================ registry ==
+
+def _alg(name, cat, client, server, init_server=_no_server_state,
+         init_client=_no_client_state, **kw) -> Algorithm:
+    return Algorithm(name=name, category=cat, client=client, server=server,
+                     init_server=init_server, init_client=init_client, **kw)
+
+
+LEGACY_ALGORITHMS: dict = {
+    "psgd": _alg("psgd", "FOGM", _psgd_client, _psgd_server),
+    "fedavg": _alg("fedavg", "FOPM", _fedavg_client, _fedavg_server),
+    "fedavgm": _alg("fedavgm", "FOPM", _fedavg_client, _fedavgm_server,
+                    init_server=lambda task, hp, p: tree_zeros_like(p)),
+    "fedprox": _alg("fedprox", "FOPM", _fedprox_client, _fedavg_server),
+    "scaffold": _alg("scaffold", "FOPM", _scaffold_client, _scaffold_server,
+                     init_server=_scaffold_init_server,
+                     init_client=_scaffold_init_client),
+    "fedadam": _alg("fedadam", "FOPM", _fedadam_client, _fedadam_server,
+                    init_server=_fedadam_init_server),
+    "fednl": _alg("fednl", "SOGM", _fednl_client, _fednl_server,
+                  needs_hessian=True),
+    "fedns": _alg("fedns", "SOGM", _fedns_client, _fedns_server,
+                  init_server=_fedns_init_server, needs_hessian=True),
+    "localnewton": _alg("localnewton", "SOPM", _localnewton_full_client,
+                        _fedavg_server, needs_hessian=True),
+    "fedpm": _alg("fedpm", "SOPM", _fedpm_full_client, _fedpm_full_server,
+                  needs_hessian=True),
+    "localnewton_foof": _alg("localnewton_foof", "SOPM",
+                             _localnewton_foof_client, _fedavg_server,
+                             needs_grams=True),
+    "ltda": _alg("ltda", "SOPM", _ltda_client, _fedavg_server),
+    "fedsophia": _alg("fedsophia", "SOPM", _fedsophia_client, _fedavg_server),
+    "fedpm_foof": _alg("fedpm_foof", "SOPM", _fedpm_foof_client,
+                       _fedpm_foof_server, needs_grams=True),
+}

@@ -1,0 +1,356 @@
+"""Compositional registry contracts (ISSUE 5):
+
+* every registered algorithm runs one sampled round on the vmap engine,
+  its message matches its declared wire spec, and per-round
+  ``bytes_up``/``bytes_down`` metrics match the eval_shape accounting;
+* the 14 paper compositions reproduce the FROZEN pre-compositional
+  closures (tests/legacy_zoo.py) BITWISE — params, server state, and the
+  whole client bank;
+* hparam declarations are enforced: perturbing any UNdeclared HParams
+  field leaves the round bitwise unchanged;
+* wire transforms (bf16 / top-k / gram sketch) stay pure pytrees — a
+  transform-bearing algorithm still satisfies the scanned-vs-per-round
+  bit-for-bit contract — and their encode/decode round-trips behave;
+* the mesh-sharded engine runs the full registry too (8-fake-device
+  subprocess, with a legacy-bitwise spot check).
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import api
+from repro.core.algorithms import ALGORITHMS, HParams, get_algorithm
+from repro.data import (FederatedDataset, make_clustered_classification,
+                        make_libsvm_like)
+from repro.data.federated import build_round_batches
+from repro.fl.simulate import FedSim, round_keys
+from repro.fl.tasks import ConvexTask, DNNTask
+from repro.models.simple import LogisticModel, MLPModel
+
+from legacy_zoo import LEGACY_ALGORITHMS
+
+N = 8
+PARTICIPANTS = np.array([0, 2, 5, 6])
+
+
+@pytest.fixture(scope="module")
+def convex():
+    data = make_libsvm_like("a9a", seed=0)
+    ds = FederatedDataset.from_arrays(data, N, alpha=0.0, seed=0,
+                                      test_frac=0.1)
+    task = ConvexTask(LogisticModel(d=data["x"].shape[1], lam=1e-3))
+    return dict(task=task, batches=ds.client_full_batches(k_steps=1))
+
+
+@pytest.fixture(scope="module")
+def dnn():
+    data = make_clustered_classification(1200, 16, 4, seed=0)
+    ds = FederatedDataset.from_arrays(data, N, alpha=0.5, seed=0)
+    task = DNNTask(MLPModel(in_dim=16, hidden=(32,), num_classes=4))
+    batches = build_round_batches(ds, 2, 16, np.random.default_rng(0))
+    return dict(task=task, batches=batches, ds=ds)
+
+
+def _setup_for(algo, convex, dnn):
+    if algo.needs_grams:
+        return dnn["task"], dnn["batches"], HParams(lr=0.3, damping=1.0)
+    return convex["task"], convex["batches"], HParams(lr=0.1, damping=1e-2)
+
+
+def _one_round(task, algo, hp, batches, participants=PARTICIPANTS):
+    sim = FedSim(task, algo, hp, N)
+    st = sim.init(jax.random.PRNGKey(0))
+    return sim.round(st, batches, jax.random.PRNGKey(1),
+                     participants=participants)
+
+
+def _assert_states_equal(a, b, tag=""):
+    for name in ("params", "server", "clients"):
+        for x, y in zip(jax.tree.leaves(getattr(a, name)),
+                        jax.tree.leaves(getattr(b, name))):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                          err_msg=f"{tag}:{name}")
+
+
+# ------------------------------------------------------- full-registry sweep
+
+@pytest.mark.parametrize("name", sorted(ALGORITHMS))
+def test_registry_sweep_vmap(name, convex, dnn):
+    """One sampled round of EVERY registered algorithm: finite outputs,
+    wire spec honored, comm metrics match the eval_shape accounting, and
+    (for the 14 paper algorithms) bitwise equality with the frozen
+    monolithic closures."""
+    algo = ALGORITHMS[name]
+    task, batches, hp = _setup_for(algo, convex, dnn)
+
+    # --- declared wire spec: message class carries exactly mixer.needs
+    # as WIRE and the local solver's metric fields ---------------------
+    assert algo.message_cls is not None
+    assert tuple(algo.message_cls.WIRE) == tuple(algo.mixer.needs)
+    assert tuple(algo.message_cls.METRICS) == tuple(algo.local.metrics)
+
+    one_batch = jax.tree.map(lambda x: x[0], batches)
+    cost = api.comm_cost(algo, task, hp, one_batch, s=len(PARTICIPANTS))
+    msg = api.message_struct(
+        algo, task, hp,
+        jax.eval_shape(task.init, jax.random.PRNGKey(0)),
+        jax.eval_shape(lambda p: algo.init_client(task, p),
+                       jax.eval_shape(task.init, jax.random.PRNGKey(0))),
+        jax.eval_shape(lambda p: algo.init_server(task, hp, p),
+                       jax.eval_shape(task.init, jax.random.PRNGKey(0))),
+        one_batch)
+    assert isinstance(msg, algo.message_cls), (name, type(msg))
+
+    st, metrics = _one_round(task, algo, hp, batches)
+    for leaf in jax.tree.leaves(st.params):
+        assert np.isfinite(np.asarray(leaf)).all(), name
+    assert metrics["bytes_up"] == cost["bytes_up"] > 0, name
+    assert metrics["bytes_down"] == cost["bytes_down"] > 0, name
+    if "loss" in algo.message_cls.METRICS:
+        assert np.isfinite(float(metrics["client_loss"])), name
+
+    if name in LEGACY_ALGORITHMS:
+        st_old, _ = _one_round(task, LEGACY_ALGORITHMS[name], hp, batches)
+        _assert_states_equal(st, st_old, tag=name)
+
+
+@pytest.mark.parametrize("name", sorted(ALGORITHMS))
+def test_hparam_declarations_cover_all_reads(name, convex, dnn):
+    """Perturbing every HParams field the algorithm does NOT declare must
+    leave the round bitwise unchanged — the declaration IS the contract,
+    not documentation."""
+    algo = ALGORITHMS[name]
+    task, batches, hp = _setup_for(algo, convex, dnn)
+    poison = dict(local_steps=5, damping=0.271828, clip=7.5,
+                  weight_decay=0.0123, momentum=0.77, server_lr=0.55,
+                  prox_mu=0.031, beta1=0.81, beta2=0.87, tau=0.0271,
+                  sketch=17, inverse_method="ns", ns_iters=7,
+                  foof_timing="start", sophia_gamma=0.09, lr=0.0917)
+    declared = set(algo.hparams)
+    hp_poisoned = dataclasses.replace(
+        hp, **{k: v for k, v in poison.items() if k not in declared})
+    assert api.unused_hparams(algo, hp_poisoned) != ()
+    st, _ = _one_round(task, algo, hp, batches)
+    st_p, _ = _one_round(task, algo, hp_poisoned, batches)
+    _assert_states_equal(st, st_p, tag=name)
+
+
+def test_registry_validation_errors():
+    with pytest.raises(ValueError, match="does not provide"):
+        api.register("bogus_compose", "FOPM", "grad_only", "mean")
+    with pytest.raises(ValueError, match="already registered"):
+        api.register("fedavg", "FOPM", "sgd", "mean")
+    with pytest.raises(ValueError, match="category"):
+        api.register("bogus_cat", "XXXX", "sgd", "mean")
+    assert "bogus_compose" not in ALGORITHMS
+    assert "bogus_cat" not in ALGORITHMS
+    with pytest.raises(KeyError, match="unknown algorithm"):
+        get_algorithm("nope")
+
+
+def test_unused_hparams_lint(convex):
+    fedavg = ALGORITHMS["fedavg"]
+    assert api.unused_hparams(fedavg, HParams(lr=0.2)) == ()
+    assert api.unused_hparams(fedavg, HParams(damping=0.5)) == ("damping",)
+    pm = ALGORITHMS["fedpm_foof"]
+    assert api.unused_hparams(pm, HParams(damping=0.5, lr=0.3)) == ()
+
+
+# ----------------------------------------------------------- comm accounting
+
+def test_comm_cost_shapes(convex):
+    task, batches = convex["task"], convex["batches"]
+    one = jax.tree.map(lambda x: x[0], batches)
+    d = one["x"].shape[-1]            # flat θ ∈ R^d
+    hp = HParams()
+    up1 = api.comm_cost("psgd", task, hp, one)["bytes_up_per_client"]
+    assert up1 == d * 4               # one fp32 gradient
+    # scaffold: theta + dc up; params + broadcast control variate down
+    c = api.comm_cost("scaffold", task, hp, one)
+    assert c["bytes_up_per_client"] == 2 * d * 4
+    assert c["bytes_down_per_client"] == 2 * d * 4
+    # fedns downlink carries the shared sketch frame
+    ns = api.comm_cost("fedns", task, HParams(sketch=16), one)
+    assert ns["bytes_down_per_client"] == d * 4 + d * 16 * 4
+    # cohort scaling
+    assert api.comm_cost("psgd", task, hp, one, s=5)["bytes_up"] == 5 * up1
+
+
+# ------------------------------------------------------------ wire transforms
+
+def test_bf16_wire_halves_uplink(convex):
+    task, batches = convex["task"], convex["batches"]
+    one = jax.tree.map(lambda x: x[0], batches)
+    hp = HParams(lr=0.1)
+    plain = api.comm_cost("fedavg", task, hp, one)["bytes_up_per_client"]
+    cast = api.comm_cost("fedavg_bf16", task, hp, one)["bytes_up_per_client"]
+    assert cast * 2 == plain
+
+
+def test_topk_wire_roundtrip():
+    tr = api.TopKWire(frac=0.25, fields=("delta",))
+    cls = api.message_cls(("delta",), ())
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(4, 5)).astype(np.float32))
+    enc = tr.encode(cls(delta={"w": x}))
+    assert set(enc.delta["w"]) == {"v", "i"}
+    assert enc.delta["w"]["v"].shape == (5,)          # 25% of 20
+    # decode expects a stacked message (leading participant axis)
+    stacked = jax.tree.map(lambda a: a[None], enc)
+    dec = tr.decode(stacked, {"w": x})
+    dense = np.asarray(dec.delta["w"][0])
+    flat = np.asarray(x).reshape(-1)
+    top = np.argsort(-np.abs(flat))[:5]
+    np.testing.assert_array_equal(dense.reshape(-1)[top], flat[top])
+    mask = np.ones_like(flat, bool)
+    mask[top] = False
+    assert (dense.reshape(-1)[mask] == 0).all()
+    assert enc.bytes_on_wire() < cls(delta={"w": x}).bytes_on_wire()
+
+
+def test_gram_sketch_full_rank_is_exact():
+    rng = np.random.default_rng(1)
+    b = rng.normal(size=(3, 6, 6)).astype(np.float32)
+    spd = b @ np.swapaxes(b, -1, -2) + 0.1 * np.eye(6, dtype=np.float32)
+    cls = api.message_cls(("grams",), ())
+    full = api.GramSketchWire(rank=6, fields=("grams",))
+    enc = full.encode(cls(grams=jnp.asarray(spd)))
+    # rank >= bs compresses nothing: A ships unencoded (and decode's
+    # square pass-through leaves it untouched)
+    np.testing.assert_array_equal(np.asarray(enc.grams), spd)
+    np.testing.assert_array_equal(
+        np.asarray(full.decode(enc, None).grams), spd)
+    low = api.GramSketchWire(rank=2, fields=("grams",))
+    enc2 = low.encode(cls(grams=jnp.asarray(spd)))
+    assert set(enc2.grams) == {"ny"}          # marked as encoded
+    assert enc2.grams["ny"].shape == (3, 6, 2)
+    dec = low.decode(enc2, None)
+    assert dec.grams.shape == (3, 6, 6)
+    assert np.isfinite(np.asarray(dec.grams)).all()
+    # a tall-but-unencoded array (params-shaped field) must pass through
+    # decode untouched — only {"ny"}-marked leaves reconstruct
+    tall = jnp.asarray(rng.normal(size=(4, 128, 64)).astype(np.float32))
+    same = low.decode(low.encode(cls(grams=tall)), None).grams
+    np.testing.assert_array_equal(np.asarray(same), np.asarray(tall))
+    # rank-r reconstruction of an exactly rank-r SPD matrix is exact
+    u = rng.normal(size=(6, 2)).astype(np.float32)
+    lowrank = (u @ u.T)[None]
+    rec = low.decode(low.encode(cls(grams=jnp.asarray(lowrank))), None).grams
+    np.testing.assert_allclose(np.asarray(rec)[0], lowrank[0],
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_wire_transform_scans_bitwise(dnn):
+    """A transform-bearing algorithm keeps the scanned-driver contract:
+    run_scanned ≡ the banked per-round oracle bit-for-bit (messages stay
+    pure pytrees through encode/decode)."""
+    task = dnn["task"].with_data(dnn["ds"].device_bank(steps=2, batch=16))
+    hp = HParams(lr=0.1)
+    rng, rounds = jax.random.PRNGKey(3), 3
+    got, _ = FedSim(task, "fedavg_bf16", hp, N).run_scanned(
+        rng, rounds, sample_clients=3, eval_every=2)
+    sim = FedSim(task, "fedavg_bf16", hp, N)
+    k_init, keys = round_keys(rng, rounds)
+    st = sim.init(k_init)
+    for t in range(rounds):
+        st, m = sim.round(st, None, keys[t], sample_clients=3)
+        assert m["bytes_up"] > 0            # banked rounds account too
+    _assert_states_equal(got, st, tag="bf16-scan")
+
+
+# ------------------------------------------------- sharded engine (8 dev) --
+
+SHARDED_SCRIPT = r'''
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys; sys.path.insert(0, "src"); sys.path.insert(0, "tests")
+import jax, jax.numpy as jnp, numpy as np
+from repro.core.algorithms import ALGORITHMS, HParams
+from repro.data import (FederatedDataset, make_clustered_classification,
+                        make_libsvm_like)
+from repro.data.federated import build_round_batches
+from repro.fl.simulate import FedSim
+from repro.fl.sharded import make_client_mesh
+from repro.fl.tasks import ConvexTask, DNNTask
+from repro.models.simple import LogisticModel, MLPModel
+from legacy_zoo import LEGACY_ALGORITHMS
+
+assert jax.device_count() == 8
+mesh = make_client_mesh()
+N = 16
+participants = np.array([1, 4, 9, 14])
+
+data = make_libsvm_like("a9a", seed=0)
+ds = FederatedDataset.from_arrays(data, N, alpha=0.0, seed=0, test_frac=0.1)
+cvx = ConvexTask(LogisticModel(d=data["x"].shape[1], lam=1e-3))
+cb = ds.client_full_batches(k_steps=1)
+ddata = make_clustered_classification(1600, 16, 4, seed=0)
+dds = FederatedDataset.from_arrays(ddata, N, alpha=0.5, seed=0)
+dnn = DNNTask(MLPModel(in_dim=16, hidden=(32,), num_classes=4))
+db = build_round_batches(dds, 2, 16, np.random.default_rng(0))
+
+def one_round(task, algo, hp, batches):
+    sim = FedSim(task, algo, hp, N, mesh=mesh)
+    st = sim.init(jax.random.PRNGKey(0))
+    return sim.round(st, batches, jax.random.PRNGKey(1),
+                     participants=participants)
+
+def states_equal(a, b, tag):
+    for name in ("params", "server", "clients"):
+        for x, y in zip(jax.tree.leaves(getattr(a, name)),
+                        jax.tree.leaves(getattr(b, name))):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                          err_msg=f"{tag}:{name}")
+
+results = {}
+for name in sorted(ALGORITHMS):
+    algo = ALGORITHMS[name]
+    if algo.needs_grams:
+        task, batches, hp = dnn, db, HParams(lr=0.3, damping=1.0)
+    else:
+        task, batches, hp = cvx, cb, HParams(lr=0.1, damping=1e-2)
+    st, metrics = one_round(task, algo, hp, batches)
+    for leaf in jax.tree.leaves(st.params):
+        assert np.isfinite(np.asarray(leaf)).all(), name
+    assert metrics["bytes_up"] > 0 and metrics["bytes_down"] > 0, name
+    results[name] = (task, batches, hp, st)
+print("SHARDED-SWEEP-OK")
+
+# legacy bitwise spot check on the sharded engine (stateful client,
+# dict-message SOGM, packed preconditioned mixing)
+for name in ("scaffold", "fednl", "fedpm_foof"):
+    task, batches, hp, st = results[name]
+    st_old, _ = one_round(task, LEGACY_ALGORITHMS[name], hp, batches)
+    states_equal(st, st_old, name)
+print("SHARDED-LEGACY-BITWISE-OK")
+print("OK")
+'''
+
+
+def test_sharded_registry_sweep():
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run([sys.executable, "-c", SHARDED_SCRIPT],
+                         cwd=os.path.join(os.path.dirname(__file__), ".."),
+                         capture_output=True, text=True, env=env,
+                         timeout=900)
+    assert res.returncode == 0, res.stderr[-3000:]
+    for marker in ("SHARDED-SWEEP-OK", "SHARDED-LEGACY-BITWISE-OK"):
+        assert marker in res.stdout, (marker, res.stdout)
+
+
+# ------------------------------------------------------------- docs freshness
+
+def test_readme_lists_every_algorithm():
+    """The README's registry table is generated (scripts/gen_alg_table.py)
+    — forgetting to regenerate it after a registration shows up here."""
+    root = os.path.join(os.path.dirname(__file__), "..")
+    with open(os.path.join(root, "README.md")) as f:
+        readme = f.read()
+    for name in ALGORITHMS:
+        assert f"`{name}`" in readme, f"README table missing {name!r}"
