@@ -3,18 +3,32 @@ baseline and fail tier-1 on >tol regressions.
 
 Usage (scripts/ci.sh wires this up)::
 
-    python -m benchmarks.run --smoke            # writes BENCH_pr5.json
-    python -m benchmarks.bench_gate BENCH_pr5.json \
-        benchmarks/baseline_pr5.json --tol 0.25
+    python -m benchmarks.run --smoke            # writes BENCH_pr6.json
+    python -m benchmarks.bench_gate BENCH_pr6.json \
+        benchmarks/baseline_pr6.json --tol 0.25
 
 Both files carry a ``gates`` section of machine-independent RATIOS
 (packed-vs-per-leaf speedup, K-sweep growth, sharded-vs-vmap overhead,
-scanned-vs-per-round dispatch speedup — see ``benchmarks.run._gates``).
+scanned-vs-per-round dispatch speedup, paged-vs-resident staging
+overhead and staged-bytes ratio — see ``benchmarks.run._gates``).
 A gate regresses when its value moves past baseline·(1 ± tol) in its
 ``worse`` direction; a gate present in the baseline but missing from the
 current run also fails (a silently dropped bench must not read as a
-pass).  Refresh the baseline by copying a trusted run's BENCH_pr5.json
-over benchmarks/baseline_pr5.json.
+pass).
+
+Refresh the baseline with ``--update-baseline``::
+
+    python -m benchmarks.bench_gate BENCH_pr6.json \
+        benchmarks/baseline_pr6.json --update-baseline
+
+which copies the current run's gates over the baseline file — but FIRST
+checks the current run against the existing baseline and REFUSES to
+regenerate when any gate is failing: regenerating from a regressed run
+would silently widen the gate, and the next regression on top of it
+would still pass.  A deliberate trade-off (e.g. a feature that costs
+some sharded overhead) is recorded with ``--allow-regression``, which
+prints exactly which gates moved and by how much so the widening is an
+explicit, reviewable act rather than a side effect.
 """
 from __future__ import annotations
 
@@ -49,17 +63,61 @@ def check(current: dict, baseline: dict, tol: float) -> list[str]:
     return failures
 
 
+def update_baseline(current: dict, baseline: dict, baseline_path: str,
+                    tol: float, allow_regression: bool) -> int:
+    """Regenerate ``baseline_path`` from the current run's gates.
+
+    Guard: if the current run FAILS against the existing baseline, the
+    regeneration would widen a failing gate — refuse unless the caller
+    passed ``--allow-regression`` (and then list the widened gates, so
+    the loosening is explicit in the CI log / PR diff)."""
+    failures = check(current, baseline, tol)
+    if failures and not allow_regression:
+        print("REFUSING to update baseline: the current run fails the "
+              "existing gates — regenerating now would silently widen "
+              "them:", file=sys.stderr)
+        for f_ in failures:
+            print(f"  {f_}", file=sys.stderr)
+        print("Fix the regression, or re-run with --allow-regression to "
+              "record the trade-off deliberately.", file=sys.stderr)
+        return 1
+    if failures:
+        print(f"WIDENING {len(failures)} gate(s) (--allow-regression):")
+        for f_ in failures:
+            print(f"  widened {f_}")
+    gates = current.get("gates", {})
+    if not gates:
+        print("REFUSING to update baseline: current run has no gates "
+              "(did --smoke crash before writing them?)", file=sys.stderr)
+        return 1
+    out = {"meta": baseline.get("meta", {}), "gates": gates}
+    with open(baseline_path, "w") as f:
+        json.dump(out, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {baseline_path}: {len(gates)} gates")
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("current", help="BENCH_pr5.json from this run")
+    ap.add_argument("current", help="BENCH_pr6.json from this run")
     ap.add_argument("baseline", help="checked-in baseline json")
     ap.add_argument("--tol", type=float, default=0.25,
                     help="allowed fractional regression (default 0.25)")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="regenerate the baseline from the current run "
+                         "(refuses if the run fails the existing gates)")
+    ap.add_argument("--allow-regression", action="store_true",
+                    help="with --update-baseline: record a deliberate "
+                         "gate widening instead of refusing")
     args = ap.parse_args(argv)
     with open(args.current) as f:
         current = json.load(f)
     with open(args.baseline) as f:
         baseline = json.load(f)
+    if args.update_baseline:
+        return update_baseline(current, baseline, args.baseline, args.tol,
+                               args.allow_regression)
     failures = check(current, baseline, args.tol)
     if failures:
         print("BENCH GATE FAILED:", file=sys.stderr)

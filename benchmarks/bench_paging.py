@@ -1,0 +1,153 @@
+"""Paged-vs-resident ClientStore bench (ISSUE 6): the price of out-of-core.
+
+Two questions, two sections:
+
+* :func:`smoke_section` — at a population that still FITS on device,
+  what round-rate overhead does chunk-boundary paging add over the
+  resident scanned driver (``paging_overhead`` gate, a machine-
+  independent ratio of back-to-back timings), and how many device bytes
+  does a staged chunk hold vs the resident banks (``paging_bytes_ratio``
+  gate — EXACT byte counts from the stores' own accounting, so a paging
+  regression that silently stages the whole population fails tier-1)?
+* :func:`scale` — the N ≥ 10⁵ STATEFUL smoke the resident engine cannot
+  hold at real model sizes: scaffold (per-client control variates) over
+  100k clients, with the device-bytes watermark sampled from
+  ``jax.live_arrays()`` at every chunk boundary and ASSERTED under a
+  fraction of the resident footprint.  Run it in a FRESH process
+  (``python -m benchmarks.bench_paging --scale``, its own CI stage) so
+  other benches' leftover device arrays can't pollute the watermark.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import jax
+import numpy as np
+
+from repro.core.algorithms import HParams
+from repro.data import FederatedDataset
+from repro.fl.simulate import FedSim
+from repro.fl.store import device_bytes
+from repro.fl.tasks import ConvexTask
+from repro.models.simple import LogisticModel
+
+from benchmarks.common import emit
+
+
+def _convex_ds(n, d, n_clients, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    w = rng.normal(size=d).astype(np.float32) / np.sqrt(d)
+    y = np.sign(x @ w + 0.1 * rng.normal(size=n)).astype(np.float32)
+    y[y == 0] = 1.0
+    return FederatedDataset.from_arrays({"x": x, "y": y}, n_clients,
+                                        alpha=0.0, seed=seed, test_frac=0.1)
+
+
+def _bank_bytes(bank) -> int:
+    return device_bytes({"x": bank.x, "y": bank.y, "sizes": bank.sizes})
+
+
+def smoke_section(rounds=32, n_clients=256, s=16, eval_every=8, d=32,
+                  reps=3):
+    """paged/resident scanned us/round + exact staged-vs-resident bytes.
+
+    scaffold keeps the comparison honest: per-client control variates
+    make the paged path gather AND scatter state every chunk — the full
+    cost, not the stateless free case."""
+    ds = _convex_ds(n=4 * n_clients, d=d, n_clients=n_clients)
+    task = ConvexTask(LogisticModel(d=d, lam=1e-3))
+    hp = HParams(lr=0.3)
+
+    def scanned_once(sim, seed):
+        t0 = time.perf_counter()
+        st, _ = sim.run_scanned(jax.random.PRNGKey(seed), rounds,
+                                sample_clients=s, eval_every=eval_every)
+        jax.block_until_ready(st.params)
+        return (time.perf_counter() - t0) / rounds * 1e6
+
+    out = {}
+    for tag, bank in (("resident", ds.device_bank(steps=1, batch=0)),
+                      ("paged", ds.paged_bank(steps=1, batch=0))):
+        sim = FedSim(task.with_data(bank), "scaffold", hp, n_clients)
+        scanned_once(sim, 0)                          # compile
+        out[tag] = (sim, min(scanned_once(sim, r) for r in range(reps)))
+    us_r, us_p = out["resident"][1], out["paged"][1]
+    emit("paging/scanned/resident", us_r,
+         f"rounds={rounds},S={s}/{n_clients},chunk={eval_every}")
+    emit("paging/scanned/paged", us_p,
+         f"overhead_vs_resident={us_p / us_r:.2f}x")
+
+    # exact device bytes: resident rows (data bank + client-state bank)
+    # vs what ONE paged chunk actually staged — straight from the stores
+    sim_r, sim_p = out["resident"][0], out["paged"][0]
+    st_r = sim_r.init(jax.random.PRNGKey(0))
+    resident_rows = _bank_bytes(sim_r.task.data) + device_bytes(st_r.clients)
+    st_p = sim_p.init(jax.random.PRNGKey(0))
+    sim_p.round(st_p, None, jax.random.PRNGKey(1), sample_clients=s)
+    staged_rows = sim_p.task.data.last_staged_bytes \
+        + st_p.clients.last_staged_bytes
+    emit("paging/bytes/resident_rows", float(resident_rows),
+         f"N={n_clients} data+state rows on device")
+    emit("paging/bytes/staged_rows", float(staged_rows),
+         f"one S={s} chunk; ratio={resident_rows / staged_rows:.2f}x")
+
+
+def scale(n_clients=100_000, s=64, rounds=8, eval_every=2, d=16) -> int:
+    """N ≥ 10⁵ stateful clients, device memory bounded by the cohort.
+
+    Returns nonzero (CI stage failure) if the device watermark is not a
+    small fraction of what the resident engine would hold."""
+    ds = _convex_ds(n=n_clients, d=d, n_clients=n_clients)
+    task = ConvexTask(LogisticModel(d=d, lam=1e-3))
+    bank = ds.paged_bank(steps=1, batch=0)
+    sim = FedSim(task.with_data(bank), "scaffold", HParams(lr=0.3),
+                 n_clients)
+
+    peak = 0
+
+    def watermark(params):
+        nonlocal peak
+        live = sum(int(np.prod(a.shape)) * np.dtype(a.dtype).itemsize
+                   for a in jax.live_arrays())
+        peak = max(peak, live)
+        return 0.0
+
+    t0 = time.perf_counter()
+    st, _ = sim.run_scanned(jax.random.PRNGKey(0), rounds,
+                            sample_clients=s, eval_every=eval_every,
+                            eval_fn=watermark)
+    jax.block_until_ready(st.params)
+    us = (time.perf_counter() - t0) / rounds * 1e6
+
+    # what the resident engine would pin on device for the same run
+    state_row = sum(int(np.prod(np.shape(x))) * 4
+                    for x in jax.tree.leaves(
+                        sim.algo.init_client(task, st.params)))
+    resident = bank.host_bytes() + n_clients * state_row
+    host = bank.host_bytes() + st.clients.host_bytes()
+    emit("paging/scale/round_us", us,
+         f"N={n_clients},S={s},chunk={eval_every},scaffold")
+    emit("paging/scale/device_peak_bytes", float(peak),
+         f"host_cold={host}B,resident_equiv={resident}B")
+    assert not st.clients.stateless, "scale run must be STATEFUL"
+    if peak * 4 > resident:
+        print(f"PAGING-SCALE-FAIL: device watermark {peak}B is not "
+              f"bounded by the cohort (resident equiv {resident}B)",
+              file=sys.stderr)
+        return 1
+    print(f"PAGING-SCALE-OK: peak {peak}B on device for N={n_clients} "
+          f"stateful clients ({resident // max(peak, 1)}x under resident)")
+    return 0
+
+
+def main():
+    if "--scale" in sys.argv:
+        print("name,us_per_call,derived")
+        sys.exit(scale())
+    smoke_section()
+
+
+if __name__ == "__main__":
+    main()

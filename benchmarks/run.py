@@ -12,11 +12,16 @@ benchmarks/common.py and EXPERIMENTS.md for the paper mapping:
 ``--smoke`` runs the CI perf-gate subset — packed-vs-per-leaf bank
 numbers, the K-sweep factor-once amortization, the sharded-vs-vmap
 engine comparison on a forced 8-device host mesh, the scanned-vs-
-per-round dispatch ratio, and the comm-bytes wire-transform on/off
+per-round dispatch ratio, the paged-vs-resident ClientStore overhead
+and exact staged-bytes ratios, and the comm-bytes wire-transform on/off
 ratios — and serializes every emitted row plus machine-independent gate
-RATIOS to ``BENCH_pr5.json``.  ``benchmarks.bench_gate`` compares those
-ratios against the checked-in ``benchmarks/baseline_pr5.json`` and
-fails tier-1 on >25% regressions (scripts/ci.sh wires both up).
+RATIOS to ``BENCH_pr6.json``.  ``benchmarks.bench_gate`` compares those
+ratios against the checked-in ``benchmarks/baseline_pr6.json`` and
+fails tier-1 on >25% regressions (scripts/ci.sh wires both up; the
+N ≥ 10⁵ paged scale smoke runs as its OWN ci.sh stage —
+``python -m benchmarks.bench_paging --scale`` in a fresh process, so
+the ``jax.live_arrays()`` device watermark it asserts isn't polluted
+by other benches' leftovers).
 """
 from __future__ import annotations
 
@@ -73,6 +78,18 @@ _GATE_SPECS = {
     "scan_dispatch_speedup_fedavg": (
         "scan_dispatch/fedavg/perround", "scan_dispatch/fedavg/scanned",
         "lower", "scan"),
+    # paged ClientStore: chunk-boundary staging overhead vs the resident
+    # scanned driver (a blow-up means paging work crept INSIDE the chunk
+    # loop — e.g. a per-call recompile of the eager cohort draw)
+    "paging_overhead": (
+        "paging/scanned/paged", "paging/scanned/resident", "higher",
+        "paging"),
+    # EXACT device bytes: resident [N, ...] rows ÷ one staged chunk.  A
+    # collapse means the paged path silently stages (close to) the whole
+    # population — the out-of-core property itself regressed.
+    "paging_bytes_ratio": (
+        "paging/bytes/resident_rows", "paging/bytes/staged_rows", "lower",
+        "paging"),
     # wire-transform uplink savings (EXACT byte ratios, off ÷ on — a
     # transform that stops shrinking its payload collapses the ratio)
     "comm_bf16_ratio": (
@@ -111,9 +128,9 @@ def _median_gates(samples: list[dict]) -> dict:
             for k, vs in merged.items()}
 
 
-def smoke(out_path: str = "BENCH_pr5.json") -> int:
+def smoke(out_path: str = "BENCH_pr6.json") -> int:
     from benchmarks import (bench_comm, bench_cost, bench_local_epochs,
-                            bench_sampling, bench_scan)
+                            bench_paging, bench_sampling, bench_scan)
     from benchmarks.common import RECORDS, dnn_setup
 
     print("name,us_per_call,derived")
@@ -130,6 +147,11 @@ def smoke(out_path: str = "BENCH_pr5.json") -> int:
     for _ in range(2):
         failed += _run([("scan", bench_scan.dispatch)])
         samples.append(_gates(RECORDS, "scan"))
+    # paged-vs-resident store: timing ratio (median over repetitions) and
+    # the exact staged-bytes ratio (deterministic — repeats agree)
+    for _ in range(2):
+        failed += _run([("paging", bench_paging.smoke_section)])
+        samples.append(_gates(RECORDS, "paging"))
     # gate rows re-measured at default (non-smoke) sizes — the tiny smoke
     # shapes don't separate packed from per-leaf reliably — with the gate
     # ratio sampled per repetition and median-merged (see _GATE_SPECS)
@@ -164,8 +186,9 @@ def main() -> None:
         sys.exit(smoke())
     from benchmarks import (bench_comm, bench_convex, bench_cost, bench_dnn,
                             bench_femnist, bench_foof_samples,
-                            bench_local_epochs, bench_profiling,
-                            bench_roofline, bench_sampling, bench_scan)
+                            bench_local_epochs, bench_paging,
+                            bench_profiling, bench_roofline, bench_sampling,
+                            bench_scan)
     print("name,us_per_call,derived")
     failed = _run([
         ("comm", bench_comm.main),
@@ -177,6 +200,7 @@ def main() -> None:
         ("femnist", lambda: bench_femnist.main(rounds=8)),
         ("cost", bench_cost.main),
         ("scan", bench_scan.main),
+        ("paging", bench_paging.main),
         ("profiling", bench_profiling.main),
         ("roofline", bench_roofline.main),
     ])

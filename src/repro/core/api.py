@@ -361,6 +361,15 @@ class Algorithm:
     message_cls: type | None = None
 
     @property
+    def stateless(self) -> bool:
+        """True when clients carry NO persistent state (the FedAvg /
+        FedAdam family: ``init_client`` is the empty-state default).
+        Stateless registrations have an empty client-state tree, so the
+        paged engine (``repro.fl.store``) stages and writes back zero
+        client-state bytes for them — paging is free."""
+        return self.init_client is _no_client_state
+
+    @property
     def hparams(self) -> tuple:
         """HParams fields this algorithm reads (sorted union of its
         parts' declarations, including per-wire-field extras)."""

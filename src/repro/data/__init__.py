@@ -2,4 +2,7 @@ from repro.data.synthetic import (
     make_libsvm_like, make_clustered_classification, make_image_classification,
     make_lm_tokens, LIBSVM_SPECS,
 )
-from repro.data.federated import FederatedDataset, build_round_batches, steps_per_epoch
+from repro.data.federated import (
+    FederatedDataset, DeviceDataBank, HostPagedBank, build_round_batches,
+    steps_per_epoch,
+)

@@ -13,6 +13,21 @@ drawn in-graph by ``bank.sample(rng, participants)`` — no host round-trip
 between evals.  Ragged (FEMNIST-class writer) shards are padded to the max
 shard length; sampling draws indices uniformly below each client's TRUE
 shard size, so padding rows are never read.
+
+Both banks implement the :class:`repro.fl.store.ClientStore` protocol
+(gather / scatter / prefetch):
+
+* ``DeviceDataBank`` is the *resident* store — ``gather`` hands the whole
+  bank to the engine, which takes cohort rows in-graph (bit-for-bit
+  today's behavior, donation aliasing included);
+* ``HostPagedBank`` (built by :meth:`FederatedDataset.paged_bank`) is the
+  *paged* store for N ≫ cohort populations: the dataset stays in host
+  memory as numpy (features shared, per-client index rows — never the
+  ``[N, M, ...]`` materialization), and ``gather(rows)`` stages only the
+  hot rows a chunk touches as a ``[U, M, ...]`` ``DeviceDataBank`` view.
+  ``prefetch`` pre-stages the next chunk's rows while the current chunk
+  computes (double-buffering over the scanned chunk boundary); data is
+  read-only, so ``scatter`` is a no-op.
 """
 from __future__ import annotations
 
@@ -61,6 +76,14 @@ class FederatedDataset:
         return {"x": jnp.asarray(self.test_x[:max_n]),
                 "y": jnp.asarray(self.test_y[:max_n])}
 
+    def _padded_index(self):
+        """[N, M] per-client sample indices, cyclic-padded to the max
+        shard length M (padding rows are never sampled: ridx < size)."""
+        sizes = np.array([len(s) for s in self.shards], np.int32)
+        m = int(sizes.max())
+        rows = [np.asarray(s)[np.arange(m) % len(s)] for s in self.shards]
+        return np.stack(rows), sizes
+
     def device_bank(self, steps: int, batch: int) -> "DeviceDataBank":
         """Upload the whole partitioned dataset as a resident
         :class:`DeviceDataBank` — the scan-compiled engine's data path.
@@ -68,14 +91,26 @@ class FederatedDataset:
         ``batch == 0`` selects full-shard mode (each of ``steps`` steps
         sees the client's first ``min-shard-size`` samples, matching
         :meth:`client_full_batches`)."""
-        sizes = np.array([len(s) for s in self.shards], np.int32)
-        m = int(sizes.max())
-        # cyclic pad to M rows; padding is never sampled (ridx < size)
-        rows = [np.asarray(s)[np.arange(m) % len(s)] for s in self.shards]
-        idx = np.stack(rows)
+        idx, sizes = self._padded_index()
         return DeviceDataBank(
             x=jnp.asarray(self.x[idx]), y=jnp.asarray(self.y[idx]),
             sizes=jnp.asarray(sizes),
+            spec=_BankSpec(steps=steps, batch=batch,
+                           min_size=int(sizes.min())))
+
+    def paged_bank(self, steps: int, batch: int) -> "HostPagedBank":
+        """Build the host-paged :class:`HostPagedBank` — the out-of-core
+        data path for N ≫ cohort populations.
+
+        Unlike :meth:`device_bank`, NOTHING is uploaded and the
+        ``[N, M, ...]`` per-client materialization never exists anywhere:
+        host memory is the shared feature arrays plus an ``[N, M]`` index
+        table, and only the rows a chunk's cohorts touch are staged to
+        device (``gather``)."""
+        idx, sizes = self._padded_index()
+        return HostPagedBank(
+            x=np.ascontiguousarray(self.x), y=np.ascontiguousarray(self.y),
+            idx=idx.astype(np.int64), sizes=sizes,
             spec=_BankSpec(steps=steps, batch=batch,
                            min_size=int(sizes.min())))
 
@@ -122,9 +157,41 @@ class DeviceDataBank:
     sizes: jax.Array                  # [N] int32 true shard sizes
     spec: _BankSpec
 
+    is_resident = True                # ClientStore: engine gathers in-graph
+
     @property
     def n_clients(self) -> int:
         return self.x.shape[0]
+
+    # ------------------------------------------- ClientStore conformance --
+    # The resident store's gather/scatter are identities the ENGINE
+    # performs in-graph (jnp.take / .at[].set inside the round jit) —
+    # that's what keeps the resident path bit-for-bit and donation-aliased.
+    # ``gather(rows)`` here builds an explicit [U, ...] staged view (used
+    # by tests and by HostPagedBank as its staging target shape); the
+    # engine never calls it on the hot path.
+
+    def gather(self, rows, *, sharding=None) -> "DeviceDataBank":
+        rows = jnp.asarray(rows, jnp.int32)
+        take = lambda bank: jnp.take(bank, rows, axis=0)
+        return DeviceDataBank(x=take(self.x), y=take(self.y),
+                              sizes=jnp.take(self.sizes, rows),
+                              spec=self.spec)
+
+    def scatter(self, rows, staged) -> None:
+        """Data is read-only — nothing to write back."""
+
+    def prefetch(self, rows, *, sharding=None) -> None:
+        """Resident: everything is already on device."""
+
+    def one_client_struct(self) -> dict:
+        """ShapeDtypeStruct pytree of ONE client's per-round batches, as
+        :meth:`sample` would draw them (comm accounting, no execution)."""
+        one = jax.eval_shape(
+            lambda b: b.sample(jax.random.PRNGKey(0),
+                               jnp.zeros((1,), jnp.int32)), self)
+        return jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype), one)
 
     def sample(self, rng, participants) -> dict:
         """In-graph per-round batches for the cohort ``participants`` [S]."""
@@ -157,6 +224,96 @@ class DeviceDataBank:
 jax.tree_util.register_dataclass(DeviceDataBank,
                                  data_fields=["x", "y", "sizes"],
                                  meta_fields=["spec"])
+
+
+@dataclass
+class HostPagedBank:
+    """Host-paged federated data bank: the out-of-core ClientStore for
+    N ≫ cohort populations (see ``repro.fl.store``).
+
+    Cold storage is host numpy — the SHARED feature arrays plus an
+    ``[N, M]`` per-client index table; the resident bank's ``[N, M, ...]``
+    materialization never exists anywhere.  :meth:`gather` stages the hot
+    rows a chunk's cohorts touch as a ``[U, M, ...]``
+    :class:`DeviceDataBank` whose rows are bytewise the resident bank's
+    rows for those clients (``staged.x[l] == resident.x[union[l]]``), so
+    the engine's in-graph ``bank.sample`` draws IDENTICAL batches for a
+    cohort remapped to staged positions — the equivalence the paged
+    driver's fp32 contract rests on.
+
+    :meth:`prefetch` pre-stages the next chunk's rows (``device_put``
+    dispatches asynchronously) while the current chunk computes —
+    double-buffering over the scanned chunk boundary.  Data is read-only,
+    so :meth:`scatter` is a no-op.  NOT a pytree: the paged bank never
+    crosses a jit boundary, only its staged views do.
+    """
+    x: np.ndarray                     # [n_samples, ...] shared features
+    y: np.ndarray
+    idx: np.ndarray                   # [N, M] int64 per-client sample rows
+    sizes: np.ndarray                 # [N] int32 true shard sizes
+    spec: _BankSpec
+
+    is_resident = False               # ClientStore: driver pages at chunks
+
+    def __post_init__(self):
+        self._cache = {}              # prefetch key -> staged DeviceDataBank
+        #: exact device bytes of the most recent gather (bench/tests)
+        self.last_staged_bytes = 0
+
+    @property
+    def n_clients(self) -> int:
+        return int(self.idx.shape[0])
+
+    def host_bytes(self) -> int:
+        """Total host (cold) bytes — what paging keeps OFF the device."""
+        return sum(int(a.nbytes) for a in (self.x, self.y, self.idx,
+                                           self.sizes))
+
+    # ------------------------------------------- ClientStore conformance --
+
+    @staticmethod
+    def _key(rows, sharding):
+        return (np.asarray(rows).tobytes(), sharding)
+
+    def _stage(self, rows, sharding) -> DeviceDataBank:
+        rows = np.asarray(rows)
+        take = self.idx[rows]                              # [U, M]
+        put = ((lambda a: jax.device_put(a, sharding))
+               if sharding is not None else jnp.asarray)
+        return DeviceDataBank(x=put(self.x[take]), y=put(self.y[take]),
+                              sizes=put(self.sizes[rows]), spec=self.spec)
+
+    def gather(self, rows, *, sharding=None) -> DeviceDataBank:
+        """Stage client ``rows`` to device (consuming a matching
+        :meth:`prefetch` if one is in flight)."""
+        staged = self._cache.pop(self._key(rows, sharding), None)
+        if staged is None:
+            staged = self._stage(rows, sharding)
+        self.last_staged_bytes = sum(
+            int(np.prod(v.shape)) * np.dtype(v.dtype).itemsize
+            for v in (staged.x, staged.y, staged.sizes))
+        return staged
+
+    def scatter(self, rows, staged) -> None:
+        """Data is read-only — nothing to write back."""
+
+    def prefetch(self, rows, *, sharding=None) -> None:
+        """Begin staging ``rows`` for a later :meth:`gather` with the same
+        arguments.  ``device_put`` returns before the transfer completes,
+        so the copy overlaps the current chunk's compute."""
+        key = self._key(rows, sharding)
+        if key not in self._cache:
+            self._cache[key] = self._stage(rows, sharding)
+
+    def one_client_struct(self) -> dict:
+        """ShapeDtypeStruct pytree of ONE client's per-round batches —
+        shape-identical to :meth:`DeviceDataBank.one_client_struct` on
+        the resident twin (comm accounting without staging anything)."""
+        steps, batch = self.spec.steps, self.spec.batch
+        b = batch if batch else self.spec.min_size
+        sds = lambda a: jax.ShapeDtypeStruct(
+            (steps, b, *a.shape[1:]), jax.dtypes.canonicalize_dtype(a.dtype))
+        return {"x": sds(self.x), "y": sds(self.y)}
 
 
 def build_round_batches(ds: FederatedDataset, steps: int, batch: int,

@@ -48,7 +48,7 @@ from repro.fl.simulate import round_metrics
 PyTree = Any
 
 __all__ = ["CLIENTS_AXIS", "make_client_mesh", "bucket_participants",
-           "bucket_cohort", "shard_clients", "replicate",
+           "bucket_cohort", "shard_clients", "replicate", "staging_sharding",
            "make_sharded_round", "bank_shard_rows"]
 
 
@@ -132,6 +132,16 @@ def replicate(mesh: jax.sharding.Mesh, tree: PyTree) -> PyTree:
     """Replicate server-side state (params, server) over the mesh."""
     sh = NamedSharding(mesh, P())
     return jax.tree.map(lambda x: jax.device_put(x, sh), tree)
+
+
+def staging_sharding(mesh: jax.sharding.Mesh) -> NamedSharding:
+    """Placement for PAGED staging onto the mesh: hot client rows split
+    over the clients axis, so each shard receives only its slice of the
+    staged bank (shard-local paging — host→device traffic and per-device
+    staged memory are both ``cap / n_shards`` rows).  The paged driver
+    rounds staging capacities up to a multiple of ``n_shards`` so the
+    split is always even."""
+    return NamedSharding(mesh, P(CLIENTS_AXIS))
 
 
 def bank_shard_rows(clients: PyTree) -> list[tuple[int, ...]]:

@@ -39,7 +39,25 @@ Two drivers sit on top of the round:
 Every round/chunk jit DONATES (params, server, clients): the [N, ...]
 client bank updates in place (single-buffered) and a ``FedState`` is
 consumed by the round it enters — chain states forward or
-``state.copy()`` to branch.
+``state.copy()`` to branch.  Reusing a consumed state is caught at the
+``round`` entry and re-raised with an actionable message.
+
+Client residency (``repro.fl.store``)
+-------------------------------------
+Where the per-client rows live is a :class:`~repro.fl.store.ClientStore`
+decision, not an engine assumption.  With a RESIDENT data bank
+(``ds.device_bank``) everything above is unchanged — the resident store
+is today's behavior, bit-for-bit.  With a PAGED bank
+(``ds.paged_bank``) the engine runs out-of-core: client state lives in
+a host :class:`~repro.fl.store.HostStateStore`, cohorts are drawn
+host-side from the SAME key stream (:func:`sample_cohort` is the
+documented oracle, so eager draws equal in-graph draws), and each
+chunk stages only the union of its cohorts' rows to device — the same
+scanned programs run over a ``[cap, ...]`` staged bank, with
+``cap = min(chunk · S, N)``, so device memory is bounded by the cohort
+schedule while N grows to 10⁵+.  Paging (gather/scatter/prefetch)
+happens ONLY at chunk boundaries, outside the scanned graph; the next
+chunk's data rows prefetch while the current chunk computes.
 """
 from __future__ import annotations
 
@@ -55,6 +73,7 @@ import numpy as np
 from repro.core import api as API
 from repro.core.algorithms import (Algorithm, HParams, Participation,
                                    get_algorithm)
+from repro.fl.store import HostStateStore, plan_chunk, round_up
 
 PyTree = Any
 
@@ -77,13 +96,18 @@ class FedState:
     round: int = 0
 
     def copy(self) -> "FedState":
-        """A deep on-device copy.  The round jits DONATE params/server/
-        clients (the [N, ...] bank updates in place instead of
-        double-buffering), so a state is consumed by the round it enters —
-        copy first to round twice from the same state."""
+        """A deep copy.  The round jits DONATE params/server/clients (the
+        [N, ...] bank updates in place instead of double-buffering), so a
+        state is consumed by the round it enters — copy first to round
+        twice from the same state.  A paged state's clients are a
+        :class:`~repro.fl.store.HostStateStore` (mutated in place by the
+        chunk scatters); its copy is a deep host copy."""
         cp = partial(jax.tree.map, jnp.copy)
+        cl = (self.clients.copy()
+              if isinstance(self.clients, HostStateStore)
+              else cp(self.clients))
         return FedState(params=cp(self.params), server=cp(self.server),
-                        clients=cp(self.clients), round=self.round)
+                        clients=cl, round=self.round)
 
 
 def sample_cohort(key, n: int, s: int) -> jax.Array:
@@ -98,6 +122,16 @@ def sample_cohort(key, n: int, s: int) -> jax.Array:
     legacy per-round driver.)
     """
     return jnp.sort(jax.random.permutation(key, n)[:s]).astype(jnp.int32)
+
+
+@partial(jax.jit, static_argnums=(1, 2))
+def _draw_cohorts(keys, n: int, s: int) -> jax.Array:
+    """Eager replay of the scanned driver's in-graph cohort draws:
+    :func:`sample_cohort` at the ``kc`` each round splits off (the oracle
+    contract above).  Module-level jit so the paged driver pays one
+    compile per (rounds, N, S) — not one per ``run_scanned`` call."""
+    return jax.vmap(
+        lambda k: sample_cohort(jax.random.split(k, 3)[0], n, s))(keys)
 
 
 def round_keys(rng, rounds: int):
@@ -155,6 +189,7 @@ class FedSim:
         self._full_idx = None         # cached identity-cohort device arrays
         self._full_w = None
         self._comm_cache = {}         # per-batch-struct (up, down) bytes
+        self._stage_sh = None         # paged staging placement (mesh only)
         if mesh is None:
             self._banked_jit = jax.jit(self._round_banked,
                                        static_argnames=("s", "sample"),
@@ -176,19 +211,53 @@ class FedSim:
             self._banked_jit = jax.jit(self._sharded_round_banked,
                                        static_argnames=("s", "sample"),
                                        donate_argnums=(0, 1, 2))
+            self._stage_sh = Sh.staging_sharding(mesh)
+
+    @property
+    def _paged(self) -> bool:
+        """True when the task's data bank is a PAGED ClientStore — the
+        single switch that moves client state to a host store and routes
+        banked rounds / ``run_scanned`` through the paged driver."""
+        bank = getattr(self.task, "data", None)
+        return bank is not None and not getattr(bank, "is_resident", True)
 
     def init(self, rng) -> FedState:
         params = self.task.init(rng)
         server = self.algo.init_server(self.task, self.hp, params)
         one_client = self.algo.init_client(self.task, params)
-        clients = jax.tree.map(
-            lambda x: jnp.broadcast_to(x, (self.n, *x.shape)), one_client)
+        if self._paged:
+            # paged mode: the [N, ...] bank lives HOST-side; stateless
+            # algorithms get an empty store (zero paging cost)
+            clients = HostStateStore.broadcast(one_client, self.n)
+        else:
+            clients = jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (self.n, *x.shape)),
+                one_client)
         if self.mesh is not None:
-            # the bank lives sharded: per-device memory is N / n_shards rows
-            clients = self._sharded.shard_clients(self.mesh, clients)
+            # the bank lives sharded: per-device memory is N / n_shards
+            # rows (paged banks stay host-side; their staged chunks are
+            # placed shard-locally at gather time instead)
+            if not self._paged:
+                clients = self._sharded.shard_clients(self.mesh, clients)
             params = self._sharded.replicate(self.mesh, params)
             server = self._sharded.replicate(self.mesh, server)
         return FedState(params=params, server=server, clients=clients)
+
+    def _guard_live(self, state: FedState) -> None:
+        """Reject a donated-away state at the entry point, BEFORE jax
+        surfaces its opaque donated-buffer RuntimeError from deep inside
+        dispatch."""
+        cl = () if isinstance(state.clients, HostStateStore) \
+            else state.clients
+        for leaf in jax.tree.leaves((state.params, state.server, cl)):
+            if isinstance(leaf, jax.Array) and leaf.is_deleted():
+                raise ValueError(
+                    "this FedState was already consumed: round/run_scanned "
+                    "jits DONATE params/server/clients (the client bank "
+                    "updates in place), so a state can enter exactly one "
+                    "round. Chain the returned state forward, or call "
+                    "FedState.copy() BEFORE the round to keep a live "
+                    "branch.")
 
     # ---------------------------------------------------- comm accounting --
 
@@ -209,9 +278,11 @@ class FedSim:
             sds = partial(jax.tree.map,
                           lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype))
             p, sv = sds(state.params), sds(state.server)
+            cl = (state.clients.bank
+                  if isinstance(state.clients, HostStateStore)
+                  else state.clients)
             c = jax.tree.map(
-                lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype),
-                state.clients)
+                lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype), cl)
             msg = API.message_struct(self.algo, self.task, self.hp, p, c,
                                      sv, one_batch)
             up = API.message_wire_bytes(msg)
@@ -221,21 +292,18 @@ class FedSim:
         return {"bytes_up": up * s, "bytes_down": down * s}
 
     def _banked_batch_struct(self, bank):
-        """ONE client's batch struct as drawn from the resident bank
-        (cached — the banked per-round path calls this every round).
-        Keyed by the bank's own leaf shapes/dtypes plus its static spec,
-        never by object identity (ids get recycled, and the spec alone
-        omits the feature shapes)."""
+        """ONE client's batch struct as drawn from a data bank (cached —
+        the banked per-round path calls this every round).  Keyed by the
+        bank's own leaf shapes/dtypes plus its static spec, never by
+        object identity (ids get recycled, and the spec alone omits the
+        feature shapes).  Works for both residency classes — paged banks
+        answer from their host shapes without staging anything."""
         key = ("bank", bank.spec,
                tuple((tuple(x.shape), str(np.dtype(x.dtype)))
-                     for x in jax.tree.leaves(bank)))
+                     for x in (bank.x, bank.y, bank.sizes)))
         cached = self._comm_cache.get(key)
         if cached is None:
-            one = jax.eval_shape(
-                lambda b: b.sample(jax.random.PRNGKey(0),
-                                   jnp.zeros((1,), jnp.int32)), bank)
-            cached = self._comm_cache[key] = jax.tree.map(
-                lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype), one)
+            cached = self._comm_cache[key] = bank.one_client_struct()
         return cached
 
     # ------------------------------------------------------------ round ----
@@ -284,11 +352,17 @@ class FedSim:
         return sample_cohort(kc, self.n, s) if sample else idx
 
     def _sharded_round_impl(self, params, server, clients, batches, kr, idx,
-                            weights, s: int):
+                            weights, s: int, n_rows: int):
         """One sharded round from a cohort + [S] batches, fully in-graph:
         bucket the cohort (``sharded.bucket_cohort``), pre-bucket the
-        participant batches into shard order, run the shard_map round."""
-        local, pos, w = self._sharded.bucket_cohort(idx, weights, self.n,
+        participant batches into shard order, run the shard_map round.
+
+        ``n_rows`` is the CLIENT-BANK row count the bucketing addresses —
+        N for resident banks (today's behavior, unchanged), the staged
+        capacity for paged chunks (cohort ids are then staged-row
+        positions; aggregation still uses the true ``n_total = N`` inside
+        the round fn)."""
+        local, pos, w = self._sharded.bucket_cohort(idx, weights, n_rows,
                                                     self._n_shards)
         flat_pos = pos.reshape(-1)
         b = jax.tree.map(lambda x: jnp.take(x, flat_pos, axis=0), batches)
@@ -328,7 +402,7 @@ class FedSim:
         """Banked-round jit target on the mesh-sharded engine."""
         fn = self._banked_body(
             lambda p, sv, c, b, kr, ii, w: self._sharded_round_impl(
-                p, sv, c, b, kr, ii, w, s),
+                p, sv, c, b, kr, ii, w, s, bank.n_clients),
             bank, s=s, sample=sample)
         return self._scan_of_one(
             lambda p, sv, c: fn(key, idx, p, sv, c),
@@ -415,10 +489,21 @@ class FedSim:
         the cohort is the caller's; with neither, everyone participates.
         A banked ``round()`` loop over :func:`round_keys` keys is the
         per-round oracle ``run_scanned`` matches bit-for-bit.
+
+        With a PAGED data bank (``ds.paged_bank``) only banked rounds are
+        supported — explicit ``client_batches`` presuppose a resident
+        client bank to index into.
         """
+        self._guard_live(state)
         if client_batches is None:
             return self._round_banked_host(state, rng, mask, participants,
                                            sample_clients)
+        if self._paged:
+            raise ValueError(
+                "a paged data bank supports banked rounds only "
+                "(client_batches=None); explicit client_batches assume a "
+                "resident [N, ...] bank. Use ds.device_bank(...) for the "
+                "explicit-batch path.")
         if sample_clients:
             raise ValueError("sample_clients= is the banked round's "
                              "in-graph cohort draw (client_batches=None); "
@@ -482,19 +567,21 @@ class FedSim:
     def _round_banked_host(self, state: FedState, rng, mask, participants,
                            sample_clients: int):
         """Host-side half of the banked round: resolve the cohort mode,
-        validate, dispatch the engine's banked jit."""
+        validate, dispatch the engine's banked jit (resident), or stage
+        through the stores (paged)."""
         bank = getattr(self.task, "data", None)
         if bank is None:
             raise ValueError("banked rounds (client_batches=None) need a "
-                             "resident data bank: "
-                             "task.with_data(ds.device_bank(steps, batch))")
+                             "data bank: task.with_data("
+                             "ds.device_bank(steps, batch)) or "
+                             "task.with_data(ds.paged_bank(steps, batch))")
         if mask is not None:
             raise ValueError("banked rounds take participants=/"
                              "sample_clients=, not mask= (weights are "
                              "uniform in-graph)")
         if sample_clients and participants is not None:
             raise ValueError("pass sample_clients= OR participants=")
-        idx_dev = None
+        idx = None
         if 0 < sample_clients < self.n:
             s, sample = int(sample_clients), True
         elif participants is not None:
@@ -509,16 +596,59 @@ class FedSim:
                 raise ValueError("banked participants must be sorted unique "
                                  f"ids in [0, {self.n})")
             s, sample = int(idx.size), False
-            if s < self.n:
-                idx_dev = jnp.asarray(idx, jnp.int32)
         else:
             s, sample = self.n, False
+        if self._paged:
+            return self._round_banked_paged(state, bank, rng, s, sample, idx)
         comm = self._comm_metrics(state, self._banked_batch_struct(bank), s)
+        idx_dev = (jnp.asarray(idx, jnp.int32)
+                   if idx is not None and s < self.n else None)
         p, sv, c, metrics = self._banked_jit(
             state.params, state.server, state.clients, bank, rng, idx_dev,
             s=s, sample=sample)
         metrics = dict(metrics, **comm)
         return FedState(params=p, server=sv, clients=c,
+                        round=state.round + 1), metrics
+
+    def _round_banked_paged(self, state: FedState, bank, rng, s: int,
+                            sample: bool, idx):
+        """Paged banked round: resolve the cohort HOST-side, stage its
+        rows, run the SAME banked jit over the ``[cap, ...]`` staged
+        views, write updated state rows back.
+
+        An in-graph ``sample_clients`` draw is reproduced eagerly —
+        :func:`sample_cohort` over the same ``kc`` the scanned body would
+        split off (the documented oracle contract), so paged and resident
+        runs see identical cohorts; the jit then runs with the cohort
+        SCHEDULED (``sample=False``) against staged-row positions, which
+        leaves ``kb``/``kr`` — and therefore every batch draw and client
+        rng — unchanged.
+        """
+        if not isinstance(state.clients, HostStateStore):
+            raise ValueError(
+                "paged rounds need a paged FedState (clients held in a "
+                "HostStateStore): build the sim on a task carrying "
+                f"ds.paged_bank(...) BEFORE sim.init; got clients of type "
+                f"{type(state.clients).__name__}")
+        if sample:
+            kc = jax.random.split(rng, 3)[0]
+            idx = np.asarray(sample_cohort(kc, self.n, s))
+        elif idx is None:
+            idx = np.arange(self.n)
+        nd = self._n_shards if self.mesh is not None else 1
+        cap = round_up(min(s, self.n), nd)
+        union, n_live, local = plan_chunk(np.asarray(idx)[None, :], cap)
+        staged_bank = bank.gather(union, sharding=self._stage_sh)
+        staged_clients = state.clients.gather(union,
+                                              sharding=self._stage_sh)
+        comm = self._comm_metrics(state, self._banked_batch_struct(bank), s)
+        idx_dev = None if s == self.n else jnp.asarray(local[0])
+        p, sv, c, metrics = self._banked_jit(
+            state.params, state.server, staged_clients, staged_bank, rng,
+            idx_dev, s=s, sample=False)
+        state.clients.scatter(union[:n_live], c)
+        metrics = dict(metrics, **comm)
+        return FedState(params=p, server=sv, clients=state.clients,
                         round=state.round + 1), metrics
 
     def _round_sharded(self, state: FedState, client_batches, rng, idx,
@@ -601,7 +731,7 @@ class FedSim:
         compiles once per (chunk length, S)."""
         return self._scan_chunk(
             lambda p, sv, c, b, kr, idx, w: self._sharded_round_impl(
-                p, sv, c, b, kr, idx, w, s),
+                p, sv, c, b, kr, idx, w, s, bank.n_clients),
             (params, server, clients), keys, cohorts, bank, s=s,
             scheduled=scheduled)
 
@@ -635,12 +765,24 @@ class FedSim:
             for t in range(rounds):
                 state, _ = sim.round(state, None, keys[t],
                                      sample_clients=S)   # or participants=
+
+        With a PAGED bank (``task.with_data(ds.paged_bank(...))``) the
+        same key stream drives the OUT-OF-CORE driver: cohorts are drawn
+        host-side from the identical ``kc`` keys, each chunk stages only
+        the union of its cohorts' client rows (state + data) to device,
+        and the same scanned programs run over the staged views — device
+        memory is bounded by ``min(eval_every · S, N)`` rows while the
+        population stays host-side.  Matches the resident run to fp32
+        tolerance (the staged program is shape-smaller, so XLA fusion may
+        differ by ~1 ulp; every cohort, batch draw, and client rng is
+        identical by construction).
         """
         bank = getattr(self.task, "data", None)
         if bank is None:
             raise ValueError(
-                "run_scanned needs a resident data bank: "
-                "task.with_data(ds.device_bank(steps, batch))")
+                "run_scanned needs a data bank — resident data bank "
+                "task.with_data(ds.device_bank(steps, batch)) or paged "
+                "task.with_data(ds.paged_bank(steps, batch))")
         if eval_every < 1:
             raise ValueError(f"eval_every must be >= 1 (one chunk per "
                              f"eval); got {eval_every} — for no evals, "
@@ -669,6 +811,9 @@ class FedSim:
             scheduled = False
         k_init, keys = round_keys(rng, rounds)
         state = self.init(k_init)
+        if self._paged:
+            return self._run_scanned_paged(state, keys, rounds, bank, s,
+                                           cohorts, eval_fn, eval_every)
         scan = (self._scan_sharded_jit if self.mesh is not None
                 else self._scan_jit)
         hist = {"round": [], "metric": [], "loss": []}
@@ -681,6 +826,63 @@ class FedSim:
                                     bank, s=s, scheduled=scheduled)
             t += chunk
             state = FedState(params=p, server=sv, clients=c, round=t)
+            if eval_fn is not None:
+                hist["round"].append(t - 1)
+                hist["metric"].append(float(eval_fn(state.params)))
+                hist["loss"].append(float(losses[-1]))
+        return state, hist
+
+    def _run_scanned_paged(self, state: FedState, keys, rounds: int, bank,
+                           s: int, cohorts, eval_fn, eval_every: int):
+        """The out-of-core half of :meth:`run_scanned`.
+
+        Host side per chunk: plan the union of the chunk's cohorts padded
+        to the STATIC capacity ``cap = min(eval_every · S, N)`` rounded to
+        the shard count (one compiled program per (chunk, S) — never per
+        random cohort; pad slots repeat the last live id, dead rows no
+        cohort references and no scatter writes), stage the union's data
+        and state rows, run the chunk's scan SCHEDULED over the remapped
+        cohort positions, scatter the live rows back.  The next chunk's
+        data rows prefetch (async ``device_put``) before this chunk's
+        state write-back blocks, double-buffering the copy under compute;
+        state rows cannot prefetch (the current chunk may still write
+        them).
+        """
+        if cohorts is None:
+            if s == self.n:
+                # full participation: every round's cohort is [0, N)
+                cohorts = np.broadcast_to(
+                    np.arange(self.n, dtype=np.int32), (rounds, self.n))
+            else:
+                cohorts = np.asarray(_draw_cohorts(keys, self.n, s))
+        store = state.clients
+        nd = self._n_shards if self.mesh is not None else 1
+        cap = round_up(min(eval_every * s, self.n), nd)
+        plans, t = [], 0
+        while t < rounds:
+            chunk = min(eval_every, rounds - t)
+            plans.append((chunk, *plan_chunk(cohorts[t:t + chunk], cap)))
+            t += chunk
+        scan = (self._scan_sharded_jit if self.mesh is not None
+                else self._scan_jit)
+        sh = self._stage_sh
+        hist = {"round": [], "metric": [], "loss": []}
+        bank.prefetch(plans[0][1], sharding=sh)
+        t = 0
+        for i, (chunk, union, n_live, local) in enumerate(plans):
+            staged_bank = bank.gather(union, sharding=sh)
+            staged_clients = store.gather(union, sharding=sh)
+            p, sv, c, losses = scan(state.params, state.server,
+                                    staged_clients, keys[t:t + chunk],
+                                    jnp.asarray(local), staged_bank,
+                                    s=s, scheduled=True)
+            if i + 1 < len(plans):
+                # dispatch the NEXT chunk's data staging before blocking
+                # on this chunk's write-back: the copy rides under compute
+                bank.prefetch(plans[i + 1][1], sharding=sh)
+            store.scatter(union[:n_live], c)
+            t += chunk
+            state = FedState(params=p, server=sv, clients=store, round=t)
             if eval_fn is not None:
                 hist["round"].append(t - 1)
                 hist["metric"].append(float(eval_fn(state.params)))

@@ -1,0 +1,216 @@
+"""The ClientStore seam: where per-client rows live, and how cohorts move.
+
+Every engine layer used to assume the stacked ``[N, ...]`` client bank
+(state rows and data shards alike) is RESIDENT on device.  That caps the
+simulable population at whatever one accelerator holds — second-order
+clients carry heavy state (SCAFFOLD control variates, gram banks), so
+N ≥ 10⁵ stateful clients cannot be device-resident at any useful model
+size.  This module names the seam instead of the assumption:
+
+ClientStore protocol
+--------------------
+A *client store* owns per-client rows (a pytree of ``[N, ...]`` leaves,
+or an indexable host dataset) and exposes exactly three operations::
+
+    gather(rows, sharding=None)  -> device rows   [len(rows), ...]
+    scatter(rows, staged)        -> None          (write device rows back)
+    prefetch(rows, sharding=None)-> None          (per-chunk staging hint)
+
+plus ``n_clients`` and the static flag ``is_resident``.  Two residency
+classes implement it:
+
+* **resident** — the store's rows already live on device as one stacked
+  bank.  ``gather``/``scatter`` are identities the ENGINE performs
+  in-graph (``jnp.take`` / ``.at[idx].set`` inside the round jit), so the
+  resident store preserves the scanned driver's donation aliasing and
+  bit-for-bit contract exactly — it *is* today's behavior, renamed.
+  :class:`repro.data.federated.DeviceDataBank` is the resident data
+  store; the resident client-state store is the donated ``[N, ...]``
+  pytree carried in ``FedState.clients``.
+* **paged** — cold rows stay in host memory (numpy; pinned host buffers
+  on accelerator backends ride the same ``device_put`` path), and only
+  the HOT rows a chunk of rounds actually touches are staged to device.
+  :class:`repro.data.federated.HostPagedBank` pages the federated data;
+  :class:`HostStateStore` (here) pages the client-state bank.  Paging
+  happens ONLY at chunk boundaries, outside the scanned graph — the
+  round body stays pure and the per-chunk program is the same
+  ``lax.scan`` the resident path compiles, just over a ``[U, ...]``
+  staged bank instead of ``[N, ...]``.
+
+Stateless algorithms (the FedAvg/FedAdam family — see
+``repro.core.api.Algorithm.stateless``) have an EMPTY client-state tree:
+their :class:`HostStateStore` holds no leaves, gathers stage zero bytes,
+and scatters are no-ops — stateless registrations pay nothing for paging.
+
+Chunk planning
+--------------
+:func:`plan_chunk` is the host-side half of the paged scanned driver:
+given a chunk's cohort rows it computes the UNION of participating
+clients, pads it to a static capacity (so the chunk program compiles once
+per (chunk, S), never per random cohort), and remaps the cohort ids to
+staged-row positions.  The capacity is ``min(chunk · S, N)`` rounded up
+to the mesh shard count — device memory is therefore bounded by the
+cohort schedule, not the population.
+"""
+from __future__ import annotations
+
+from typing import Any, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+__all__ = ["ClientStore", "HostStateStore", "plan_chunk", "device_bytes",
+           "round_up"]
+
+
+@runtime_checkable
+class ClientStore(Protocol):
+    """Structural protocol every client store implements (see module
+    docstring).  ``is_resident`` is a static class attribute: resident
+    stores are gathered/scattered in-graph by the engine, paged stores
+    at chunk boundaries by the driver."""
+
+    is_resident: bool
+
+    @property
+    def n_clients(self) -> int: ...
+
+    def gather(self, rows, *, sharding=None): ...
+
+    def scatter(self, rows, staged) -> None: ...
+
+    def prefetch(self, rows, *, sharding=None) -> None: ...
+
+
+def device_bytes(tree: PyTree) -> int:
+    """Total bytes of a pytree's array leaves (the exact staging cost of
+    a gathered view — the number the paging bench gates on)."""
+    return sum(int(np.prod(x.shape)) * np.dtype(x.dtype).itemsize
+               for x in jax.tree.leaves(tree)
+               if hasattr(x, "shape"))
+
+
+def round_up(n: int, multiple: int) -> int:
+    """Smallest multiple of ``multiple`` that is >= max(n, 1)."""
+    n = max(int(n), 1)
+    m = max(int(multiple), 1)
+    return ((n + m - 1) // m) * m
+
+
+def plan_chunk(rows: np.ndarray, cap: int):
+    """Plan one paged chunk: staged-row ids + cohort remap.
+
+    ``rows`` is the chunk's cohort schedule ``[chunk, S]`` (sorted unique
+    ids per live row; all -1 marks an empty round).  Returns
+    ``(union, n_live, local)``:
+
+    * ``union`` — ``[cap]`` int32 client ids to stage, the sorted unique
+      participants padded to the STATIC capacity ``cap`` (pad slots
+      repeat the last live id — dead duplicate rows that no cohort
+      references and no scatter writes back);
+    * ``n_live`` — how many leading union entries are real (the rows a
+      scatter must write back);
+    * ``local`` — ``rows`` remapped to staged positions (``union[local]
+      == rows`` elementwise on live entries; -1 rows stay -1), still
+      sorted unique per live row, so the staged chunk replays the exact
+      cohort schedule against the ``[cap, ...]`` staged bank.
+    """
+    rows = np.asarray(rows)
+    live = rows >= 0
+    union = np.unique(rows[live]).astype(np.int64)
+    n_live = int(union.size)
+    if n_live > cap:
+        raise ValueError(f"chunk touches {n_live} distinct clients but the "
+                         f"staging capacity is {cap}")
+    pad_id = union[-1] if n_live else 0
+    padded = np.full((cap,), pad_id, np.int32)
+    padded[:n_live] = union
+    local = np.full(rows.shape, -1, np.int32)
+    local[live] = np.searchsorted(union, rows[live]).astype(np.int32)
+    return padded, n_live, local
+
+
+def _put(x: np.ndarray, sharding):
+    return jax.device_put(x, sharding) if sharding is not None \
+        else jnp.asarray(x)
+
+
+class HostStateStore:
+    """Host-paged client-state bank: the paged twin of the resident
+    donated ``[N, ...]`` pytree in ``FedState.clients``.
+
+    Rows live as host numpy; :meth:`gather` stages the requested rows to
+    device (optionally placed with a mesh ``sharding``, so each mesh
+    shard receives only its slice — shard-local paging), and
+    :meth:`scatter` writes updated device rows back into the host bank
+    in place.  A store with no leaves (stateless algorithms) stages and
+    scatters NOTHING — zero paging cost, enforced by
+    ``last_staged_bytes == 0``.
+
+    The store is mutated in place by ``scatter`` — it is the single
+    source of truth for client state across chunks, exactly like the
+    donated resident bank.  Branch with :meth:`copy` (the paged analog
+    of ``FedState.copy``).
+    """
+
+    is_resident = False
+
+    def __init__(self, bank: PyTree, n: int | None = None):
+        self.bank = jax.tree.map(
+            lambda x: np.ascontiguousarray(np.asarray(x)), bank)
+        leaves = jax.tree.leaves(self.bank)
+        # a stateless store has no leaves to read N from — take it as given
+        self._n = int(leaves[0].shape[0]) if leaves else int(n or 0)
+        #: exact device bytes of the most recent gather (bench/tests)
+        self.last_staged_bytes = 0
+
+    @classmethod
+    def broadcast(cls, one_client: PyTree, n: int) -> "HostStateStore":
+        """Build the ``[N, ...]`` host bank from one client's init state
+        (the paged counterpart of the engine's device broadcast_to)."""
+        return cls(jax.tree.map(
+            lambda x: np.broadcast_to(
+                np.asarray(x), (n, *np.shape(x))).copy(), one_client), n=n)
+
+    @property
+    def n_clients(self) -> int:
+        return self._n
+
+    @property
+    def stateless(self) -> bool:
+        """No leaves → nothing to page (FedAvg/FedAdam-family state)."""
+        return not jax.tree.leaves(self.bank)
+
+    def host_bytes(self) -> int:
+        return device_bytes(self.bank)
+
+    def gather(self, rows, *, sharding=None) -> PyTree:
+        """Stage ``rows`` to device as a ``[len(rows), ...]`` pytree."""
+        rows = np.asarray(rows)
+        staged = jax.tree.map(lambda x: _put(x[rows], sharding), self.bank)
+        self.last_staged_bytes = device_bytes(staged)
+        return staged
+
+    def scatter(self, rows, staged: PyTree) -> None:
+        """Write ``staged`` device rows back to the host bank in place.
+        ``rows`` must be the LIVE (unpadded) prefix of the gathered ids;
+        extra trailing staged rows (capacity padding) are ignored."""
+        rows = np.asarray(rows)
+        if rows.size == 0 or self.stateless:
+            return
+        k = int(rows.shape[0])
+        jax.tree.map(
+            lambda host, dev: host.__setitem__(rows, np.asarray(dev[:k])),
+            self.bank, staged)
+
+    def prefetch(self, rows, *, sharding=None) -> None:
+        """No-op: state rows carry a chunk-to-chunk write dependency (the
+        next chunk's rows may have been updated by the current one), so
+        they stage synchronously after the previous scatter.  Only the
+        read-only data bank double-buffers across the boundary."""
+
+    def copy(self) -> "HostStateStore":
+        return HostStateStore(jax.tree.map(np.copy, self.bank), n=self._n)

@@ -8,12 +8,17 @@ A *task* exposes exactly what the registry's LocalUpdate solvers
                                 sgd-family's lazy ``grams`` wire field)
     hessian(params, batch)   -> [d, d]               (flat convex only)
 
-Tasks optionally carry a RESIDENT federated data bank (``data``, a
-:class:`repro.data.federated.DeviceDataBank`): ``sample_batches(rng,
-participants)`` then draws per-round client batches entirely in-graph —
-the data path ``FedSim.run_scanned`` scans over, so synthetic/FEMNIST-class
-workloads never leave the device between evals.  ``with_data`` attaches a
-bank to an existing task.
+Tasks optionally carry a federated data store (``data``, any
+:class:`repro.fl.store.ClientStore` data bank).  With the RESIDENT
+:class:`repro.data.federated.DeviceDataBank`, ``sample_batches(rng,
+participants)`` draws per-round client batches entirely in-graph — the
+data path ``FedSim.run_scanned`` scans over, so synthetic/FEMNIST-class
+workloads never leave the device between evals.  With the PAGED
+:class:`repro.data.federated.HostPagedBank`, the task holds only the
+host-side store; the engine stages hot cohort rows per chunk and samples
+from the staged views (``sample_batches`` on the paged store itself is a
+contract error — there is nothing resident to draw from).  ``with_data``
+attaches either store to an existing task.
 """
 from __future__ import annotations
 
@@ -29,20 +34,28 @@ from repro.models.simple import (CNNModel, LogisticModel, MLPModel,
 
 
 class _DataBankMixin:
-    """``sample_batches`` for tasks that carry a resident data bank."""
+    """``with_data``/``sample_batches`` for tasks that carry a data store."""
 
     def with_data(self, bank):
-        """A copy of this task with the resident data bank attached."""
+        """A copy of this task with a data store attached (resident
+        ``DeviceDataBank`` or paged ``HostPagedBank``)."""
         return dataclasses.replace(self, data=bank)
 
     def sample_batches(self, rng, participants):
         """In-graph [S, K, B, ...] batches for the cohort ``participants``
-        (scan-safe: pure jax.random draws from the resident bank)."""
+        (scan-safe: pure jax.random draws from a RESIDENT bank — the
+        engine samples paged data from its staged chunk views instead)."""
         if self.data is None:
             raise ValueError(
-                f"{type(self).__name__} has no resident data bank; build "
-                "one with FederatedDataset.device_bank(...) and attach it "
-                "via task.with_data(bank) to use the scanned driver")
+                f"{type(self).__name__} has no data bank; build one with "
+                "FederatedDataset.device_bank(...) (or .paged_bank) and "
+                "attach it via task.with_data(bank) to use the scanned "
+                "driver")
+        if not getattr(self.data, "is_resident", True):
+            raise ValueError(
+                "sample_batches draws from a RESIDENT bank; this task "
+                "holds a paged store — the engine samples from its staged "
+                "chunk views (bank.gather(rows).sample(...))")
         return self.data.sample(rng, participants)
 
 
@@ -50,7 +63,7 @@ class _DataBankMixin:
 class ConvexTask(_DataBankMixin):
     """Test 1: logistic regression with analytic grad/Hessian, flat θ ∈ R^d."""
     model: LogisticModel
-    data: Any = None                  # optional resident DeviceDataBank
+    data: Any = None                  # optional ClientStore data bank
 
     def init(self, rng):
         return self.model.init(rng)
@@ -73,7 +86,7 @@ class ConvexTask(_DataBankMixin):
 class DNNTask(_DataBankMixin):
     """Test 2: MLP / CNN classification with FOOF grams."""
     model: Any   # MLPModel | CNNModel
-    data: Any = None                  # optional resident DeviceDataBank
+    data: Any = None                  # optional ClientStore data bank
 
     def init(self, rng):
         return self.model.init(rng)

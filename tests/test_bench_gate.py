@@ -1,0 +1,79 @@
+"""benchmarks.bench_gate: the regression check and the --update-baseline
+guard (ISSUE 6 satellite).
+
+The guard is the part worth testing: regenerating a baseline FROM a
+failing run would silently widen the failing gate — the next regression
+on top of it still passes and the gate is dead.  ``--update-baseline``
+must refuse that (leaving the baseline untouched) unless the widening is
+made explicit with ``--allow-regression``.
+"""
+import json
+
+import pytest
+
+from benchmarks.bench_gate import check, main
+
+
+def _gates(**kv):
+    return {k: {"value": v[0], "worse": v[1]} for k, v in kv.items()}
+
+
+def test_check_directions_and_missing():
+    base = {"gates": _gates(up=(2.0, "higher"), down=(4.0, "lower"),
+                            gone=(1.0, "higher"))}
+    cur = {"gates": _gates(up=(2.4, "higher"),    # within 2.0*1.25
+                           down=(2.0, "lower"))}  # below 4.0*0.75 -> FAIL
+    fails = check(cur, base, tol=0.25)
+    assert any(f.startswith("down:") for f in fails)
+    assert any("gone: missing" in f for f in fails)
+    assert not any(f.startswith("up:") for f in fails)
+    assert check({"gates": _gates(up=(2.4, "higher"), down=(3.1, "lower"),
+                                  gone=(1.0, "higher"))}, base, 0.25) == []
+
+
+@pytest.fixture()
+def paths(tmp_path):
+    base = tmp_path / "baseline.json"
+    cur = tmp_path / "current.json"
+    base.write_text(json.dumps(
+        {"meta": {"note": "kept"}, "gates": _gates(g=(2.0, "higher"))}))
+    return cur, base
+
+
+def test_update_baseline_refuses_to_widen_failing_gate(paths, capsys):
+    cur, base = paths
+    cur.write_text(json.dumps({"gates": _gates(g=(9.0, "higher"))}))
+    rc = main([str(cur), str(base), "--update-baseline"])
+    assert rc == 1
+    assert "REFUSING" in capsys.readouterr().err
+    # the failing run must NOT have touched the checked-in baseline
+    assert json.loads(base.read_text())["gates"]["g"]["value"] == 2.0
+
+
+def test_update_baseline_allow_regression_is_explicit(paths, capsys):
+    cur, base = paths
+    cur.write_text(json.dumps({"gates": _gates(g=(9.0, "higher"))}))
+    rc = main([str(cur), str(base), "--update-baseline",
+               "--allow-regression"])
+    assert rc == 0
+    assert "WIDENING" in capsys.readouterr().out   # the act is logged
+    out = json.loads(base.read_text())
+    assert out["gates"]["g"]["value"] == 9.0
+    assert out["meta"] == {"note": "kept"}         # meta survives refresh
+
+
+def test_update_baseline_passing_run(paths):
+    cur, base = paths
+    cur.write_text(json.dumps(
+        {"gates": _gates(g=(1.8, "higher"), new=(16.0, "lower"))}))
+    assert main([str(cur), str(base), "--update-baseline"]) == 0
+    out = json.loads(base.read_text())
+    assert set(out["gates"]) == {"g", "new"}       # new gates picked up
+
+
+def test_update_baseline_refuses_empty_gates(paths):
+    cur, base = paths
+    cur.write_text(json.dumps({"rows": {}}))       # smoke crashed early
+    assert main([str(cur), str(base), "--update-baseline",
+                 "--allow-regression"]) == 1
+    assert json.loads(base.read_text())["gates"]["g"]["value"] == 2.0

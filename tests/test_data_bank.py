@@ -1,0 +1,103 @@
+"""DeviceDataBank ragged-sampling edge cases (ISSUE 6 satellite):
+
+FEMNIST-class partitions are RAGGED — shard sizes differ by orders of
+magnitude, down to a single example.  The bank pads every client to the
+max shard length M, so the failure mode to guard is a draw indexing PAST
+a client's true shard size into the (cyclic) padding of a neighbor's
+content.  Features here encode the owning sample id, so any cross-shard
+leak is detected exactly.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import FederatedDataset
+
+
+def _ragged_ds():
+    """9 samples; shards of size 1 / 3 / 5 — x[i] == i marks ownership."""
+    x = np.arange(9, dtype=np.float32)[:, None]
+    y = np.arange(9, dtype=np.int32)
+    shards = [np.array([0]), np.array([1, 2, 3]),
+              np.array([4, 5, 6, 7, 8])]
+    return FederatedDataset(x=x, y=y, shards=shards)
+
+
+def _owners(ds):
+    return [set(np.asarray(s).tolist()) for s in ds.shards]
+
+
+def test_batch_larger_than_smallest_shard_never_leaks():
+    """batch · steps ≫ the smallest shard: draws repeat WITHIN the true
+    shard (replacement), never reading the cyclic padding rows."""
+    ds = _ragged_ds()
+    bank = ds.device_bank(steps=2, batch=4)          # need 8 > min size 1
+    assert bank.spec.min_size == 1
+    out = bank.sample(jax.random.PRNGKey(0), jnp.arange(3))
+    ids = np.asarray(out["x"]).reshape(3, -1).astype(np.int64)
+    labels = np.asarray(out["y"]).reshape(3, -1)
+    np.testing.assert_array_equal(ids, labels)       # x/y rows stay paired
+    for c, owned in enumerate(_owners(ds)):
+        assert set(ids[c].tolist()) <= owned, f"client {c} leaked"
+    # the single-example client sees its one sample, every draw
+    np.testing.assert_array_equal(ids[0], 0)
+
+
+def test_single_example_shard_with_many_participants():
+    ds = _ragged_ds()
+    bank = ds.device_bank(steps=3, batch=2)
+    # different rng keys must still never escape a 1-element shard
+    for seed in range(4):
+        out = bank.sample(jax.random.PRNGKey(seed),
+                          jnp.zeros((2,), jnp.int32))  # client 0 twice
+        np.testing.assert_array_equal(np.asarray(out["x"]), 0.0)
+
+
+def test_batch_zero_full_shard_mode():
+    """batch == 0: every step sees the client's FIRST min_size samples —
+    deterministic, rng-free, and bounded by the smallest true shard (so
+    no client reads padding)."""
+    ds = _ragged_ds()
+    bank = ds.device_bank(steps=2, batch=0)
+    out = bank.sample(jax.random.PRNGKey(0), jnp.arange(3))
+    assert out["x"].shape == (3, 2, 1, 1)            # [S, steps, min_size, 1]
+    first = {0: 0, 1: 1, 2: 4}                       # each shard's first id
+    for c in range(3):
+        np.testing.assert_array_equal(np.asarray(out["x"])[c],
+                                      float(first[c]))
+    # rng-free: a different key draws the identical batches
+    out2 = bank.sample(jax.random.PRNGKey(7), jnp.arange(3))
+    np.testing.assert_array_equal(np.asarray(out["x"]),
+                                  np.asarray(out2["x"]))
+
+
+def test_paged_staged_view_matches_resident_on_ragged():
+    """Staging ragged clients preserves true sizes AND padding layout, so
+    staged draws equal resident draws bitwise at the same key."""
+    ds = _ragged_ds()
+    res = ds.device_bank(steps=2, batch=4)
+    pag = ds.paged_bank(steps=2, batch=4)
+    rows = np.array([0, 2])
+    staged = pag.gather(rows)
+    np.testing.assert_array_equal(np.asarray(staged.sizes), [1, 5])
+    key = jax.random.PRNGKey(3)
+    want = res.sample(key, jnp.asarray(rows))
+    got = staged.sample(key, jnp.arange(2))
+    for k in ("x", "y"):
+        np.testing.assert_array_equal(np.asarray(got[k]),
+                                      np.asarray(want[k]))
+
+
+def test_sampling_distribution_covers_whole_shard():
+    """Draws below the true size are uniform over the WHOLE shard — a
+    clamp-style bug (always row 0) or an off-by-one (size-1 cap) would
+    miss ids."""
+    ds = _ragged_ds()
+    bank = ds.device_bank(steps=4, batch=8)
+    seen = set()
+    for seed in range(8):
+        out = bank.sample(jax.random.PRNGKey(seed),
+                          jnp.full((1,), 2, jnp.int32))
+        seen |= set(np.asarray(out["x"]).reshape(-1).astype(int).tolist())
+    assert seen == {4, 5, 6, 7, 8}

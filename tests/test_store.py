@@ -1,0 +1,375 @@
+"""ClientStore seam contracts (ISSUE 6):
+
+* ``plan_chunk`` pads chunk unions to a static capacity and remaps
+  cohorts to staged-row positions (pad rows dead, -1 rows preserved);
+* ``HostStateStore`` round-trips gather/scatter against host numpy,
+  stages ZERO bytes for stateless algorithms, and deep-copies;
+* the PAGED engine (``ds.paged_bank``) matches the RESIDENT engine to
+  fp32 tolerance on identical cohort schedules — sampled, scheduled
+  (with an empty round inside a chunk), and full participation — on the
+  vmap engine here and the mesh-sharded engine in an 8-fake-device
+  subprocess;
+* paged device memory is bounded by the chunk's staging capacity, not N;
+* a donated-away ``FedState`` is rejected at the ``round`` entry with an
+  actionable message pointing at ``FedState.copy()``.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.algorithms import HParams, get_algorithm
+from repro.data import DeviceDataBank, FederatedDataset, HostPagedBank, \
+    make_clustered_classification
+from repro.fl.simulate import FedSim, FedState, round_keys
+from repro.fl.store import ClientStore, HostStateStore, device_bytes, \
+    plan_chunk, round_up
+from repro.fl.tasks import DNNTask
+from repro.models.simple import MLPModel
+
+N, R = 12, 5
+
+
+@pytest.fixture(scope="module")
+def ds():
+    data = make_clustered_classification(1200, 16, 4, seed=0)
+    return FederatedDataset.from_arrays(data, N, alpha=0.5, seed=0)
+
+
+@pytest.fixture(scope="module")
+def task(ds):
+    return DNNTask(MLPModel(in_dim=16, hidden=(32,), num_classes=4))
+
+
+def _resident(task, ds):
+    return task.with_data(ds.device_bank(steps=2, batch=16))
+
+
+def _paged(task, ds):
+    return task.with_data(ds.paged_bank(steps=2, batch=16))
+
+
+def _assert_close(a, b, tag):
+    """Paged ≡ resident to fp32 tolerance (the staged program is
+    shape-smaller, so XLA fusion may differ by ~1 ulp per op)."""
+    cl_a = a.clients.bank if isinstance(a.clients, HostStateStore) \
+        else a.clients
+    cl_b = b.clients.bank if isinstance(b.clients, HostStateStore) \
+        else b.clients
+    for name, x, y in (("params", a.params, b.params),
+                       ("server", a.server, b.server),
+                       ("clients", cl_a, cl_b)):
+        for u, v in zip(jax.tree.leaves(x), jax.tree.leaves(y)):
+            np.testing.assert_allclose(np.asarray(u), np.asarray(v),
+                                       rtol=2e-6, atol=2e-6,
+                                       err_msg=f"{tag}:{name}")
+
+
+# ------------------------------------------------------------ plan_chunk ---
+
+def test_plan_chunk_remaps_and_pads():
+    rows = np.array([[2, 5, 9], [2, 7, 9]], np.int32)
+    union, n_live, local = plan_chunk(rows, cap=6)
+    assert union.tolist() == [2, 5, 7, 9, 9, 9]      # pad repeats last live
+    assert n_live == 4
+    np.testing.assert_array_equal(union[local], rows)  # remap inverts
+    # live cohort rows stay sorted strictly ascending (bucket_cohort req)
+    assert np.all(np.diff(local, axis=1) > 0)
+
+
+def test_plan_chunk_preserves_empty_rows():
+    rows = np.array([[1, 3], [-1, -1]], np.int32)
+    union, n_live, local = plan_chunk(rows, cap=4)
+    assert n_live == 2
+    np.testing.assert_array_equal(local[1], [-1, -1])
+    np.testing.assert_array_equal(union[local[0]], rows[0])
+
+
+def test_plan_chunk_all_empty_and_overflow():
+    union, n_live, local = plan_chunk(np.full((2, 3), -1, np.int32), cap=3)
+    assert n_live == 0 and np.all(local == -1)
+    with pytest.raises(ValueError, match="staging capacity"):
+        plan_chunk(np.arange(8, dtype=np.int32)[None], cap=4)
+
+
+def test_round_up():
+    assert round_up(5, 4) == 8 and round_up(8, 4) == 8 and round_up(0, 4) == 4
+
+
+# --------------------------------------------------------- HostStateStore --
+
+def test_host_state_store_roundtrip():
+    store = HostStateStore.broadcast({"c": jnp.arange(3.0)}, n=6)
+    assert isinstance(store, ClientStore) and not store.is_resident
+    assert store.n_clients == 6 and not store.stateless
+    rows = np.array([1, 4])
+    staged = store.gather(rows)
+    assert store.last_staged_bytes == device_bytes(staged) > 0
+    store.scatter(rows, {"c": jnp.stack([jnp.full((3,), 7.0),
+                                         jnp.full((3,), 8.0)])})
+    np.testing.assert_array_equal(store.bank["c"][1], 7.0)
+    np.testing.assert_array_equal(store.bank["c"][4], 8.0)
+    np.testing.assert_array_equal(store.bank["c"][0], [0, 1, 2])  # untouched
+    # scatter ignores trailing capacity padding beyond len(rows)
+    store.scatter(np.array([2]), {"c": jnp.zeros((4, 3))})
+    np.testing.assert_array_equal(store.bank["c"][3], [0, 1, 2])
+
+
+def test_host_state_store_copy_branches():
+    store = HostStateStore.broadcast({"c": jnp.zeros((2,))}, n=4)
+    twin = store.copy()
+    store.scatter(np.array([0]), {"c": jnp.ones((1, 2))})
+    np.testing.assert_array_equal(twin.bank["c"], 0.0)
+
+
+def test_stateless_store_pages_nothing():
+    assert get_algorithm("fedavg").stateless
+    assert not get_algorithm("scaffold").stateless
+    store = HostStateStore.broadcast((), n=100_000)
+    assert store.stateless and store.host_bytes() == 0
+    assert store.n_clients == 100_000
+    store.gather(np.arange(64))
+    assert store.last_staged_bytes == 0
+    store.scatter(np.arange(64), ())                 # no-op, no error
+
+
+# -------------------------------------------------- data-bank store seam ---
+
+def test_banks_implement_client_store(ds):
+    res = ds.device_bank(steps=2, batch=16)
+    pag = ds.paged_bank(steps=2, batch=16)
+    assert isinstance(res, ClientStore) and res.is_resident
+    assert isinstance(pag, ClientStore) and not pag.is_resident
+    assert res.n_clients == pag.n_clients == N
+    assert res.one_client_struct() == pag.one_client_struct()
+
+
+def test_paged_gather_stages_resident_rows(ds):
+    """A staged view's rows are bytewise the resident bank's rows for
+    those clients — the equivalence the paged fp32 contract rests on."""
+    res = ds.device_bank(steps=2, batch=16)
+    pag = ds.paged_bank(steps=2, batch=16)
+    rows = np.array([1, 3, 8])
+    staged = pag.gather(rows)
+    assert isinstance(staged, DeviceDataBank) and staged.spec == res.spec
+    want = res.gather(rows)
+    for a, b in ((staged.x, want.x), (staged.y, want.y),
+                 (staged.sizes, want.sizes)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert pag.last_staged_bytes == device_bytes(
+        {"x": staged.x, "y": staged.y, "sizes": staged.sizes})
+
+
+def test_paged_prefetch_is_consumed(ds):
+    pag = ds.paged_bank(steps=2, batch=16)
+    rows = np.array([0, 5])
+    pag.prefetch(rows)
+    cached = pag._cache[(rows.tobytes(), None)]
+    assert pag.gather(rows) is cached
+    assert pag._cache == {}                          # consumed, not leaked
+
+
+# ------------------------------------------- paged ≡ resident (vmap) -------
+
+@pytest.mark.parametrize("algo,hp", [
+    ("scaffold", HParams(lr=0.1)),                   # stateful clients
+    ("fedpm_foof", HParams(lr=0.3, damping=1.0)),    # preconditioned mixing
+])
+def test_paged_scanned_matches_resident(task, ds, algo, hp):
+    rng = jax.random.PRNGKey(0)
+    got_r, _ = FedSim(_resident(task, ds), algo, hp, N).run_scanned(
+        rng, R, sample_clients=4, eval_every=2)
+    got_p, _ = FedSim(_paged(task, ds), algo, hp, N).run_scanned(
+        rng, R, sample_clients=4, eval_every=2)
+    _assert_close(got_r, got_p, algo)
+
+
+def test_paged_scheduled_with_empty_round(task, ds):
+    np_rng = np.random.default_rng(5)
+    cohorts = np.stack([np.sort(np_rng.choice(N, 4, replace=False))
+                        for _ in range(R)]).astype(np.int32)
+    cohorts[2] = -1                                  # empty round mid-chunk
+    rng, hp = jax.random.PRNGKey(1), HParams(lr=0.1)
+    got_r, _ = FedSim(_resident(task, ds), "scaffold", hp, N).run_scanned(
+        rng, R, cohorts=cohorts, eval_every=2)
+    got_p, _ = FedSim(_paged(task, ds), "scaffold", hp, N).run_scanned(
+        rng, R, cohorts=cohorts, eval_every=2)
+    _assert_close(got_r, got_p, "sched-empty")
+
+
+def test_paged_full_participation(task, ds):
+    rng, hp = jax.random.PRNGKey(2), HParams(lr=0.1)
+    got_r, _ = FedSim(_resident(task, ds), "scaffold", hp, N).run_scanned(
+        rng, 3, eval_every=3)
+    got_p, _ = FedSim(_paged(task, ds), "scaffold", hp, N).run_scanned(
+        rng, 3, eval_every=3)
+    _assert_close(got_r, got_p, "full")
+
+
+def test_paged_round_matches_paged_scanned(task, ds):
+    """The banked per-round paged loop is the paged scanned driver's
+    oracle (same contract shape as the resident engines')."""
+    rng, hp = jax.random.PRNGKey(3), HParams(lr=0.1)
+    sim = FedSim(_paged(task, ds), "scaffold", hp, N)
+    got, _ = sim.run_scanned(rng, R, sample_clients=4, eval_every=2)
+    k_init, keys = round_keys(rng, R)
+    st = sim.init(k_init)
+    for t in range(R):
+        st, m = sim.round(st, None, keys[t], sample_clients=4)
+    assert m["bytes_up"] > 0
+    _assert_close(got, st, "round-vs-scanned")
+
+
+def test_paged_round_with_participants(task, ds):
+    rng, hp = jax.random.PRNGKey(4), HParams(lr=0.1)
+    idx = np.array([0, 3, 7], np.int32)
+    out = {}
+    for tag, build in (("res", _resident), ("pag", _paged)):
+        sim = FedSim(build(task, ds), "scaffold", hp, N)
+        st = sim.init(jax.random.PRNGKey(9))
+        st, _ = sim.round(st, None, rng, participants=idx)
+        out[tag] = st
+    _assert_close(out["res"], out["pag"], "participants")
+
+
+def test_paged_non_participants_untouched(task, ds):
+    sim = FedSim(_paged(task, ds), "scaffold", HParams(lr=0.1), N)
+    st = sim.init(jax.random.PRNGKey(0))
+    before = jax.tree.map(np.copy, st.clients.bank)
+    st, _ = sim.round(st, None, jax.random.PRNGKey(1),
+                      participants=np.array([2, 5], np.int32))
+    touched = np.array([2, 5])
+    mask = np.ones(N, bool)
+    mask[touched] = False
+    for b, a in zip(jax.tree.leaves(before),
+                    jax.tree.leaves(st.clients.bank)):
+        np.testing.assert_array_equal(b[mask], a[mask])
+        assert not np.array_equal(b[touched], a[touched])
+
+
+def test_paged_device_memory_bounded_by_schedule(task, ds):
+    """Staged bytes per chunk scale with min(eval_every · S, N), not N —
+    the exact-bytes half of the paging contract."""
+    hp = HParams(lr=0.1)
+    sim = FedSim(_paged(task, ds), "scaffold", hp, N)
+    bank = sim.task.data
+    sim.run_scanned(jax.random.PRNGKey(0), 2, sample_clients=3,
+                    eval_every=1)
+    full = ds.device_bank(steps=2, batch=16)
+    full_bytes = device_bytes({"x": full.x, "y": full.y, "s": full.sizes})
+    assert 0 < bank.last_staged_bytes <= full_bytes * 3 // N + 64
+    # explicit per-round staging too
+    st = sim.init(jax.random.PRNGKey(0))
+    st, _ = sim.round(st, None, jax.random.PRNGKey(1), sample_clients=3)
+    assert st.clients.last_staged_bytes == \
+        device_bytes(st.clients.gather(np.arange(3)))
+
+
+def test_paged_rejects_explicit_batches(task, ds):
+    sim = FedSim(_paged(task, ds), "fedavg", HParams(lr=0.1), N)
+    st = sim.init(jax.random.PRNGKey(0))
+    batches = {"x": jnp.zeros((N, 2, 16, 16)), "y": jnp.zeros((N, 2, 16),
+                                                             jnp.int32)}
+    with pytest.raises(ValueError, match="banked rounds only"):
+        sim.round(st, batches, jax.random.PRNGKey(1))
+
+
+def test_sample_batches_rejects_paged_store(task, ds):
+    with pytest.raises(ValueError, match="RESIDENT"):
+        _paged(task, ds).sample_batches(jax.random.PRNGKey(0),
+                                        jnp.arange(2))
+
+
+# ------------------------------------------------- donated-state guard -----
+
+def test_consumed_state_rejected_with_actionable_error(task, ds):
+    sim = FedSim(_resident(task, ds), "scaffold", HParams(lr=0.1), N)
+    st = sim.init(jax.random.PRNGKey(0))
+    keep = st.copy()
+    sim.round(st, None, jax.random.PRNGKey(1), sample_clients=3)
+    with pytest.raises(ValueError, match="FedState.copy"):
+        sim.round(st, None, jax.random.PRNGKey(2), sample_clients=3)
+    # the copy is still live and usable
+    st2, _ = sim.round(keep, None, jax.random.PRNGKey(2), sample_clients=3)
+    assert not jax.tree.leaves(st2.clients)[0].is_deleted()
+
+
+def test_paged_state_copy_branches_host_bank(task, ds):
+    sim = FedSim(_paged(task, ds), "scaffold", HParams(lr=0.1), N)
+    st = sim.init(jax.random.PRNGKey(0))
+    keep = st.copy()
+    assert isinstance(keep.clients, HostStateStore)
+    assert keep.clients is not st.clients
+    st1, _ = sim.round(st, None, jax.random.PRNGKey(1), sample_clients=3)
+    # the paged store mutates in place; the copy kept the old rows
+    assert any(not np.array_equal(a, b)
+               for a, b in zip(jax.tree.leaves(st1.clients.bank),
+                               jax.tree.leaves(keep.clients.bank)))
+
+
+# ------------------------------------------- sharded engine (8 devices) ----
+
+SHARDED_PAGED_SCRIPT = r'''
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys; sys.path.insert(0, "src")
+import jax, jax.numpy as jnp, numpy as np
+from repro.core.algorithms import HParams
+from repro.data import FederatedDataset, make_clustered_classification
+from repro.fl.simulate import FedSim
+from repro.fl.sharded import make_client_mesh, staging_sharding
+from repro.fl.tasks import DNNTask
+from repro.models.simple import MLPModel
+
+assert jax.device_count() == 8
+mesh = make_client_mesh()
+N, R = 16, 4
+data = make_clustered_classification(1600, 16, 4, seed=0)
+ds = FederatedDataset.from_arrays(data, N, alpha=0.5, seed=0)
+task = DNNTask(MLPModel(in_dim=16, hidden=(32,), num_classes=4))
+hp = HParams(lr=0.1)
+
+def close(a, b, tag):
+    ca = a.clients.bank if hasattr(a.clients, "bank") else a.clients
+    cb = b.clients.bank if hasattr(b.clients, "bank") else b.clients
+    for name, x, y in (("params", a.params, b.params),
+                       ("server", a.server, b.server), ("clients", ca, cb)):
+        for u, v in zip(jax.tree.leaves(x), jax.tree.leaves(y)):
+            np.testing.assert_allclose(np.asarray(u), np.asarray(v),
+                                       rtol=2e-6, atol=2e-6,
+                                       err_msg=f"{tag}:{name}")
+
+rng = jax.random.PRNGKey(0)
+res = task.with_data(ds.device_bank(steps=2, batch=16))
+pag = task.with_data(ds.paged_bank(steps=2, batch=16))
+got_r, _ = FedSim(res, "scaffold", hp, N, mesh=mesh).run_scanned(
+    rng, R, sample_clients=6, eval_every=2)
+got_p, _ = FedSim(pag, "scaffold", hp, N, mesh=mesh).run_scanned(
+    rng, R, sample_clients=6, eval_every=2)
+close(got_r, got_p, "sharded-paged")
+print("SHARDED-PAGED-EQUIV-OK")
+
+# staged chunks land SHARD-LOCAL: every staged leaf splits over the mesh
+sim = FedSim(pag, "scaffold", hp, N, mesh=mesh)
+staged = sim.task.data.gather(np.arange(8), sharding=staging_sharding(mesh))
+assert len(staged.x.sharding.device_set) == 8
+assert all(s.data.shape[0] == 1 for s in staged.x.addressable_shards)
+print("SHARDED-PAGED-PLACEMENT-OK")
+print("OK")
+'''
+
+
+def test_sharded_paged_contracts():
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run([sys.executable, "-c", SHARDED_PAGED_SCRIPT],
+                         cwd=os.path.join(os.path.dirname(__file__), ".."),
+                         capture_output=True, text=True, env=env,
+                         timeout=600)
+    assert res.returncode == 0, res.stderr[-3000:]
+    for marker in ("SHARDED-PAGED-EQUIV-OK", "SHARDED-PAGED-PLACEMENT-OK"):
+        assert marker in res.stdout, (marker, res.stdout)
