@@ -45,7 +45,7 @@ def _bank_trees(n_layers, nb, bs, dout, vocab=256, seed=0):
     return params, grads, grams
 
 
-def bank_section(n_layers=8, nb=2, bs=64, dout=96):
+def bank_section(n_layers=8, nb=2, bs=128, dout=96):
     """packed vs per-leaf: same math, one batched launch per block size vs
     one per layer.  derived = layer count covered per launch."""
     params, grads, grams = _bank_trees(n_layers, nb, bs, dout)

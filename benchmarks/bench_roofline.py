@@ -1,14 +1,109 @@
 """Roofline summary (spec §g): reads the dry-run artifacts and emits one
 row per (arch × shape × mesh) with the three roofline terms, the dominant
-bottleneck and the useful-FLOPs ratio.  derived carries the terms."""
+bottleneck and the useful-FLOPs ratio.  derived carries the terms.
+
+``kernel_section`` benches the three gram-bank hot kernels (Schur/Cholesky
+solve, adaptive Newton–Schulz invert-and-apply, fused Eq. 12 mixing)
+against their unfused/LAPACK references at the canonical gate shapes, and
+anchors each measurement to its analytic ``KernelRoofline`` bound —
+derived carries ``bound_us``/``frac`` (achieved fraction of roofline) and
+the dominant term.  The ratio rows feed the ``pallas_*_speedup`` gates in
+``benchmarks.run --smoke``."""
 from __future__ import annotations
 
 import json
 import os
+import time
 
 from benchmarks.common import emit
 
 RESULTS = os.path.join(os.path.dirname(__file__), "results", "dryrun.jsonl")
+
+
+def _min_us(fn, iters: int = 7, warmup: int = 2) -> float:
+    """Min wall-clock µs over ``iters`` post-warmup passes.  The gate
+    ratios compare two kernels' MINIMA: min filters the CI host's load
+    spikes far better than median at these sub-ms launch times."""
+    import jax
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, (time.perf_counter() - t0) * 1e6)
+    return best
+
+
+def _spd_bank(key, nb, bs):
+    import jax
+    import jax.numpy as jnp
+    m = jax.random.normal(key, (nb, bs, bs))
+    return jnp.einsum("...ij,...kj->...ik", m, m) / bs + 0.05 * jnp.eye(bs)
+
+
+def kernel_section():
+    """Gram-bank kernel roofline rows (three ref/fused pairs).
+
+    On CPU the "fused" side is each op's default dispatch — the Schur jnp
+    restructuring for cholesky, the interpret-mode Pallas kernel for the
+    adaptive NS and fused-mix paths — i.e. exactly what the library runs
+    in this container; on TPU the same calls hit the compiled kernels."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.distributed.roofline import (chol_solve_roofline,
+                                            mix_roofline, ns_solve_roofline)
+    from repro.kernels.cholesky import ops as chol_ops
+    from repro.kernels.cholesky.ref import chol_solve_ref
+    from repro.kernels.mix import ops as mix_ops
+    from repro.kernels.mix.ref import mix_ref
+    from repro.kernels.nschulz import ops as ns_ops
+    from repro.kernels.nschulz.ref import ns_solve_ref
+
+    def row(name, us, rl):
+        bound = rl.bound_us()
+        emit(f"kernels/{name}", us,
+             f"bound_us={bound:.1f};frac={bound / max(us, 1e-9):.3f};"
+             f"dom={rl.dominant()}")
+
+    damping = 0.1
+    # --- Schur/Cholesky batched solve: [16, 128, 128] vs k=96 ----------
+    nb, bs, k = 16, 128, 96
+    a = _spd_bank(jax.random.PRNGKey(0), nb, bs)
+    b = jax.random.normal(jax.random.PRNGKey(1), (nb, bs, k))
+    ref = jax.jit(lambda a, b: chol_solve_ref(a, b, damping=damping))
+    fused = jax.jit(lambda a, b: chol_ops.chol_solve(a, b, damping=damping))
+    rl = chol_solve_roofline(nb, bs, k)
+    row("chol_solve/ref", _min_us(lambda: ref(a, b)), rl)
+    row("chol_solve/fused", _min_us(lambda: fused(a, b)), rl)
+
+    # --- adaptive NS invert-and-apply: [16, 64, 96], budget 25 ---------
+    nb, bs, k = 16, 64, 96
+    a = _spd_bank(jax.random.PRNGKey(2), nb, bs)
+    b = jax.random.normal(jax.random.PRNGKey(3), (nb, bs, k))
+    ref = jax.jit(lambda a, b: ns_solve_ref(a, b, iters=20, damping=damping))
+    fused = jax.jit(lambda a, b: ns_ops.ns_solve(a, b, iters=25,
+                                                 damping=damping,
+                                                 use_pallas=True))
+    rl = ns_solve_roofline(nb, bs, k, 20)
+    row("ns_solve/ref20", _min_us(lambda: ref(a, b)), rl)
+    row("ns_solve/fused", _min_us(lambda: fused(a, b)), rl)
+
+    # --- fused Eq. 12 mixing: S=8 clients, R=16 rows, bs=64, k=96 ------
+    s, r, bs, k = 8, 16, 64, 96
+    ka, kt, kw = jax.random.split(jax.random.PRNGKey(4), 3)
+    m = jax.random.normal(ka, (s, r, bs, bs))
+    a = jnp.einsum("srij,srkj->srik", m, m) / bs + 0.05 * jnp.eye(bs)
+    t = jax.random.normal(kt, (s, r, bs, k))
+    w = jax.nn.softmax(jax.random.normal(kw, (s,)))
+    unfused = jax.jit(lambda a, t, w: mix_ref(a, t, w, damping=damping,
+                                              method="ns", iters=20))
+    fused = jax.jit(lambda a, t, w: mix_ops.mix_precond(
+        a, t, w, damping=damping, iters=25, solver="ns"))
+    rl = mix_roofline(s, r, bs, k, 20)
+    row("mix/unfused", _min_us(lambda: unfused(a, t, w)), rl)
+    row("mix/fused", _min_us(lambda: fused(a, t, w)), rl)
 
 
 def load_results(path=RESULTS):
@@ -31,6 +126,7 @@ def load_results(path=RESULTS):
 
 
 def main():
+    kernel_section()
     rows = load_results()
     if not rows:
         emit("roofline/NO_DRYRUN_RESULTS", 0.0, "run repro.launch.dryrun")

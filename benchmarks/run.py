@@ -10,13 +10,16 @@ benchmarks/common.py and EXPERIMENTS.md for the paper mapping:
   bench_profiling     → Table 16    bench_roofline     → §Roofline (dry-run)
 
 ``--smoke`` runs the CI perf-gate subset — packed-vs-per-leaf bank
-numbers, the K-sweep factor-once amortization, the sharded-vs-vmap
-engine comparison on a forced 8-device host mesh, the scanned-vs-
-per-round dispatch ratio, the paged-vs-resident ClientStore overhead
-and exact staged-bytes ratios, and the comm-bytes wire-transform on/off
-ratios — and serializes every emitted row plus machine-independent gate
-RATIOS to ``BENCH_pr6.json``.  ``benchmarks.bench_gate`` compares those
-ratios against the checked-in ``benchmarks/baseline_pr6.json`` and
+numbers, the roofline-anchored gram-bank kernel pairs (Schur/Cholesky
+solve, adaptive Newton–Schulz, fused Eq. 12 mixing — the three
+``pallas_*_speedup`` gates), the K-sweep factor-once amortization, the
+sharded-vs-vmap engine comparison on a forced 8-device host mesh, the
+scanned-vs-per-round dispatch ratio, the paged-vs-resident ClientStore
+overhead and exact staged-bytes ratios, and the comm-bytes
+wire-transform on/off ratios — and serializes every emitted row plus
+machine-independent gate RATIOS to ``BENCH_pr7.json``.
+``benchmarks.bench_gate`` compares those
+ratios against the checked-in ``benchmarks/baseline_pr7.json`` and
 fails tier-1 on >25% regressions (scripts/ci.sh wires both up; the
 N ≥ 10⁵ paged scale smoke runs as its OWN ci.sh stage —
 ``python -m benchmarks.bench_paging --scale`` in a fresh process, so
@@ -55,6 +58,17 @@ _GATE_SPECS = {
     "packed_precondition_speedup": (
         "cost_bank/precondition_perleaf", "cost_bank/precondition_packed",
         "lower", "bank"),
+    # gram-bank hot kernels vs their unfused/LAPACK references at the
+    # canonical gate shapes (bench_roofline.kernel_section; min-of-passes
+    # timings, both sides measured in the same repetition)
+    "pallas_cholesky_speedup": (
+        "kernels/chol_solve/ref", "kernels/chol_solve/fused", "lower",
+        "kernels"),
+    "pallas_ns_speedup": (
+        "kernels/ns_solve/ref20", "kernels/ns_solve/fused", "lower",
+        "kernels"),
+    "pallas_mix_speedup": (
+        "kernels/mix/unfused", "kernels/mix/fused", "lower", "kernels"),
     "packed_invert_speedup": (
         "cost_bank/invert_perleaf", "cost_bank/invert_packed", "lower",
         "bank"),
@@ -128,9 +142,10 @@ def _median_gates(samples: list[dict]) -> dict:
             for k, vs in merged.items()}
 
 
-def smoke(out_path: str = "BENCH_pr6.json") -> int:
+def smoke(out_path: str = "BENCH_pr7.json") -> int:
     from benchmarks import (bench_comm, bench_cost, bench_local_epochs,
-                            bench_paging, bench_sampling, bench_scan)
+                            bench_paging, bench_roofline, bench_sampling,
+                            bench_scan)
     from benchmarks.common import RECORDS, dnn_setup
 
     print("name,us_per_call,derived")
@@ -158,6 +173,11 @@ def smoke(out_path: str = "BENCH_pr6.json") -> int:
     for _ in range(3):
         failed += _run([("bank", bench_cost.bank_section)])
         samples.append(_gates(RECORDS, "bank"))
+    # gram-bank kernel rooflines: ref and fused are min-of-passes within
+    # one repetition; the three pallas_*_speedup gates median-merge
+    for _ in range(3):
+        failed += _run([("kernels", bench_roofline.kernel_section)])
+        samples.append(_gates(RECORDS, "kernels"))
     ksetup = dnn_setup(alpha=0.1, n_clients=8, n=1200, dim=16, classes=4)
     for _ in range(2):
         failed += _run([("ksweep", lambda: bench_local_epochs.k_sweep(
@@ -168,7 +188,7 @@ def smoke(out_path: str = "BENCH_pr6.json") -> int:
     # repeating it would blow the ci.sh stage budget); its rows are
     # already steady-state means over 8 post-compile reps, and the
     # checked-in baselines carry the sharded family's wider noise
-    # envelope (see benchmarks/baseline_pr5.json meta)
+    # envelope (see benchmarks/baseline_pr7.json meta)
     failed += _run([("sharded", lambda: bench_sampling.sharded(reps=8))])
     samples.append(_gates(RECORDS, "sharded"))
 

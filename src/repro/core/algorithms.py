@@ -109,7 +109,7 @@ class HParams:
     beta2: float = 0.99
     tau: float = 1e-3               # fedadam ε
     sketch: int = 0                 # fedns sketch size (0 → d)
-    inverse_method: str = "cholesky"  # cholesky | ns | pallas_ns
+    inverse_method: str = "cholesky"  # cholesky | ns | pallas_ns | pallas_chol
     ns_iters: int = 20
     foof_timing: str = "end"        # grams at round "end" (paper trick) | "start"
     sophia_gamma: float = 0.05

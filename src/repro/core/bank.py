@@ -357,14 +357,22 @@ def _scatter_jobs(sol, ents, outs, unpack):
         off += rows
 
 
-def _packed_apply(params, grads, layout: BankLayout, *, group_solve,
-                  diag_solve, other_solve):
+def _packed_apply(params, grads, layout: BankLayout, *, group_solve=None,
+                  diag_solve, other_solve, entry_solve=None):
     """Shared engine for (preconditioner ∘ grads): pack rhs per group, run
     ONE ``group_solve`` per block-size group, rebuild the grad tree.
 
     group_solve(g, use_idx, rhs[B, bs, kmax]) -> [B, bs, kmax] fp32
     diag_solve(entry, g_leaf) -> leaf | None (None → passthrough)
     other_solve(other_idx, p_leaf, g_leaf) -> leaf
+
+    ``entry_solve(g, start, rows, rhs[rows, bs, k]) -> [rows, bs, k]``
+    replaces group_solve with a per-gram-entry solve that skips the
+    assemble/scatter stage entirely — no pad-to-kmax, no cross-entry
+    concat, no row gather/slice.  Correct only when the solve is
+    column-independent AND row-sliceable (a cached-inverse matmul is;
+    the fused Pallas kernels are not — they must see each block exactly
+    once per launch, which the assembled ``use`` guarantees).
     """
     pleaves = jax.tree_util.tree_leaves_with_path(params)
     gleaves, gdef = jax.tree_util.tree_flatten(grads)
@@ -393,6 +401,13 @@ def _packed_apply(params, grads, layout: BankLayout, *, group_solve,
     for gi, job in enumerate(jobs):
         if not job:
             continue
+        if entry_solve is not None:
+            for start, members in job.items():
+                rows = members[0][1].entry.rows
+                for i, plan, rhs, dt in members:
+                    outs[i] = _unpack_rhs(entry_solve(gi, start, rows, rhs),
+                                          plan, 0, dt)
+            continue
         rhs, use, ents = _assemble_jobs(job, 0)
         sol = group_solve(gi, use, rhs)
         _scatter_jobs(sol, ents, outs,
@@ -404,11 +419,14 @@ def _packed_apply(params, grads, layout: BankLayout, *, group_solve,
 class PackedPreconditioner:
     """Factor-once / apply-many FOOF preconditioner over the packed bank.
 
-    ``facs`` holds per-group Cholesky factors (``method='cholesky'``) or
-    explicit inverses (``ns`` / ``pallas_ns``); ``diag_inv`` is the
-    reciprocal diagonal lane.  ``apply`` performs pure batched
-    ``cho_solve``/matmul work — NO re-factorization — so K local steps
-    amortize one factorization (paper Table 2 cost model).
+    ``facs`` holds per-group EXPLICIT inverses for every method —
+    ``cholesky`` builds them through the Schur-recursive blocked kernel op
+    (``repro.kernels.cholesky``), ``ns``/``pallas_ns`` through
+    Newton–Schulz; ``diag_inv`` is the reciprocal diagonal lane.
+    ``apply`` is then a pure per-entry matmul — NO re-factorization, no
+    triangular solves (XLA:CPU runs batched trsm ~4.7x slower than the
+    equivalent matmul), and no per-call rhs re-assembly — so K local
+    steps amortize one factorization (paper Table 2 cost model).
     """
 
     def __init__(self, facs, diag_inv, others, layout, method, ns_iters,
@@ -439,7 +457,8 @@ def build_preconditioner(grams: PyTree, *, damping: float,
     calls (the K-local-steps amortization)."""
     bank = pack(grams)
     if method == "cholesky":
-        facs = tuple(cho_factor(inv.damp(m, damping), lower=True)[0]
+        from repro.kernels.cholesky import ops as chol_ops
+        facs = tuple(chol_ops.chol_inverse(m, damping=damping)
                      for m in bank.mats)
     else:
         facs = tuple(inv.inverse(m, damping, method=method,
@@ -460,22 +479,22 @@ def _diag_apply(diag_inv, entry: DiagEntry, g):
 
 def apply_preconditioner(pp: PackedPreconditioner, params: PyTree,
                          grads: PyTree) -> PyTree:
-    """Preconditioned grads from cached factors: one batched cho_solve or
-    matmul per block-size group, zero factorizations."""
+    """Preconditioned grads from cached inverses: one matmul per gram
+    entry against its row-slice of the group factor bank, zero
+    factorizations and zero rhs re-assembly (every method's ``facs`` are
+    explicit inverses, so applying is column-independent and
+    row-sliceable — the ``entry_solve`` fast path)."""
     from repro.core import foof as F
 
-    if pp.method == "cholesky":
-        def group_solve(g, use, rhs):
-            return cho_solve((_maybe_take(pp.facs[g], use, 0), True), rhs)
-    else:
-        def group_solve(g, use, rhs):
-            return _maybe_take(pp.facs[g], use, 0) @ rhs
+    def entry_solve(g, start, rows, rhs):
+        fac = jax.lax.slice_in_dim(pp.facs[g], start, start + rows, axis=0)
+        return fac @ rhs
 
     def other_solve(oi, p, g):
         return F._precondition_leaf(p, g, pp.others[oi], pp.damping,
                                     pp.method, pp.ns_iters)
 
-    return _packed_apply(params, grads, pp.layout, group_solve=group_solve,
+    return _packed_apply(params, grads, pp.layout, entry_solve=entry_solve,
                          diag_solve=lambda e, g: _diag_apply(pp.diag_inv, e, g),
                          other_solve=other_solve)
 
@@ -485,25 +504,33 @@ def precondition_tree(params: PyTree, grads: PyTree, grams: PyTree, *,
                       ns_iters: int = 20) -> PyTree:
     """One-shot packed FOOF preconditioning (Eq. 11 direction).
 
-    cholesky/ns: factor the bank once, apply.  pallas_ns: the fused
-    invert-and-apply kernel computes X ≈ (A+δI)⁻¹ and X@G inside one
-    kernel per group — the inverse never round-trips through HBM.
+    cholesky/ns: invert the bank once, apply.  pallas_ns / pallas_chol:
+    the fused invert-and-apply kernels compute X = (A+δI)⁻¹ and X@G
+    inside one kernel per group — the inverse never round-trips HBM.
     """
-    if method != "pallas_ns":
+    if not method.startswith("pallas"):
         pp = build_preconditioner(grams, damping=damping, method=method,
                                   ns_iters=ns_iters)
         return apply_preconditioner(pp, params, grads)
 
     from repro.core import foof as F
-    from repro.kernels.nschulz import ops as ns_ops
     bank = pack(grams)
     diag_inv = None if bank.diag is None else 1.0 / (bank.diag + damping)
 
-    def group_solve(g, use, rhs):
-        # ``use`` is duplicate-free (shared grams fold into one job's
-        # columns), so the fused kernel iterates each block exactly once
-        return ns_ops.ns_solve(_maybe_take(bank.mats[g], use, 0), rhs,
-                               iters=ns_iters, damping=damping)
+    if method == "pallas_chol":
+        from repro.kernels.cholesky import ops as chol_ops
+
+        def group_solve(g, use, rhs):
+            return chol_ops.chol_solve(_maybe_take(bank.mats[g], use, 0),
+                                       rhs, damping=damping)
+    else:
+        from repro.kernels.nschulz import ops as ns_ops
+
+        def group_solve(g, use, rhs):
+            # ``use`` is duplicate-free (shared grams fold into one job's
+            # columns), so the fused kernel iterates each block exactly once
+            return ns_ops.ns_solve(_maybe_take(bank.mats[g], use, 0), rhs,
+                                   iters=ns_iters, damping=damping)
 
     def other_solve(oi, p, g):
         return F._precondition_leaf(p, g, bank.others[oi], damping, method,
@@ -523,8 +550,14 @@ def invert_grams(grams: PyTree, *, damping: float, method: str = "cholesky",
     inverse tree consumed by ``foof.apply_inverses``."""
     from repro.core import foof as F
     bank = pack(grams)
-    inv_mats = tuple(inv.inverse(m, damping, method=method, ns_iters=ns_iters)
-                     for m in bank.mats)
+    if method == "cholesky":
+        from repro.kernels.cholesky import ops as chol_ops
+        inv_mats = tuple(chol_ops.chol_inverse(m, damping=damping)
+                         for m in bank.mats)
+    else:
+        inv_mats = tuple(inv.inverse(m, damping, method=method,
+                                     ns_iters=ns_iters)
+                         for m in bank.mats)
     inv_diag = None if bank.diag is None else 1.0 / (bank.diag + damping)
     inv_others = tuple(F._invert_leaf(a, damping, method, ns_iters)
                        for a in bank.others)
@@ -534,7 +567,7 @@ def invert_grams(grams: PyTree, *, damping: float, method: str = "cholesky",
 # ----------------------------------------------------------------- mixing --
 
 def _mix_engine(params, bank: GramBank, *, damping, method, ns_iters,
-                reduce_mats, reduce_leaf, other_solve):
+                reduce_mats, reduce_leaf, other_solve, group_mix=None):
     """FedPM preconditioned mixing (Eq. 12) over the packed bank.
 
     ``reduce_mats`` is the participant mean of an fp32 packed array (it
@@ -542,6 +575,12 @@ def _mix_engine(params, bank: GramBank, *, damping, method, ns_iters,
     block-size group this runs: one gather, one (A_i+δI)@θ_i batched
     matmul, TWO reductions (numerator + Ā), one factorization of Ā and one
     batched solve — regardless of how many layers share the group.
+
+    ``group_mix(g, use_idx, rhs[S, B, bs, kmax]) -> [B, bs, kmax]``
+    replaces that whole chain with a single fused call (the Pallas mix
+    kernel: reduce → invert → apply never leaves VMEM).  Only valid when
+    the stacked rhs is locally complete — i.e. no cross-shard psum inside
+    the reduction — so sharded callers must leave it None.
     """
     layout = bank.layout
     stack = layout.stack
@@ -583,6 +622,11 @@ def _mix_engine(params, bank: GramBank, *, damping, method, ns_iters,
             continue
         bs = layout.block_sizes[gi]
         rhs, use, ents = _assemble_jobs(job, stack)
+        if group_mix is not None:
+            _scatter_jobs(group_mix(gi, use, rhs), ents, outs,
+                          lambda piece, plan, dt:
+                          _unpack_rhs(piece, plan, 0, dt))
+            continue
         a_use = _maybe_take(bank.mats[gi], use, stack)
         eye = damping * jnp.eye(bs, dtype=jnp.float32)
         num = reduce_mats((a_use + eye) @ rhs)        # Σ w_i (A_i+δI) θ_i
@@ -591,6 +635,10 @@ def _mix_engine(params, bank: GramBank, *, damping, method, ns_iters,
             from repro.kernels.nschulz import ops as ns_ops
             sol = ns_ops.ns_solve(_maybe_take(abar, use, 0), num,
                                   iters=ns_iters, damping=damping)
+        elif method == "pallas_chol":
+            from repro.kernels.cholesky import ops as chol_ops
+            sol = chol_ops.chol_solve(_maybe_take(abar, use, 0), num,
+                                      damping=damping)
         else:
             abar_d = inv.damp(abar, damping)
             if method == "ns":
@@ -659,13 +707,27 @@ def mix_preconditioned(params_stack: PyTree, grams_stack: PyTree, *,
 
     bank = pack(grams_stack, stack=1)
 
+    group_mix = None
+    if not axes and method.startswith("pallas"):
+        # fused server mixing: one kernel launch per block-size group does
+        # reduce → invert → apply over the stacked client bank (only valid
+        # unsharded — the kernel reduces the FULL stack axis locally)
+        from repro.kernels.mix import ops as mix_ops
+        solver = "chol" if method == "pallas_chol" else "ns"
+
+        def group_mix(gi, use, rhs):
+            a_use = _maybe_take(bank.mats[gi], use, 1)
+            return mix_ops.mix_precond(a_use, rhs, w, damping=damping,
+                                       iters=ns_iters, solver=solver)
+
     def other_solve(oi, p):
         return F._mix_leaf(p, bank.others[oi], damping, method, ns_iters,
                            reduce_leaf)
 
     return _mix_engine(params_stack, bank, damping=damping, method=method,
                        ns_iters=ns_iters, reduce_mats=reduce_mats,
-                       reduce_leaf=reduce_leaf, other_solve=other_solve)
+                       reduce_leaf=reduce_leaf, other_solve=other_solve,
+                       group_mix=group_mix)
 
 
 def mix_preconditioned_psum(params: PyTree, grams: PyTree, *, axes,

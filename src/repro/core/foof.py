@@ -83,8 +83,10 @@ def precondition_tree(params: PyTree, grads: PyTree, grams: PyTree, *,
     (→ plain first-order step, DESIGN.md §Arch-applicability).
 
     ``packed=True`` (default) runs the gram-bank engine: one batched
-    factor+solve per block size (and for ``pallas_ns`` the fused
-    invert-and-apply kernel); ``packed=False`` is the per-leaf reference.
+    factor+solve per block size (and for ``pallas_ns``/``pallas_chol``
+    the fused invert-and-apply kernels — adaptive Newton–Schulz or
+    Schur-recursive blocked Cholesky); ``packed=False`` is the per-leaf
+    reference.
     """
     if packed:
         return B.precondition_tree(params, grads, grams, damping=damping,
@@ -138,7 +140,9 @@ def mix_preconditioned(params_stack: PyTree, grams_stack: PyTree, *,
 
     ``packed=True`` (default) mixes through the gram bank: per block-size
     group ONE batched (A_i+δI)θ_i matmul, one Ā factorization and one
-    solve; ``packed=False`` is the per-leaf reference.
+    solve — and for ``pallas_ns``/``pallas_chol`` on an unsharded stack,
+    ONE fused kernel launch doing reduce → invert → apply without leaving
+    VMEM; ``packed=False`` is the per-leaf reference.
 
     ``axes``: mesh axes the participant stack is sharded over — inside
     ``repro.fl.sharded``'s manual region the leading axis is each shard's

@@ -10,6 +10,12 @@ Two paths (DESIGN.md §4.1):
     the same iteration with explicit VMEM tiling; this module is its jnp
     reference and the dispatch point (set ``use_pallas=True``).
 
+Kernel-backed methods (``repro.kernels``): ``pallas_ns`` — the fused
+adaptive Newton–Schulz kernel (in-VMEM convergence test); ``pallas_chol``
+— the Schur-recursive blocked-Cholesky kernel (exact, matmul-rich; on CPU
+it dispatches to the same Schur restructuring in jnp with LAPACK leaf
+tiles).
+
 All functions are batched over arbitrary leading dims.
 """
 from __future__ import annotations
@@ -59,6 +65,9 @@ def inverse(a: jax.Array, damping: float = 0.0, *, method: str = "cholesky",
     if method == "pallas_ns":
         from repro.kernels.nschulz import ops as _ops
         return _ops.ns_inverse(ad, iters=ns_iters)
+    if method == "pallas_chol":
+        from repro.kernels.cholesky import ops as _ops
+        return _ops.chol_inverse(ad)
     n = a.shape[-1]
     return _cho_solve(ad, jnp.broadcast_to(jnp.eye(n, dtype=jnp.float32),
                                            ad.shape))
@@ -80,6 +89,12 @@ def solve(a: jax.Array, b: jax.Array, damping: float = 0.0, *,
         # back inside ns_solve to one inverse kernel + broadcast matmul.
         from repro.kernels.nschulz import ops as _ops
         return _ops.ns_solve(ad, bf, iters=ns_iters).astype(b.dtype)
+    if method == "pallas_chol":
+        # fused factor-and-apply: the Schur inverse is built in VMEM and
+        # only X@B leaves the kernel; mismatched leading dims fall back
+        # inside chol_solve to one inverse kernel + broadcast matmul
+        from repro.kernels.cholesky import ops as _ops
+        return _ops.chol_solve(ad, bf).astype(b.dtype)
     # broadcast batch dims (the factorization requires matching leading dims)
     lead = jnp.broadcast_shapes(ad.shape[:-2], bf.shape[:-2])
     ad = jnp.broadcast_to(ad, (*lead, *ad.shape[-2:]))

@@ -53,6 +53,71 @@ class HardwareSpec:
 # TPU v5e (per system prompt): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link.
 V5E = HardwareSpec(name="tpu_v5e", peak_flops=197e12, hbm_bw=819e9, ici_bw=50e9)
 
+# Envelope for the CI container's CPU host where the interpret/jnp kernel
+# benches run: ~150 GFLOP/s f32 matmul throughput (calibrated against the
+# fixed-iteration NS reference, which is pure batched matmul and must not
+# beat the bound) and ~20 GB/s effective memory bandwidth.  Only the
+# RATIO achieved/bound is reported (bench_roofline.kernel_section) — the
+# envelope anchors it but is not itself a gate.
+CPU_HOST = HardwareSpec(name="cpu_host", peak_flops=1.5e11, hbm_bw=2e10,
+                        ici_bw=1e10)
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelRoofline:
+    """Analytic per-launch roofline for one gram-bank kernel.
+
+    ``flops``/``bytes`` are the algorithmic minimum work and the
+    unavoidable HBM traffic (inputs read once + outputs written once —
+    the fused kernels' whole point is that intermediates stay in VMEM, so
+    the traffic term contains NO intermediates).  ``bound_us`` is the
+    max of the compute and bandwidth terms: no implementation beats it,
+    and achieved/bound says how much headroom a measured launch leaves.
+    """
+    name: str
+    flops: float
+    bytes: float
+
+    def bound_us(self, hw: HardwareSpec = CPU_HOST) -> float:
+        return max(self.flops / hw.peak_flops, self.bytes / hw.hbm_bw) * 1e6
+
+    def dominant(self, hw: HardwareSpec = CPU_HOST) -> str:
+        return ("compute" if self.flops / hw.peak_flops
+                >= self.bytes / hw.hbm_bw else "memory")
+
+
+def chol_solve_roofline(nb: int, bs: int, k: int) -> KernelRoofline:
+    """Batched Schur/Cholesky solve of [nb, bs, bs] against [nb, bs, k]:
+    the inverse costs ~2bs³ per block (Schur recursion is matmul-
+    dominated; classical factor+two-trisolve is the same order), the
+    apply 2bs²k.  Traffic: read A and B, write X@B."""
+    flops = nb * (2.0 * bs ** 3 + 2.0 * bs ** 2 * k)
+    byts = 4.0 * nb * (bs * bs + 2.0 * bs * k)
+    return KernelRoofline("chol_solve", flops, byts)
+
+
+def ns_solve_roofline(nb: int, bs: int, k: int, iters: int) -> KernelRoofline:
+    """Fused Newton–Schulz invert-and-apply: two bs³ matmuls per
+    iteration (4bs³ flops) plus the final 2bs²k apply.  ``iters`` is the
+    budget ceiling — the adaptive kernel's convergence test exits early,
+    so achieved time can beat a bound computed at the ceiling."""
+    flops = nb * (4.0 * bs ** 3 * iters + 2.0 * bs ** 2 * k)
+    byts = 4.0 * nb * (bs * bs + 2.0 * bs * k)
+    return KernelRoofline("ns_solve", flops, byts)
+
+
+def mix_roofline(s: int, r: int, bs: int, k: int, iters: int
+                 ) -> KernelRoofline:
+    """Fused Eq. 12 mixing over a stacked [S, R, bs, ·] client bank:
+    per (client, row) one (A+δI)Θ matmul (2bs²k) and the two weighted
+    reductions (2bs² + 2bs·k), then per row one NS inverse (4bs³·iters)
+    and the final apply (2bs²k).  Traffic: the client bank streams in
+    once, only the mixed [R, bs, k] block leaves."""
+    flops = (s * r * (2.0 * bs ** 2 * k + 2.0 * bs * bs + 2.0 * bs * k)
+             + r * (4.0 * bs ** 3 * iters + 2.0 * bs ** 2 * k))
+    byts = 4.0 * (s * r * (bs * bs + bs * k) + r * bs * k + s)
+    return KernelRoofline("mix", flops, byts)
+
 
 def _shape_bytes(type_str: str) -> int:
     total = 0

@@ -1,0 +1,153 @@
+"""Pallas TPU kernel: batched blocked SPD factor+solve for the gram bank.
+
+The paper Cholesky-factorizes its FOOF blocks on H100; LAPACK-style
+``cho_factor``/``cho_solve`` serializes into triangular sweeps that leave
+the MXU idle (and on CPU, batched trsm costs ~4.7x an equivalent-shape
+matmul).  This kernel restructures the solve as a *Schur-complement
+recursive inversion*: an SPD block splits 2x2,
+
+    inv([[A11, A21ᵀ], [A21, A22]]):
+        I11 = inv(A11)            W   = A21 @ I11
+        S   = A22 - W @ A21ᵀ      I22 = inv(S)
+        B21 = -I22 @ W            B11 = I11 - Wᵀ @ B21
+
+so all O(bs³) work lands in batched matmuls (MXU-tileable) and only the
+tiny ``tile``-sized diagonal base problems run a serial column-Cholesky.
+The recursion is unrolled at trace time (bs is static) down to
+``tile``-sized leaves; inside the kernel the base case factors L and
+accumulates L⁻¹ jointly in one fori_loop (rank-1 downdates — no
+triangular solve primitive exists in Pallas).
+
+The fused solve kernel consumes the packed RHS bank directly: X = (A+δI)⁻¹
+is built in VMEM and only X@B is written back — like the Newton–Schulz
+kernel, the inverse never round-trips through HBM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _bmm(p, q):
+    """Batched matmul over matching leading dims, fp32 accumulation."""
+    nd = p.ndim
+    dn = (((nd - 1,), (nd - 2,)), (tuple(range(nd - 2)),) * 2)
+    return jax.lax.dot_general(p, q, dn, preferred_element_type=jnp.float32)
+
+
+def _swap(p):
+    return jnp.swapaxes(p, -1, -2)
+
+
+def _tile_inverse(a):
+    """inv(a) for SPD a [..., T, T] — serial column-Cholesky computing L and
+    L⁻¹ jointly (rank-1 downdates only; Pallas-safe, no LAPACK)."""
+    t = a.shape[-1]
+    lead = a.shape[:-2]
+    rows = jax.lax.broadcasted_iota(jnp.int32, (*lead, t, 1), a.ndim - 2)
+    m0 = jnp.broadcast_to(jnp.eye(t, dtype=jnp.float32), a.shape)
+
+    def body(i, carry):
+        a, m, linv = carry
+        col = jax.lax.dynamic_slice_in_dim(a, i, 1, axis=-1)    # [.., T, 1]
+        dii = jax.lax.dynamic_slice_in_dim(col, i, 1, axis=-2)  # [.., 1, 1]
+        d = jax.lax.rsqrt(dii)
+        c = jnp.where(rows >= i, col, 0.0) * d                  # L[:, i]
+        a = a - _bmm(c, _swap(c))
+        ri = jax.lax.dynamic_slice_in_dim(m, i, 1, axis=-2) * d  # L⁻¹[i, :]
+        m = m - _bmm(c, ri)          # zeroes row i, eliminates below
+        linv = linv + _bmm((rows == i).astype(jnp.float32), ri)
+        return a, m, linv
+
+    _, _, linv = jax.lax.fori_loop(
+        0, t, body, (a, m0, jnp.zeros_like(a)))
+    return _bmm(_swap(linv), linv)
+
+
+def spd_inverse(a, *, tile: int = 32, base=None):
+    """inv(a) for SPD a [..., bs, bs] via recursive 2x2 Schur splits.
+
+    Trace-time recursion: only ``tile``-sized diagonal problems reach the
+    serial base case; everything else is batched matmuls.  ``base``
+    overrides the leaf inverse (the CPU dispatch path substitutes LAPACK
+    — same structure, faster leaves — while the kernel uses the
+    Pallas-safe column-Cholesky).  Odd sizes split floor/ceil, so any bs
+    works (200 → 100 → 50 → 25).
+    """
+    base = _tile_inverse if base is None else base
+    bs = a.shape[-1]
+    if bs <= tile:
+        return base(a)
+    h = bs // 2
+    a11 = a[..., :h, :h]
+    a21 = a[..., h:, :h]
+    a22 = a[..., h:, h:]
+    i11 = spd_inverse(a11, tile=tile, base=base)
+    w = _bmm(a21, i11)
+    s = a22 - _bmm(w, _swap(a21))
+    i22 = spd_inverse(s, tile=tile, base=base)
+    b21 = -_bmm(i22, w)
+    b11 = i11 - _bmm(_swap(w), b21)
+    top = jnp.concatenate([b11, _swap(b21)], axis=-1)
+    bot = jnp.concatenate([b21, i22], axis=-1)
+    return jnp.concatenate([top, bot], axis=-2)
+
+
+def _damped(a_ref, damping: float):
+    a = a_ref[...].astype(jnp.float32)
+    if damping:
+        a = a + damping * jnp.eye(a.shape[-1], dtype=jnp.float32)
+    return a
+
+
+def _chol_inverse_kernel(a_ref, o_ref, *, damping: float, tile: int):
+    o_ref[...] = spd_inverse(_damped(a_ref, damping), tile=tile)
+
+
+def _chol_solve_kernel(a_ref, b_ref, o_ref, *, damping: float, tile: int):
+    x = spd_inverse(_damped(a_ref, damping), tile=tile)
+    o_ref[...] = _bmm(x, b_ref[...].astype(jnp.float32))
+
+
+def chol_inverse_blocks(a: jax.Array, *, damping: float = 0.0,
+                        tile: int = 32, g: int = 1,
+                        interpret: bool = False) -> jax.Array:
+    """a: [nb, bs, bs] SPD blocks → (A+δI)⁻¹ [nb, bs, bs] fp32.
+
+    ``g`` blocks per grid step (must divide nb) — the batched base-case
+    factorizations and Schur matmuls then cover g blocks per launch."""
+    nb, bs, _ = a.shape
+    kernel = functools.partial(_chol_inverse_kernel, damping=damping,
+                               tile=tile)
+    return pl.pallas_call(
+        kernel,
+        grid=(nb // g,),
+        in_specs=[pl.BlockSpec((g, bs, bs), lambda n: (n, 0, 0))],
+        out_specs=pl.BlockSpec((g, bs, bs), lambda n: (n, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, bs, bs), jnp.float32),
+        interpret=interpret,
+    )(a)
+
+
+def chol_solve_blocks(a: jax.Array, b: jax.Array, *, damping: float = 0.0,
+                      tile: int = 32, g: int = 1,
+                      interpret: bool = False) -> jax.Array:
+    """Fused factor-and-apply: X = (A+δI)⁻¹ stays in VMEM, only X@B is
+    written (HBM traffic: read A, read B, write X@B).
+
+    a: [nb, bs, bs] SPD blocks; b: [nb, bs, k] → [nb, bs, k] fp32."""
+    nb, bs, _ = a.shape
+    k = b.shape[-1]
+    kernel = functools.partial(_chol_solve_kernel, damping=damping, tile=tile)
+    return pl.pallas_call(
+        kernel,
+        grid=(nb // g,),
+        in_specs=[pl.BlockSpec((g, bs, bs), lambda n: (n, 0, 0)),
+                  pl.BlockSpec((g, bs, k), lambda n: (n, 0, 0))],
+        out_specs=pl.BlockSpec((g, bs, k), lambda n: (n, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, bs, k), jnp.float32),
+        interpret=interpret,
+    )(a, b)

@@ -1,0 +1,72 @@
+"""Pallas TPU kernel: fused FedPM preconditioned mixing (Eq. 12).
+
+Server-side mixing consumes the stacked client message bank directly:
+per block-size group the unfused path runs four launches —
+
+    num  = Σ_s w_s (A_s+δI) Θ_s      (batched matmul, then reduce)
+    Ā    = Σ_s w_s A_s               (reduce)
+    X    = (Ā+δI)⁻¹                  (inverse)
+    out  = X @ num                   (matmul)
+
+— with num/Ā/X all round-tripping HBM between launches.  This kernel does
+the whole chain in ONE launch per group: the [S, g, bs, ·] client slabs
+stream into VMEM once, the weighted reductions, the inverse (adaptive
+Newton–Schulz or Schur-recursive Cholesky, both in-VMEM) and the final
+apply happen in registers, and only the mixed [g, bs, k] block leaves.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.cholesky.cholesky import spd_inverse
+from repro.kernels.nschulz.nschulz import DEFAULT_TOL, _bmm, _ns_iterate
+
+
+def _mix_kernel(w_ref, a_ref, t_ref, o_ref, *, damping: float, iters: int,
+                tol: float, solver: str, tile: int):
+    # blocks: w [S], a [S, g, bs, bs], t [S, g, bs, k]
+    w = w_ref[...].astype(jnp.float32)
+    a = a_ref[...].astype(jnp.float32)
+    t = t_ref[...].astype(jnp.float32)
+    bs = a.shape[-1]
+    eye = damping * jnp.eye(bs, dtype=jnp.float32)
+    # Σ_s w_s (A_s+δI) Θ_s : per-client matmul batched over (S, g), then
+    # one weighted contraction over S
+    at = jax.lax.dot_general(a + eye, t, (((3,), (2,)), ((0, 1), (0, 1))),
+                             preferred_element_type=jnp.float32)
+    num = jnp.tensordot(w, at, axes=1)              # [g, bs, k]
+    abar = jnp.tensordot(w, a, axes=1)              # [g, bs, bs]
+    if solver == "chol":
+        x = spd_inverse(abar + eye, tile=tile)
+    else:
+        x = _ns_iterate(abar, iters, damping, tol)
+    o_ref[...] = _bmm(x, num)
+
+
+def mix_blocks(a_stack: jax.Array, t_stack: jax.Array, w: jax.Array, *,
+               damping: float, iters: int = 25, tol: float = DEFAULT_TOL,
+               solver: str = "ns", tile: int = 32, g: int = 1,
+               interpret: bool = False) -> jax.Array:
+    """Fused weighted-mix-then-precondition over a stacked client bank.
+
+    a_stack: [S, R, bs, bs] client gram banks; t_stack: [S, R, bs, k]
+    packed client params; w: [S] normalized weights → mixed [R, bs, k]
+    fp32.  ``g`` rows per grid step (must divide R)."""
+    s, r, bs, _ = a_stack.shape
+    k = t_stack.shape[-1]
+    kernel = functools.partial(_mix_kernel, damping=damping, iters=iters,
+                               tol=tol, solver=solver, tile=tile)
+    return pl.pallas_call(
+        kernel,
+        grid=(r // g,),
+        in_specs=[pl.BlockSpec((s,), lambda n: (0,)),
+                  pl.BlockSpec((s, g, bs, bs), lambda n: (0, n, 0, 0)),
+                  pl.BlockSpec((s, g, bs, k), lambda n: (0, n, 0, 0))],
+        out_specs=pl.BlockSpec((g, bs, k), lambda n: (n, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, bs, k), jnp.float32),
+        interpret=interpret,
+    )(w, a_stack, t_stack)

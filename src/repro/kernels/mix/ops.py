@@ -1,0 +1,78 @@
+"""jit'd public wrapper for the fused weighted-mix-then-precondition
+kernel (server-side Eq. 12 over the packed client-message bank)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.mix.mix import mix_blocks
+from repro.kernels.mix.ref import mix_ref
+from repro.kernels.nschulz.nschulz import DEFAULT_TOL
+
+_MXU_LANE = 128
+_TILE = 32
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _interpret_ok(s: int, r: int, bs: int, k: int, solver: str) -> bool:
+    # interpret mode is Python-slow; the chol solver additionally runs the
+    # serial base-case fori per Schur leaf, so it gets a tighter cap
+    work = s * r * bs * (bs + k)
+    return work <= (1 << 22 if solver == "ns" else 1 << 19) and bs <= 256
+
+
+def _pick_g(r: int, bs: int, s: int, kp: int) -> int:
+    """Rows per grid step: the whole group off-TPU (one big batched grid
+    step — small g drowns in interpret per-step overhead), VMEM-budgeted
+    divisor of r on TPU (the [S, g, bs, ·] slabs must fit alongside the
+    accumulators)."""
+    if not _on_tpu():
+        return r
+    per_row = 4 * (s + 2) * (bs * bs + bs * max(kp, 1))
+    budget = max(1, (12 * 2 ** 20) // per_row)
+    target = max(1, min(_MXU_LANE // bs, budget))
+    g = 1
+    for d in range(2, min(r, target) + 1):
+        if r % d == 0:
+            g = d
+    return g
+
+
+@partial(jax.jit, static_argnames=("damping", "iters", "tol", "solver",
+                                   "use_pallas"))
+def mix_precond(a_stack: jax.Array, t_stack: jax.Array, w: jax.Array, *,
+                damping: float, iters: int = 25, tol: float = DEFAULT_TOL,
+                solver: str = "ns",
+                use_pallas: bool | None = None) -> jax.Array:
+    """Fused FedPM preconditioned mixing over a stacked client bank:
+    (Σw(A+δI)Θ, Σw A, inverse, apply) in one launch per block-size group.
+
+    a_stack: [S, R, bs, bs]; t_stack: [S, R, bs, k]; w: [S] (normalized)
+    → [R, bs, k] fp32.  ``solver``: "ns" (adaptive Newton–Schulz) or
+    "chol" (Schur-recursive blocked Cholesky).  Off-TPU the kernel runs
+    in interpret mode within work caps; past them — and for the serial
+    chol base case, whose interpret cost is prohibitive — the unfused jnp
+    reference takes over (same math, staged through memory)."""
+    use_pallas = _on_tpu() if use_pallas is None else use_pallas
+    s, r, bs, _ = a_stack.shape
+    k = t_stack.shape[-1]
+    kp = -(-k // _MXU_LANE) * _MXU_LANE if _on_tpu() else k
+    ref_method = "cholesky" if solver == "chol" else "ns"
+    if not use_pallas and not _interpret_ok(s, r, bs, kp, solver):
+        return mix_ref(a_stack, t_stack, w, damping=damping,
+                       method=ref_method, iters=iters)
+    vmem = 4 * ((s + 2) * (bs * bs + bs * kp))
+    if bs > 1024 or vmem > 12 * 2 ** 20:
+        return mix_ref(a_stack, t_stack, w, damping=damping,
+                       method=ref_method, iters=iters)
+    tp = t_stack if kp == k else jnp.concatenate(
+        [t_stack, jnp.zeros((s, r, bs, kp - k), t_stack.dtype)], axis=-1)
+    out = mix_blocks(a_stack, tp, w, damping=damping, iters=iters, tol=tol,
+                     solver=solver, tile=_TILE, g=_pick_g(r, bs, s, kp),
+                     interpret=not _on_tpu())
+    return out[..., :k]

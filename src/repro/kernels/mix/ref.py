@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the fused mix kernel: the unfused reduce → invert →
+apply chain (same math as ``repro.core.bank._mix_engine``'s per-group
+job, with num/Ā/X round-tripping memory between stages)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.inverse import solve
+
+
+def mix_ref(a_stack, t_stack, w, *, damping: float, method: str = "cholesky",
+            iters: int = 20):
+    """a_stack [S, R, bs, bs], t_stack [S, R, bs, k], w [S] → [R, bs, k]."""
+    bs = a_stack.shape[-1]
+    af = a_stack.astype(jnp.float32)
+    tf = t_stack.astype(jnp.float32)
+    wf = w.astype(jnp.float32)
+    eye = damping * jnp.eye(bs, dtype=jnp.float32)
+    num = jnp.tensordot(wf, (af + eye) @ tf, axes=1)
+    abar = jnp.tensordot(wf, af, axes=1)
+    return solve(abar, num, damping=damping, method=method, ns_iters=iters)

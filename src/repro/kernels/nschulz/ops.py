@@ -1,4 +1,4 @@
-"""jit'd public wrapper for the Newton–Schulz inverse kernel."""
+"""jit'd public wrapper for the adaptive Newton–Schulz inverse kernel."""
 from __future__ import annotations
 
 from functools import partial
@@ -6,7 +6,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.nschulz.nschulz import ns_inverse_blocks, ns_solve_blocks
+from repro.kernels.nschulz.nschulz import (DEFAULT_TOL, ns_inverse_blocks,
+                                           ns_solve_blocks)
 from repro.kernels.nschulz.ref import ns_inverse_ref, ns_solve_ref
 
 
@@ -14,13 +15,40 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-@partial(jax.jit, static_argnames=("iters", "damping", "use_pallas"))
+#: MXU lane width — sub-128 blocks are grouped g-per-grid-step so the
+#: per-iteration batched matmuls run full-tile, and the fused kernel's RHS
+#: is zero-padded up to this so the X@B matmul does too (narrow packed RHS
+#: groups, e.g. a lone k=8 output column group, otherwise occupy a sliver
+#: of the 128-wide systolic array)
+_MXU_LANE = 128
+
+
+def _pick_g(nb: int, bs: int, kp: int) -> int:
+    """Blocks per grid step: the whole bank off-TPU (interpret mode pays
+    Python overhead per grid step — one big batched step wins), largest
+    VMEM-budgeted divisor of nb near 128/bs on TPU."""
+    if not _on_tpu():
+        return nb
+    budget = (12 * 2 ** 20) // (4 * (3 * bs * bs + 2 * bs * max(kp, 1)))
+    target = max(1, min(_MXU_LANE // bs, budget))
+    g = 1
+    for d in range(2, min(nb, target) + 1):
+        if nb % d == 0:
+            g = d
+    return g
+
+
+@partial(jax.jit, static_argnames=("iters", "damping", "tol", "use_pallas"))
 def ns_inverse(a: jax.Array, *, iters: int = 20, damping: float = 0.0,
+               tol: float = DEFAULT_TOL,
                use_pallas: bool | None = None) -> jax.Array:
     """Batched SPD inverse of a [..., bs, bs] via fused Newton–Schulz.
 
-    Leading dims are flattened into the kernel grid; bs > 1024 (VMEM cap)
-    or non-TPU-friendly shapes fall back to the jnp reference."""
+    ``iters`` is the budget, not the cost: the kernel's in-VMEM trace
+    residual exits as soon as the bank is converged (``tol``).  Leading
+    dims are flattened into the kernel grid; bs > 1024 (VMEM cap) or
+    non-TPU-unfriendly shapes fall back to the fixed-count jnp
+    reference."""
     use_pallas = _on_tpu() if use_pallas is None else use_pallas
     bs = a.shape[-1]
     lead = a.shape[:-2]
@@ -29,29 +57,26 @@ def ns_inverse(a: jax.Array, *, iters: int = 20, damping: float = 0.0,
     if bs > 1024:   # VMEM wall: 3 fp32 buffers of bs² must fit ~16 MB
         return ns_inverse_ref(a, iters=iters, damping=damping)
     flat = a.reshape(-1, bs, bs)
-    out = ns_inverse_blocks(flat, iters=iters, damping=damping,
+    out = ns_inverse_blocks(flat, iters=iters, damping=damping, tol=tol,
+                            g=_pick_g(flat.shape[0], bs, bs),
                             interpret=not _on_tpu())
     return out.reshape(*lead, bs, bs)
 
 
-#: MXU lane width — the fused kernel's RHS is zero-padded up to this so
-#: the X@B matmul runs full-tile (narrow packed RHS groups, e.g. a lone
-#: k=8 output column group, otherwise occupy a sliver of the 128-wide
-#: systolic array)
-_MXU_LANE = 128
-
-
-@partial(jax.jit, static_argnames=("iters", "damping", "use_pallas"))
+@partial(jax.jit, static_argnames=("iters", "damping", "tol", "use_pallas"))
 def ns_solve(a: jax.Array, b: jax.Array, *, iters: int = 20,
-             damping: float = 0.0, use_pallas: bool | None = None
-             ) -> jax.Array:
+             damping: float = 0.0, tol: float = DEFAULT_TOL,
+             use_pallas: bool | None = None) -> jax.Array:
     """Fused batched (A+δI)⁻¹ @ B over a packed bank [..., bs, bs] /
-    [..., bs, k] — the inverse stays in VMEM (one kernel per call).
+    [..., bs, k] — the inverse stays in VMEM (one kernel per call) and the
+    iteration count adapts to the bank's conditioning (see nschulz.py).
 
     Leading dims flatten into the kernel grid.  The RHS lane k is
     zero-padded up to the 128-wide MXU tile before the kernel (the extra
     zero columns cost nothing beyond the tile already being resident) and
-    sliced back after — padded ≡ unpadded, covered in tests/test_kernels.
+    sliced back after — padded ≡ unpadded, covered in tests/test_kernels
+    (the convergence test reads only A and X, never B, so padding cannot
+    change the iteration count either).
     Mismatched leading dims (one A applied to many B) route through
     ns_inverse + a broadcasting matmul — fusing there would re-iterate NS
     per broadcast copy.  Shapes whose VMEM footprint (A, X, AX + B_pad,
@@ -64,18 +89,20 @@ def ns_solve(a: jax.Array, b: jax.Array, *, iters: int = 20,
     kp = -(-k // _MXU_LANE) * _MXU_LANE if _on_tpu() else k
     lead = a.shape[:-2]
     if lead != b.shape[:-2]:
-        inv = ns_inverse(a, iters=iters, damping=damping,
+        inv = ns_inverse(a, iters=iters, damping=damping, tol=tol,
                          use_pallas=use_pallas)
         return inv @ b.astype(jnp.float32)
     if not use_pallas and (bs > 256 or bs * kp > 1 << 16):
         return ns_solve_ref(a, b, iters=iters, damping=damping)
     if bs > 1024 or (3 * bs * bs + 2 * bs * kp) * 4 > 12 * 2 ** 20:
-        inv = ns_inverse(a, iters=iters, damping=damping,
+        inv = ns_inverse(a, iters=iters, damping=damping, tol=tol,
                          use_pallas=use_pallas)
         return (inv @ b.astype(jnp.float32))
     bp = b if kp == k else jnp.concatenate(
         [b, jnp.zeros((*lead, bs, kp - k), b.dtype)], axis=-1)
-    out = ns_solve_blocks(a.reshape(-1, bs, bs), bp.reshape(-1, bs, kp),
-                          iters=iters, damping=damping,
+    flat_a = a.reshape(-1, bs, bs)
+    out = ns_solve_blocks(flat_a, bp.reshape(-1, bs, kp),
+                          iters=iters, damping=damping, tol=tol,
+                          g=_pick_g(flat_a.shape[0], bs, kp),
                           interpret=not _on_tpu())
     return out.reshape(*lead, bs, kp)[..., :k]

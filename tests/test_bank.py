@@ -137,6 +137,29 @@ def test_precondition_packed_pallas_matches_reference():
     _assert_trees_close(got, want, rtol=5e-3, atol=5e-4)
 
 
+def test_precondition_packed_pallas_chol_matches_reference():
+    params, grads, grams = _trees(11)
+    got = F.precondition_tree(params, grads, grams, damping=0.1,
+                              method="pallas_chol")
+    want = F.precondition_tree(params, grads, grams, damping=0.1,
+                               method="cholesky", packed=False)
+    _assert_trees_close(got, want, rtol=5e-3, atol=5e-4)
+
+
+@pytest.mark.parametrize("method", ["pallas_ns", "pallas_chol"])
+def test_mix_packed_pallas_matches_reference(method):
+    """The fused mix kernel (one launch per group: reduce → invert →
+    apply) must agree with the per-leaf cholesky oracle."""
+    s = 3
+    params, _, grams = _trees(5, stacked=s)
+    w = jax.random.uniform(jax.random.PRNGKey(5), (s,)) + 0.2
+    got = F.mix_preconditioned(params, grams, damping=0.1, method=method,
+                               ns_iters=40, weights=w)
+    want = F.mix_preconditioned(params, grams, damping=0.1,
+                                method="cholesky", weights=w, packed=False)
+    _assert_trees_close(got, want, rtol=5e-3, atol=5e-4)
+
+
 # ------------------------------------------------ factor-once local loop ---
 
 def _foof_local_perstep(task, hp, params, batches):

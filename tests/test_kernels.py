@@ -6,10 +6,21 @@ import numpy as np
 import pytest
 from hyp_compat import given, settings, st
 
+from repro.kernels.cholesky import ops as chol_ops
+from repro.kernels.cholesky.ref import chol_inverse_ref, chol_solve_ref
 from repro.kernels.gram import ops as gram_ops
 from repro.kernels.gram.ref import gram_blocks_ref
+from repro.kernels.mix import ops as mix_ops
+from repro.kernels.mix.ref import mix_ref
 from repro.kernels.nschulz import ops as ns_ops
 from repro.kernels.nschulz.ref import ns_inverse_ref, ns_solve_ref
+
+
+def _spd(key, nb, bs, dtype=jnp.float32, damp=0.1):
+    m = jax.random.normal(key, (nb, bs, bs), dtype=dtype)
+    a = (jnp.einsum("nij,nkj->nik", m.astype(jnp.float32),
+                    m.astype(jnp.float32)) / bs + damp * jnp.eye(bs))
+    return a.astype(dtype)
 
 
 @pytest.mark.parametrize("t,d,block", [
@@ -41,9 +52,12 @@ def test_gram_kernel_property(nbt, block, seed):
     assert (eig > -1e-4).all()          # PSD
 
 
-@pytest.mark.parametrize("nb,bs", [(1, 32), (4, 64), (2, 128), (3, 256)])
+@pytest.mark.parametrize("nb,bs", [(1, 32), (4, 64), (2, 128), (3, 256),
+                                   (3, 48), (2, 96), (1, 200), (1, 1)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_ns_kernel_matches_ref_and_truth(nb, bs, dtype):
+    """Includes block sizes that do NOT divide the 128 MXU lane (48, 96,
+    200) and the B=1 degenerate bank."""
     m = jax.random.normal(jax.random.PRNGKey(1), (nb, bs, bs), dtype=dtype)
     a = (jnp.einsum("nij,nkj->nik", m.astype(jnp.float32), m.astype(jnp.float32))
          / bs + 0.1 * jnp.eye(bs))
@@ -76,11 +90,13 @@ def test_ns_kernel_batched_leading_dims():
 
 # ------------------------------------------- fused invert-and-apply --------
 
-@pytest.mark.parametrize("nb,bs,k", [(1, 32, 8), (4, 64, 16), (2, 128, 64)])
+@pytest.mark.parametrize("nb,bs,k", [(1, 32, 8), (4, 64, 16), (2, 128, 64),
+                                     (3, 48, 5), (2, 96, 33), (1, 200, 17)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_ns_solve_fused_matches_oracle(nb, bs, k, dtype):
     """The packed-bank invert-and-apply kernel (X computed and consumed in
-    VMEM) vs the jnp oracle (explicit inverse then matmul)."""
+    VMEM) vs the jnp oracle (explicit inverse then matmul); sweeps block
+    sizes off the 128 lane and a B=1 bank."""
     m = jax.random.normal(jax.random.PRNGKey(5), (nb, bs, bs), dtype=dtype)
     a = (jnp.einsum("nij,nkj->nik", m.astype(jnp.float32),
                     m.astype(jnp.float32)) / bs + 0.1 * jnp.eye(bs))
@@ -139,6 +155,124 @@ def test_ns_solve_mxu_pad_equals_unpadded(nb, bs, k):
     ref = ns_solve_ref(a, b, iters=25)
     np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
                                rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------- blocked Cholesky --------------
+
+@pytest.mark.parametrize("nb,bs", [(1, 32), (3, 48), (4, 64), (2, 96),
+                                   (2, 128), (1, 200), (1, 1)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_chol_inverse_kernel_matches_lapack(nb, bs, dtype):
+    """The Schur-recursive kernel (interpret on CPU — the exact TPU
+    program) vs the LAPACK oracle, fp32 accumulation from bf16 inputs."""
+    a = _spd(jax.random.PRNGKey(30), nb, bs, dtype, damp=0.2)
+    got = chol_ops.chol_inverse(a, damping=0.05, use_pallas=True)
+    want = chol_inverse_ref(a, damping=0.05)
+    assert got.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("nb,bs,k", [(2, 32, 8), (3, 48, 5), (2, 96, 33),
+                                     (1, 128, 96), (1, 200, 17)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_chol_solve_fused_matches_lapack(nb, bs, k, dtype):
+    a = _spd(jax.random.PRNGKey(31), nb, bs, dtype, damp=0.2)
+    b = jax.random.normal(jax.random.PRNGKey(32), (nb, bs, k), dtype=dtype)
+    got = chol_ops.chol_solve(a, b, damping=0.05, use_pallas=True)
+    want = chol_solve_ref(a, b, damping=0.05)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_chol_cpu_schur_dispatch_matches_lapack():
+    """The CPU auto path (use_pallas=None → Schur restructuring with
+    LAPACK leaf tiles at bs >= 65) must be numerically interchangeable
+    with the plain LAPACK reference at the roofline gate shape."""
+    a = _spd(jax.random.PRNGKey(33), 16, 128)
+    b = jax.random.normal(jax.random.PRNGKey(34), (16, 128, 96))
+    np.testing.assert_allclose(
+        np.asarray(chol_ops.chol_inverse(a, damping=0.1)),
+        np.asarray(chol_inverse_ref(a, damping=0.1)), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(
+        np.asarray(chol_ops.chol_solve(a, b, damping=0.1)),
+        np.asarray(chol_solve_ref(a, b, damping=0.1)), rtol=1e-4, atol=1e-4)
+
+
+def test_chol_solve_broadcast_leading_dims():
+    """One bank applied to many RHS stacks routes through chol_inverse +
+    a broadcasting matmul."""
+    a = _spd(jax.random.PRNGKey(35), 2, 16)
+    b = jax.random.normal(jax.random.PRNGKey(36), (5, 2, 16, 9))
+    got = chol_ops.chol_solve(a, b, damping=0.1, use_pallas=True)
+    assert got.shape == (5, 2, 16, 9)
+    want = chol_solve_ref(jnp.broadcast_to(a, (5, 2, 16, 16)), b,
+                          damping=0.1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_chol_solve_mxu_pad_equals_unpadded():
+    """Same invariant the TPU-side RHS lane padding relies on, asserted on
+    the kernel itself: zero columns cannot perturb X@B."""
+    a = _spd(jax.random.PRNGKey(37), 2, 48)
+    b = jax.random.normal(jax.random.PRNGKey(38), (2, 48, 7))
+    got = chol_ops.chol_solve(a, b, damping=0.1, use_pallas=True)
+    bp = jnp.concatenate([b, jnp.zeros((2, 48, 128 - 7))], axis=-1)
+    padded = chol_ops.chol_solve(a, bp, damping=0.1,
+                                 use_pallas=True)[..., :7]
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(padded))
+
+
+# ------------------------------------------- fused Eq. 12 mixing -----------
+
+@pytest.mark.parametrize("solver", ["ns", "chol"])
+@pytest.mark.parametrize("s,r,bs,k", [(3, 4, 32, 8), (2, 2, 48, 5),
+                                      (1, 3, 96, 17), (4, 1, 64, 9)])
+def test_mix_kernel_matches_unfused(solver, s, r, bs, k):
+    """Fused reduce → invert → apply vs the unfused cholesky chain, both
+    solvers, including S=1 and R=1 degenerate stacks and off-lane block
+    sizes."""
+    ka, kt, kw = jax.random.split(jax.random.PRNGKey(40), 3)
+    m = jax.random.normal(ka, (s, r, bs, bs))
+    a = jnp.einsum("srij,srkj->srik", m, m) / bs + 0.1 * jnp.eye(bs)
+    t = jax.random.normal(kt, (s, r, bs, k))
+    w = jax.nn.softmax(jax.random.normal(kw, (s,)))
+    got = mix_ops.mix_precond(a, t, w, damping=0.1, solver=solver)
+    want = mix_ref(a, t, w, damping=0.1, method="cholesky")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_mix_kernel_bf16_inputs_fp32_out():
+    s, r, bs, k = 2, 3, 32, 8
+    ka, kt = jax.random.split(jax.random.PRNGKey(41))
+    m = jax.random.normal(ka, (s, r, bs, bs))
+    a32 = jnp.einsum("srij,srkj->srik", m, m) / bs + 0.2 * jnp.eye(bs)
+    a = a32.astype(jnp.bfloat16)
+    t = jax.random.normal(kt, (s, r, bs, k), dtype=jnp.bfloat16)
+    w = jnp.full((s,), 1.0 / s)
+    got = mix_ops.mix_precond(a, t, w, damping=0.1, solver="ns")
+    assert got.dtype == jnp.float32
+    want = mix_ref(a, t, w, damping=0.1, method="cholesky")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_mix_kernel_weights_matter():
+    """A one-hot weight vector must reproduce that single client's solve
+    (sanity that the kernel actually consumes w)."""
+    s, r, bs, k = 3, 2, 16, 4
+    ka, kt = jax.random.split(jax.random.PRNGKey(42))
+    m = jax.random.normal(ka, (s, r, bs, bs))
+    a = jnp.einsum("srij,srkj->srik", m, m) / bs + 0.1 * jnp.eye(bs)
+    t = jax.random.normal(kt, (s, r, bs, k))
+    w = jnp.array([0.0, 1.0, 0.0])
+    got = mix_ops.mix_precond(a, t, w, damping=0.1, solver="ns")
+    want = chol_solve_ref(a[1], (a[1] + 0.1 * jnp.eye(bs)) @ t[1],
+                          damping=0.1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
 
 
 def test_gram_kernel_batched_leading_dims():
