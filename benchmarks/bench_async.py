@@ -1,0 +1,64 @@
+"""Buffered-async engine bench (ISSUE 8): rounds/sec under churn.
+
+The buffered-async driver adds machinery the synchronous scanned engine
+does not pay for: a params ring in the scan carry (one snapshot write
+per round), the per-flush stale-params gather, staleness-damped
+aggregation weights and the gram damping hook.  This bench times the
+SAME flush pattern both ways — the ``BufferedSchedule``'s built cohort
+rows replayed synchronously (fresh params, the dead rounds skipped by
+the same ``lax.cond``) vs the full async engine (stale params from the
+ring, ``weight_pow`` damping) — so the ratio isolates the async
+machinery, not the schedule's duty cycle.  The ``async_overhead``
+bench-gate metric is that ratio (~1x expected; a blow-up means the ring
+or the stale gather stopped fusing into the scanned round body).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core.algorithms import HParams
+from repro.fl import schedule as SCH
+from repro.fl.simulate import FedSim
+
+from benchmarks.common import emit
+from benchmarks.bench_scan import tiny_convex_task
+
+
+def churn(rounds=32, n_clients=16, goal=4, reps=3):
+    """us/round: synchronous replay of a churny flush schedule vs the
+    buffered-async engine on the identical schedule.  Min over ``reps``
+    full-run repetitions per path (one compile each, excluded)."""
+    task = tiny_convex_task(n_clients=n_clients)
+    sched = SCH.BufferedSchedule(goal=goal, concurrency=2 * goal,
+                                 delay=(1, 3), seed=0, weight_pow=0.5)
+    rows, taus = sched.build(n_clients, rounds)
+    live = rows[:, 0] >= 0
+    window = int(taus[live].max(initial=0)) + 1
+    sim = FedSim(task, "fedpm", HParams(lr=1.0, damping=1e-2), n_clients)
+
+    def run_once(seed, cohorts):
+        t0 = time.perf_counter()
+        st, _ = sim.run_scanned(jax.random.PRNGKey(seed), rounds,
+                                cohorts=cohorts, eval_every=rounds)
+        jax.block_until_ready(st.params)
+        return (time.perf_counter() - t0) / rounds * 1e6
+
+    run_once(0, rows)                                 # compile both paths
+    run_once(0, sched)
+    us_sync = min(run_once(r, rows) for r in range(reps))
+    us_async = min(run_once(r, sched) for r in range(reps))
+    emit("async/scanned/sync", us_sync,
+         f"rounds={rounds},live={int(live.sum())},goal={goal}")
+    emit("async/scanned/buffered", us_async,
+         f"window={window},overhead_vs_sync={us_async / us_sync:.2f}x")
+
+
+def main():
+    churn()
+
+
+if __name__ == "__main__":
+    main()

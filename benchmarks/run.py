@@ -15,11 +15,12 @@ solve, adaptive Newton–Schulz, fused Eq. 12 mixing — the three
 ``pallas_*_speedup`` gates), the K-sweep factor-once amortization, the
 sharded-vs-vmap engine comparison on a forced 8-device host mesh, the
 scanned-vs-per-round dispatch ratio, the paged-vs-resident ClientStore
-overhead and exact staged-bytes ratios, and the comm-bytes
+overhead and exact staged-bytes ratios, the buffered-async-vs-sync
+``async_overhead`` ratio, and the comm-bytes
 wire-transform on/off ratios — and serializes every emitted row plus
-machine-independent gate RATIOS to ``BENCH_pr7.json``.
+machine-independent gate RATIOS to ``BENCH_pr8.json``.
 ``benchmarks.bench_gate`` compares those
-ratios against the checked-in ``benchmarks/baseline_pr7.json`` and
+ratios against the checked-in ``benchmarks/baseline_pr8.json`` and
 fails tier-1 on >25% regressions (scripts/ci.sh wires both up; the
 N ≥ 10⁵ paged scale smoke runs as its OWN ci.sh stage —
 ``python -m benchmarks.bench_paging --scale`` in a fresh process, so
@@ -112,6 +113,11 @@ _GATE_SPECS = {
         "comm/fedadam/up", "comm/fedadam_topk/up", "lower", "comm"),
     "comm_sketch_ratio": (
         "comm/fedpm_foof/up", "comm/fedpm_foof_sketch/up", "lower", "comm"),
+    # buffered-async engine vs a synchronous replay of the SAME flush
+    # schedule (a blow-up means the params ring / stale gather stopped
+    # fusing into the scanned round body)
+    "async_overhead": (
+        "async/scanned/buffered", "async/scanned/sync", "higher", "async"),
 }
 
 
@@ -142,10 +148,10 @@ def _median_gates(samples: list[dict]) -> dict:
             for k, vs in merged.items()}
 
 
-def smoke(out_path: str = "BENCH_pr7.json") -> int:
-    from benchmarks import (bench_comm, bench_cost, bench_local_epochs,
-                            bench_paging, bench_roofline, bench_sampling,
-                            bench_scan)
+def smoke(out_path: str = "BENCH_pr8.json") -> int:
+    from benchmarks import (bench_async, bench_comm, bench_cost,
+                            bench_local_epochs, bench_paging,
+                            bench_roofline, bench_sampling, bench_scan)
     from benchmarks.common import RECORDS, dnn_setup
 
     print("name,us_per_call,derived")
@@ -167,6 +173,10 @@ def smoke(out_path: str = "BENCH_pr7.json") -> int:
     for _ in range(2):
         failed += _run([("paging", bench_paging.smoke_section)])
         samples.append(_gates(RECORDS, "paging"))
+    # buffered-async vs synchronous replay of the same flush schedule
+    for _ in range(2):
+        failed += _run([("async", bench_async.churn)])
+        samples.append(_gates(RECORDS, "async"))
     # gate rows re-measured at default (non-smoke) sizes — the tiny smoke
     # shapes don't separate packed from per-leaf reliably — with the gate
     # ratio sampled per repetition and median-merged (see _GATE_SPECS)
@@ -188,7 +198,7 @@ def smoke(out_path: str = "BENCH_pr7.json") -> int:
     # repeating it would blow the ci.sh stage budget); its rows are
     # already steady-state means over 8 post-compile reps, and the
     # checked-in baselines carry the sharded family's wider noise
-    # envelope (see benchmarks/baseline_pr7.json meta)
+    # envelope (see benchmarks/baseline_pr8.json meta)
     failed += _run([("sharded", lambda: bench_sampling.sharded(reps=8))])
     samples.append(_gates(RECORDS, "sharded"))
 
@@ -204,11 +214,11 @@ def smoke(out_path: str = "BENCH_pr7.json") -> int:
 def main() -> None:
     if "--smoke" in sys.argv:
         sys.exit(smoke())
-    from benchmarks import (bench_comm, bench_convex, bench_cost, bench_dnn,
-                            bench_femnist, bench_foof_samples,
-                            bench_local_epochs, bench_paging,
-                            bench_profiling, bench_roofline, bench_sampling,
-                            bench_scan)
+    from benchmarks import (bench_async, bench_comm, bench_convex,
+                            bench_cost, bench_dnn, bench_femnist,
+                            bench_foof_samples, bench_local_epochs,
+                            bench_paging, bench_profiling, bench_roofline,
+                            bench_sampling, bench_scan)
     print("name,us_per_call,derived")
     failed = _run([
         ("comm", bench_comm.main),
@@ -220,6 +230,7 @@ def main() -> None:
         ("femnist", lambda: bench_femnist.main(rounds=8)),
         ("cost", bench_cost.main),
         ("scan", bench_scan.main),
+        ("async", bench_async.main),
         ("paging", bench_paging.main),
         ("profiling", bench_profiling.main),
         ("roofline", bench_roofline.main),

@@ -113,6 +113,7 @@ class HParams:
     ns_iters: int = 20
     foof_timing: str = "end"        # grams at round "end" (paper trick) | "start"
     sophia_gamma: float = 0.05
+    stale_decay: float = 0.5        # ρ: stale gram damping Ã_i = ρ^τ_i A_i
 
 
 class Participation(NamedTuple):
@@ -130,10 +131,20 @@ class Participation(NamedTuple):
     aggregate through ``part`` (``wmean`` / ``n_sampled``) and stay
     engine-agnostic: per-shard partial reductions + one collective, never
     a full gathered stack on one device.
+
+    ``staleness``: optional int [S_local] per-report round-age, fed by
+    the buffered-async engine (``None`` — semantically all-zeros — from
+    the synchronous engines).  Engine-level staleness WEIGHT damping
+    already lands in ``weights``; ``staleness`` exists so a mixer that
+    declared a ``ServerMixer.damping`` hook can additionally attenuate
+    each report's CURVATURE (gram bank) before the preconditioned mix.
+    Mixers without the declared hook must ignore it — enforced bitwise
+    by the registry sweep test, like undeclared hparams.
     """
     weights: jax.Array
     n_total: int
     axes: tuple = ()
+    staleness: jax.Array | None = None
 
     @property
     def n_sampled(self) -> jax.Array:
@@ -468,16 +479,33 @@ def _precond_full_mix(task, hp, params, sstate, msg, part):
     return theta, sstate
 
 
+def _stale_gram_scale(hp, staleness):
+    """The declared ``ServerMixer.damping`` hook for the preconditioned
+    mixers: exponential staleness decay of each report's curvature,
+    ``Ã_i = ρ^τ_i A_i`` with ρ = ``hp.stale_decay``.  A τ-stale gram was
+    measured against dispatch-time params, so under drift it attenuates
+    toward zero and the mix degrades gracefully toward plain weighted
+    averaging of the stale θ — exactly the preconditioner-drift failure
+    mode staleness compounds.  ``ρ**0 == 1.0`` EXACTLY (IEEE pow), so a
+    zero-staleness async round scales every gram by 1.0 and stays
+    bitwise identical to the synchronous mix."""
+    return jnp.float32(hp.stale_decay) ** staleness.astype(jnp.float32)
+
+
 def _precond_foof_mix(task, hp, params, sstate, msg, part):
     """Preconditioned mixing with FOOF blocks (Eq. 12) over the gathered
     participants, weighted by ``part.weights``.  ``part.axes`` rides into
     the bank mixer so the sharded engine's per-shard participant buckets
-    reduce via one psum per block-size group."""
+    reduce via one psum per block-size group.  ``part.staleness`` (async
+    engine only) rides in as a per-report gram scale via the declared
+    damping hook."""
+    gs = (None if part.staleness is None
+          else _stale_gram_scale(hp, part.staleness))
     mixed = F.mix_preconditioned(msg.theta, msg.grams,
                                  damping=hp.damping,
                                  method=hp.inverse_method,
                                  ns_iters=hp.ns_iters, weights=part.weights,
-                                 axes=part.axes)
+                                 axes=part.axes, gram_scale=gs)
     return mixed, sstate
 
 
@@ -485,11 +513,13 @@ def _scaffold_pm_mix(task, hp, params, sstate, msg, part):
     """SCAFFOLD control variates + FedPM preconditioned mixing: the
     cross-product the compositional registry exists for — drift-corrected
     local steps whose results still mix through Eq. 12."""
+    gs = (None if part.staleness is None
+          else _stale_gram_scale(hp, part.staleness))
     mixed = F.mix_preconditioned(msg.theta, msg.grams,
                                  damping=hp.damping,
                                  method=hp.inverse_method,
                                  ns_iters=hp.ns_iters, weights=part.weights,
-                                 axes=part.axes)
+                                 axes=part.axes, gram_scale=gs)
     frac = part.n_sampled / jnp.float32(part.n_total)
     c = tree_add(sstate, tree_scale(part.wmean(msg.dc), frac))
     new = tree_add(params, tree_scale(tree_sub(mixed, params), hp.server_lr))
@@ -562,11 +592,12 @@ register_mixer(ServerMixer(
     hparams=("inverse_method", "ns_iters")))
 register_mixer(ServerMixer(
     "precond_foof", needs=("theta", "grams"), mix=_precond_foof_mix,
-    hparams=_SOLVE_HP))
+    hparams=_SOLVE_HP + ("stale_decay",), damping=_stale_gram_scale))
 register_mixer(ServerMixer(
     "scaffold_precond_foof", needs=("theta", "grams", "dc"),
     mix=_scaffold_pm_mix, init_server=_scaffold_init_server,
-    hparams=_SOLVE_HP + ("server_lr",), broadcasts_state=True))
+    hparams=_SOLVE_HP + ("server_lr", "stale_decay"),
+    broadcasts_state=True, damping=_stale_gram_scale))
 
 # ---- the paper zoo (Table 1): bit-compatible with the pre-compositional
 # ---- monolithic closures (tests/test_api.py vs tests/legacy_zoo.py) -------

@@ -327,6 +327,17 @@ class ServerMixer:
     mixers whose server state rides the downlink to every client
     (SCAFFOLD's control variate, FedNS's sketch frame) for the
     ``bytes_down`` accounting.
+
+    ``damping`` is the mixer's declared STALENESS hook, mirroring how
+    ``LocalUpdate.hparams`` declares reads: ``damping(hp, staleness)``
+    maps per-report round-age ``[S]`` to a curvature scale ``[S]``
+    applied to each report's gram bank before the preconditioned mix
+    (Eq. 12) — the buffered-async engine feeds ``Participation.
+    staleness`` and ONLY mixers that declare the hook may react to it.
+    ``damping is None`` (the default) declares "staleness-blind":
+    the registry sweep test perturbs ``staleness`` (weights fixed) and
+    requires the round's output bitwise unchanged for such mixers, so
+    an undeclared read fails CI the same way an undeclared hparam does.
     """
     name: str
     needs: tuple
@@ -334,6 +345,7 @@ class ServerMixer:
     init_server: Callable = _no_server_state
     hparams: tuple = ()
     broadcasts_state: bool = False
+    damping: Callable | None = None
 
 
 @dataclass(frozen=True)

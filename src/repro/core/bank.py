@@ -684,7 +684,8 @@ def mix_preconditioned(params_stack: PyTree, grams_stack: PyTree, *,
                        damping: float, method: str = "cholesky",
                        ns_iters: int = 20,
                        weights: jax.Array | None = None,
-                       axes: tuple = ()) -> PyTree:
+                       axes: tuple = (),
+                       gram_scale: jax.Array | None = None) -> PyTree:
     """Packed FedPM server mixing over participant-stacked trees.
 
     With ``axes`` set (inside a shard_map manual region) the leading
@@ -692,7 +693,14 @@ def mix_preconditioned(params_stack: PyTree, grams_stack: PyTree, *,
     reduction becomes a per-shard partial tensordot + one cross-shard
     psum per block-size group, so the full [S] stack never materializes
     on a device and the packed-rhs banks stay sharded over their row
-    axis."""
+    axis.
+
+    ``gram_scale`` ([S], optional) scales participant ``i``'s ENTIRE
+    gram bank row by ``gram_scale[i]`` before anything else touches it —
+    the staleness-damping hook (``Ã_i = s_i A_i``).  Scaling the packed
+    bank once up front makes every downstream lane (numerator, mixed
+    denominator Ā, diagonal lane, fused pallas group_mix) consistent by
+    construction, and a scale of exactly 1.0 is bitwise inert."""
     from repro.core import foof as F
     axes = tuple(axes)
     n = jax.tree.leaves(params_stack)[0].shape[0]
@@ -706,6 +714,21 @@ def mix_preconditioned(params_stack: PyTree, grams_stack: PyTree, *,
         return reduce_mats(x).astype(x.dtype)
 
     bank = pack(grams_stack, stack=1)
+    if gram_scale is not None:
+        gs = gram_scale.astype(jnp.float32)
+        if gs.shape[0] != n:
+            raise ValueError(f"gram_scale [{gs.shape[0]}] must match the "
+                             f"gathered participant axis [{n}]")
+
+        def _scale(x):
+            return x * gs.reshape(gs.shape[:1] + (1,) * (x.ndim - 1))
+
+        bank = GramBank(
+            tuple(_scale(m) for m in bank.mats),
+            None if bank.diag is None else _scale(bank.diag),
+            tuple(_scale(o.astype(jnp.float32)).astype(o.dtype)
+                  if o.size else o for o in bank.others),
+            bank.layout)
 
     group_mix = None
     if not axes and method.startswith("pallas"):

@@ -126,7 +126,8 @@ def _precondition_leaf(p, g, a, damping, method, ns_iters):
 def mix_preconditioned(params_stack: PyTree, grams_stack: PyTree, *,
                        damping: float, method: str = "cholesky",
                        ns_iters: int = 20, weights: jax.Array | None = None,
-                       packed: bool = True, axes: tuple = ()) -> PyTree:
+                       packed: bool = True, axes: tuple = (),
+                       gram_scale: jax.Array | None = None) -> PyTree:
     """FedPM server mixing (Eq. 12) over participant-stacked trees.
 
     Participation contract: the leading axis of params_stack / grams_stack
@@ -148,13 +149,31 @@ def mix_preconditioned(params_stack: PyTree, grams_stack: PyTree, *,
     ``repro.fl.sharded``'s manual region the leading axis is each shard's
     local bucket and every mean gains one cross-shard psum (per
     block-size group when packed).
+
+    ``gram_scale``: optional [S] per-participant curvature scale — the
+    staleness-damping hook (``Ã_i = s_i A_i``): every gram enters BOTH
+    the numerator Σw_i(Ã_i+δI)θ_i and the mixed denominator Ā, so scaling
+    toward zero degrades that report gracefully toward plain weighted
+    averaging while the δI floor keeps the solve well-posed.  A scale of
+    exactly 1.0 is a bitwise no-op (x·1.0 is exact), which is what the
+    async engine's zero-staleness equivalence contract rides on.
     """
     axes = tuple(axes)
     if packed:
         return B.mix_preconditioned(params_stack, grams_stack,
                                     damping=damping, method=method,
                                     ns_iters=ns_iters, weights=weights,
-                                    axes=axes)
+                                    axes=axes, gram_scale=gram_scale)
+    if gram_scale is not None:
+        # per-leaf reference: scale every gram leaf up front (fp32, cast
+        # back) — the packed path scales the packed bank identically, so
+        # packed ≡ per-leaf still holds under staleness damping
+        gs = gram_scale.astype(jnp.float32)
+        grams_stack = jax.tree.map(
+            lambda a: (a.astype(jnp.float32)
+                       * gs.reshape(gs.shape[:1] + (1,) * (a.ndim - 1))
+                       ).astype(a.dtype) if a.size else a,
+            grams_stack)
     n = jax.tree.leaves(params_stack)[0].shape[0]
     w = B.normalize_weights(weights, n, axes)
 

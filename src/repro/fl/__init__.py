@@ -1,5 +1,7 @@
 """Federated runtime: partitioning, client sampling, simulate + distributed
 execution engines."""
 from repro.fl.partition import dirichlet_partition, even_partition
+from repro.fl.schedule import (ArraySchedule, BufferedSchedule,
+                               CohortSchedule, SampledSchedule, trace)
 from repro.fl.simulate import FedSim, FedState
 from repro.fl.tasks import ConvexTask, DNNTask

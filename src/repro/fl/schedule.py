@@ -1,0 +1,359 @@
+"""Cohort schedules: WHO participates WHEN — and, for buffered-async
+rounds, HOW STALE each report is.
+
+``FedSim.run_scanned(cohorts=...)`` accepts either
+
+* ``None`` — in-graph uniform sampling (:func:`~repro.fl.simulate.
+  sample_cohort` each round, the PR 4 behavior);
+* a plain host int array ``[rounds, S]`` — the raw-array path, kept
+  bit-for-bit: each row is sorted unique client ids, a row of all -1 is
+  an empty round (skipped via ``lax.cond``);
+* a :class:`CohortSchedule` — an object that BUILDS such an array
+  (seeded generators, registered availability traces, or the buffered-
+  async event process), so the scanned engine consumes one host array
+  regardless of how the participation story was expressed.
+
+Every path funnels through :func:`resolve` into a :class:`SchedulePlan`;
+the shape / dead-row validation that used to live inline in
+``run_scanned`` lives here (:func:`validate_cohorts`) so the per-round
+driver, the scanned driver and the paged driver's ``plan_chunk`` all
+enforce ONE contract.  The sortedness requirement is load-bearing, not
+cosmetic: ``sharded.bucket_cohort``'s in-graph rank-within-shard
+bucketing (``arange(S) - searchsorted(d, d)``) silently MIS-BUCKETS
+unsorted rows — collisions overwrite bucket slots and participants are
+dropped — so unsorted explicit schedules are rejected at this host
+boundary (in-graph paths cannot repair them).  A cohort is a set: sort
+each row (``np.sort``) before passing it in.
+
+Buffered-async rounds (:class:`BufferedSchedule`)
+-------------------------------------------------
+FedBuff-style semantics, resolved ENTIRELY host-side into two arrays the
+scanned engine consumes: ``concurrency`` clients train at any moment;
+each dispatch completes after ``delay`` rounds and its report enters a
+FIFO server buffer; when the buffer holds ``goal`` reports the round
+FLUSHES them as one cohort row (staleness = flush round − dispatch
+round) and replacement clients dispatch next round.  Rounds that flush
+nothing are all--1 rows (the engine skips them; in-flight clients are
+untouched by construction).  ``build`` returns ``(cohorts, staleness)``
+and :func:`resolve` derives the params-ring ``window`` = max staleness
++ 1.  With ``delay=0`` and ``concurrency == goal`` every round flushes a
+fresh cohort with zero staleness — the configuration under which the
+async engine must reproduce the synchronous one bitwise (vmap engine) /
+to fp32 mixing tolerance (mesh engine); see tests/test_async.py.
+
+``weight_pow`` is the engine-level staleness damping applied to EVERY
+algorithm's aggregation weights: ``w_i = (1 + tau_i) ** -weight_pow``
+(exactly 1.0 at ``tau == 0``, any power).  Curvature damping of the
+preconditioned mix is separate — a ``ServerMixer.damping`` hook, see
+``repro.core.algorithms._stale_gram_scale``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+__all__ = [
+    "SchedulePlan", "CohortSchedule", "ArraySchedule", "SampledSchedule",
+    "BufferedSchedule", "validate_cohorts", "validate_staleness",
+    "resolve", "register_trace", "trace", "TRACES",
+]
+
+
+# --------------------------------------------------------- validation ----
+
+def validate_cohorts(cohorts, rounds: int, n: int) -> np.ndarray:
+    """Validate a ``[rounds, S]`` cohort array (host-side) and return it
+    as int32.  Moved out of ``run_scanned`` so every consumer of a
+    schedule — scanned, paged, per-round — enforces the same contract.
+    """
+    cohorts = np.asarray(cohorts, np.int32)
+    if cohorts.ndim != 2 or cohorts.shape[0] != rounds:
+        raise ValueError(f"cohorts must be [rounds={rounds}, S]; "
+                         f"got {cohorts.shape}")
+    live = cohorts[cohorts[:, 0] >= 0]
+    dead = cohorts[cohorts[:, 0] < 0]
+    if live.size and (np.any(np.diff(live, axis=1) <= 0)
+                      or live.min() < 0 or live.max() >= n):
+        raise ValueError(
+            f"cohort rows must be sorted unique ids in [0, {n}) (or all "
+            "-1 for an empty round). Sortedness is load-bearing: "
+            "sharded.bucket_cohort's in-graph bucketing silently "
+            "mis-buckets unsorted rows, so unsorted explicit schedules "
+            "are rejected here at the host boundary — a cohort is a set; "
+            "np.sort each row.")
+    if dead.size and not np.all(dead == -1):
+        raise ValueError("an empty cohort row must be ALL -1 — a "
+                         "row mixing -1 with real ids is ambiguous "
+                         "(it would be silently skipped, not "
+                         "partially trained)")
+    return cohorts
+
+
+def validate_staleness(staleness, cohorts: np.ndarray) -> np.ndarray:
+    """Validate per-report staleness aligned with ``cohorts``: int32,
+    same shape, and ``0 <= tau <= t`` on live rows — a report cannot
+    predate its own dispatch or round 0, and the engine's params ring
+    only holds snapshots of rounds that already ran."""
+    staleness = np.asarray(staleness, np.int32)
+    if staleness.shape != cohorts.shape:
+        raise ValueError(f"staleness must match cohorts shape "
+                         f"{cohorts.shape}; got {staleness.shape}")
+    t = np.arange(cohorts.shape[0], dtype=np.int64)[:, None]
+    live = cohorts[:, :1] >= 0
+    if np.any(staleness < 0) or np.any((staleness > t) & live):
+        raise ValueError("staleness must satisfy 0 <= tau <= t on every "
+                         "live row: a report cannot be older than the "
+                         "run itself (the params ring only holds rounds "
+                         "that already executed)")
+    return staleness
+
+
+# ------------------------------------------------------------- plan ------
+
+@dataclass(frozen=True)
+class SchedulePlan:
+    """A resolved, validated schedule — what ``run_scanned`` actually
+    consumes.  ``staleness is None`` means SYNCHRONOUS (today's engine,
+    raw-array path bit-for-bit); otherwise the buffered-async engine
+    runs with a params ring of ``window`` snapshots and aggregation
+    weights damped by ``(1 + tau) ** -weight_pow``."""
+    cohorts: np.ndarray | None    # int32 [rounds, S]; None => in-graph draw
+    staleness: np.ndarray | None  # int32 [rounds, S]; None => synchronous
+    s: int
+    scheduled: bool
+    window: int = 0               # params-ring length; 0 => synchronous
+    weight_pow: float = 0.0
+
+    @property
+    def is_async(self) -> bool:
+        return self.staleness is not None
+
+
+def resolve(spec, *, rounds: int, n: int,
+            sample_clients: int = 0) -> SchedulePlan:
+    """Resolve ``run_scanned``'s ``cohorts=`` argument — ``None``, a raw
+    host array, or any :class:`CohortSchedule` — into a validated
+    :class:`SchedulePlan`.  The raw-array path produces exactly the plan
+    an :class:`ArraySchedule` wrapping the same array would (bit-for-bit
+    contract, tested)."""
+    if spec is None:
+        s = sample_clients if 0 < sample_clients < n else n
+        return SchedulePlan(cohorts=None, staleness=None, s=s,
+                            scheduled=False)
+    if isinstance(spec, CohortSchedule):
+        built = spec.build(n, rounds)
+        cohorts, stale = built if isinstance(built, tuple) else (built, None)
+    else:
+        cohorts, stale = spec, None
+    cohorts = validate_cohorts(cohorts, rounds, n)
+    s = int(cohorts.shape[1])
+    if stale is None:
+        return SchedulePlan(cohorts=cohorts, staleness=None, s=s,
+                            scheduled=True)
+    stale = validate_staleness(stale, cohorts)
+    live = cohorts[:, 0] >= 0
+    window = int(stale[live].max(initial=0)) + 1 if live.any() else 1
+    return SchedulePlan(
+        cohorts=cohorts, staleness=stale, s=s, scheduled=True,
+        window=window,
+        weight_pow=float(getattr(spec, "weight_pow", 0.0) or 0.0))
+
+
+# --------------------------------------------------------- schedules -----
+
+class CohortSchedule:
+    """Protocol for cohort generators.  ``build(n, rounds)`` returns a
+    host ``[rounds, S]`` int array (rows sorted unique, all -1 = empty
+    round) — or a ``(cohorts, staleness)`` pair for buffered-async
+    schedules.  :func:`resolve` validates whatever comes back, so a
+    schedule never needs to re-implement the contract checks.  A
+    ``weight_pow`` attribute (default 0.0) requests engine-level
+    staleness weight damping."""
+
+    weight_pow: float = 0.0
+
+    def build(self, n: int, rounds: int):
+        raise NotImplementedError
+
+
+@dataclass(frozen=True)
+class ArraySchedule(CohortSchedule):
+    """A pre-built cohort array behind the protocol.  Resolving this is
+    identical to passing the raw array straight to ``run_scanned``."""
+    cohorts: object
+
+    def build(self, n: int, rounds: int):
+        return np.asarray(self.cohorts, np.int32)
+
+
+@dataclass(frozen=True)
+class SampledSchedule(CohortSchedule):
+    """Seeded host-side uniform sampler: ``s`` unique clients per round
+    from a ``np.random.default_rng(seed)`` stream — reproducible cohorts
+    without the caller materializing the array by hand.  (Distinct from
+    ``sample_clients=``'s IN-GRAPH draw: that one is keyed by the run's
+    jax rng and stays the scanned engine's default.)"""
+    s: int
+    seed: int = 0
+
+    def build(self, n: int, rounds: int):
+        if not 0 < self.s <= n:
+            raise ValueError(f"SampledSchedule needs 0 < s <= n; "
+                             f"got s={self.s}, n={n}")
+        rng = np.random.default_rng(self.seed)
+        return np.stack([
+            np.sort(rng.choice(n, size=self.s, replace=False))
+            for _ in range(rounds)]).astype(np.int32)
+
+
+# availability traces: name -> fn(n, rounds, s, seed, **kw) -> cohorts
+TRACES: dict = {}
+
+
+def register_trace(name: str):
+    """Register an availability-trace generator under ``name`` (used via
+    :func:`trace`).  The fn signature is
+    ``fn(n, rounds, s, seed, **kw) -> [rounds, S] host int array``."""
+    def deco(fn):
+        if name in TRACES:
+            raise ValueError(f"trace {name!r} already registered")
+        TRACES[name] = fn
+        return fn
+    return deco
+
+
+@dataclass(frozen=True)
+class TraceSchedule(CohortSchedule):
+    name: str
+    s: int
+    seed: int = 0
+    kwargs: tuple = ()   # sorted (key, value) pairs — keeps the dataclass hashable
+
+    def build(self, n: int, rounds: int):
+        return TRACES[self.name](n, rounds, self.s, self.seed,
+                                 **dict(self.kwargs))
+
+
+def trace(name: str, s: int, *, seed: int = 0, **kw) -> TraceSchedule:
+    """A registered availability trace as a :class:`CohortSchedule`:
+    ``trace("diurnal", s=8, seed=3, period=24)``."""
+    if name not in TRACES:
+        raise ValueError(f"unknown trace {name!r}; registered: "
+                         f"{sorted(TRACES)}")
+    return TraceSchedule(name=name, s=s, seed=seed,
+                         kwargs=tuple(sorted(kw.items())))
+
+
+@register_trace("diurnal")
+def _diurnal(n, rounds, s, seed, *, period: int = 24, duty: float = 0.5):
+    """Diurnal availability: client ``c`` is online at round ``t`` when
+    its phase-shifted day cycle ``sin(2pi (t / period + c / n))`` is in
+    the top ``duty`` fraction of the cycle.  Cohorts draw uniformly from
+    the online pool; when fewer than ``s`` clients are online the round
+    is a quorum loss (all -1, skipped by the engine)."""
+    rng = np.random.default_rng(seed)
+    rows = np.full((rounds, s), -1, np.int32)
+    phase = np.arange(n) / n
+    thresh = np.sin(np.pi * (0.5 - duty))   # top `duty` of a sine cycle
+    for t in range(rounds):
+        online = np.flatnonzero(
+            np.sin(2 * np.pi * (t / period + phase)) >= thresh)
+        if online.size >= s:
+            rows[t] = np.sort(rng.choice(online, size=s, replace=False))
+    return rows
+
+
+@register_trace("dropout_midround")
+def _dropout_midround(n, rounds, s, seed, *, drop_prob: float = 0.15):
+    """Mid-round dropout: a cohort is drawn every round, but with
+    probability ``drop_prob`` it loses quorum before reporting and the
+    whole round aborts (all -1).  Fixed-width cohort rows cannot express
+    a PARTIAL cohort — modeling per-client dropout inside a round needs
+    the buffered-async engine (the dropped client simply never reports);
+    this trace covers the all-or-nothing failure mode the sync engine
+    can express."""
+    rng = np.random.default_rng(seed)
+    rows = np.full((rounds, s), -1, np.int32)
+    for t in range(rounds):
+        if rng.random() >= drop_prob:
+            rows[t] = np.sort(rng.choice(n, size=s, replace=False))
+    return rows
+
+
+# ----------------------------------------------------- buffered async ----
+
+@dataclass(frozen=True)
+class BufferedSchedule(CohortSchedule):
+    """FedBuff-style buffered-async arrival process, resolved host-side.
+
+    ``concurrency`` clients are in flight at any time; a dispatch at
+    round ``t0`` completes after ``delay`` rounds (an int, or an
+    inclusive ``(lo, hi)`` range sampled per dispatch) and its report
+    joins a FIFO buffer; a round with ``goal`` buffered reports flushes
+    them as ONE cohort row with per-report staleness ``t - t0``, frees
+    those clients, and dispatches replacements the next round.  A client
+    is busy from dispatch until flush, so a flush row never repeats an
+    id.  Rounds that flush nothing are all--1 rows.
+
+    ``build`` returns ``(cohorts, staleness)``; :func:`resolve` sizes
+    the engine's params ring at ``max(staleness) + 1``.  With
+    ``delay=0, concurrency=goal`` this degenerates to one fresh
+    zero-staleness cohort per round — the sync-equivalence configuration.
+    """
+    goal: int
+    concurrency: int
+    delay: object = 0       # int, or inclusive (lo, hi) tuple
+    seed: int = 0
+    weight_pow: float = 0.0
+
+    def build(self, n: int, rounds: int):
+        if self.goal < 1:
+            raise ValueError(f"goal must be >= 1; got {self.goal}")
+        if self.concurrency < self.goal:
+            raise ValueError(
+                f"concurrency ({self.concurrency}) < goal ({self.goal}): "
+                "the buffer can never reach the flush size")
+        if self.concurrency > n:
+            raise ValueError(f"concurrency ({self.concurrency}) exceeds "
+                             f"the population n={n}")
+        lo, hi = ((int(self.delay), int(self.delay))
+                  if np.isscalar(self.delay) else
+                  (int(self.delay[0]), int(self.delay[1])))
+        if lo < 0 or hi < lo:
+            raise ValueError(f"delay must be >= 0 (int or (lo, hi) with "
+                             f"lo <= hi); got {self.delay}")
+        rng = np.random.default_rng(self.seed)
+        rows = np.full((rounds, self.goal), -1, np.int32)
+        taus = np.zeros((rounds, self.goal), np.int32)
+        free = np.ones(n, bool)
+        inflight: list = []   # (report_t, seq, client, dispatch_t)
+        buffer: list = []     # (client, dispatch_t), FIFO
+        pending, seq = self.concurrency, 0
+        for t in range(rounds):
+            # dispatch replacements for whatever flushed last round
+            k = min(pending, int(free.sum()))
+            if k:
+                chosen = rng.choice(np.flatnonzero(free), size=k,
+                                    replace=False)
+                for c in chosen:
+                    d = int(rng.integers(lo, hi + 1)) if hi > lo else lo
+                    inflight.append((t + d, seq, int(c), t))
+                    seq += 1
+                free[chosen] = False
+                pending -= k
+            # arrivals: completed reports enter the buffer FIFO
+            done = sorted(e for e in inflight if e[0] <= t)
+            if done:
+                inflight = [e for e in inflight if e[0] > t]
+                buffer.extend((c, t0) for (_, _, c, t0) in done)
+            # at most one goal-sized flush per round
+            if len(buffer) >= self.goal:
+                batch, buffer = buffer[:self.goal], buffer[self.goal:]
+                ids = np.fromiter((c for c, _ in batch), np.int32)
+                age = np.fromiter((t - t0 for _, t0 in batch), np.int32)
+                order = np.argsort(ids)
+                rows[t], taus[t] = ids[order], age[order]
+                free[ids] = True
+                pending += self.goal
+        return rows, taus

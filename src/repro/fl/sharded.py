@@ -49,7 +49,8 @@ PyTree = Any
 
 __all__ = ["CLIENTS_AXIS", "make_client_mesh", "bucket_participants",
            "bucket_cohort", "shard_clients", "replicate", "staging_sharding",
-           "make_sharded_round", "bank_shard_rows"]
+           "make_sharded_round", "make_sharded_round_async",
+           "bank_shard_rows"]
 
 
 def _n_shards(mesh: jax.sharding.Mesh) -> int:
@@ -96,15 +97,31 @@ def bucket_participants(idx: np.ndarray, weights: np.ndarray, n_clients: int,
 
 
 def bucket_cohort(idx: jax.Array, weights: jax.Array, n_clients: int,
-                  n_shards: int):
+                  n_shards: int, *extras: jax.Array):
     """In-graph counterpart of :func:`bucket_participants` — traceable
     inside the scanned round body (``FedSim.run_scanned``).
 
-    Requires ``idx`` SORTED ascending (what ``sample_cohort`` produces);
-    for sorted cohorts the output is bit-identical to the host bucketing
-    (both group by owner shard preserving cohort order).  The cap
-    ``min(S, shard_n)`` is a static function of S, so one program serves
-    every cohort of a chunk.
+    Requires ``idx`` SORTED ascending (what ``sample_cohort`` produces).
+    THE REQUIREMENT IS SILENT IN-GRAPH: the rank-within-shard slot
+    assignment (``arange(S) - searchsorted(d, d)``) is only a bijection
+    when equal shard owners are contiguous — an unsorted cohort collides
+    slots, overwriting participants (mis-bucketing, not an error).
+    Traced code cannot validate this, so the host boundary does:
+    ``repro.fl.schedule.validate_cohorts`` rejects unsorted explicit
+    schedules before any cohort reaches this function (regression-tested
+    in tests/test_async.py).  For sorted cohorts the output is
+    bit-identical to the host bucketing (both group by owner shard
+    preserving cohort order).  The cap ``min(S, shard_n)`` is a static
+    function of S, so one program serves every cohort of a chunk — and
+    because the buckets are rebuilt per round from whatever row the
+    schedule supplies, OVERLAPPING/streaming cohorts (the buffered-async
+    engine: the same client id appearing in different rounds' flushes)
+    bucket exactly like disjoint ones.
+
+    ``extras``: additional per-participant ``[S]`` arrays (e.g. the
+    async engine's staleness) bucketed alongside, each returned as
+    ``[n_shards, cap]`` with 0 at padding slots (padding already carries
+    weight 0, so a zero extra cannot contribute anywhere).
     """
     shard_n = n_clients // n_shards
     s = idx.shape[0]
@@ -118,7 +135,10 @@ def bucket_cohort(idx: jax.Array, weights: jax.Array, n_clients: int,
         jnp.arange(s, dtype=jnp.int32))
     w = jnp.zeros((n_shards, cap), jnp.float32).at[d, slot].set(
         weights.astype(jnp.float32))
-    return local, pos, w
+    bucketed_extras = tuple(
+        jnp.zeros((n_shards, cap), e.dtype).at[d, slot].set(e)
+        for e in extras)
+    return (local, pos, w, *bucketed_extras)
 
 
 def shard_clients(mesh: jax.sharding.Mesh, clients: PyTree) -> PyTree:
@@ -210,5 +230,63 @@ def make_sharded_round(task, algo, hp, n_clients: int,
             out_specs=(P(), P(), shd, P()),
             axis_names={CLIENTS_AXIS}, check=False)(
                 params, server, clients, batches, local, pos, w, rng)
+
+    return round_fn
+
+
+def make_sharded_round_async(task, algo, hp, n_clients: int,
+                             mesh: jax.sharding.Mesh):
+    """Buffered-async twin of :func:`make_sharded_round`.
+
+    Returns ``round_fn(params, server, clients, batches, pstack, rng,
+    local, pos, w, tau, *, s)`` — always pre-bucketed (``batches`` and
+    ``pstack`` lead with ``n_shards·cap`` rows in shard order; the
+    caller gathers each participant's dispatch-time params from its ring
+    OUTSIDE the manual region and buckets them like batches).  Each
+    shard's clients train against their own stale params row; the mix
+    sees ``Participation(staleness=ltau)`` so the declared mixer damping
+    hook runs per-shard with the usual cross-shard psums.  Padding slots
+    carry weight 0 and staleness 0 — throwaway compute, no contribution.
+    """
+    nd = _n_shards(mesh)
+    if n_clients % nd:
+        raise ValueError(f"n_clients={n_clients} must divide over the "
+                         f"{nd}-way {CLIENTS_AXIS!r} axis")
+
+    def round_fn(params, server, clients, batches, pstack, rng, local, pos,
+                 w, tau, *, s: int):
+        def shard_fn(params, server, lclients, lbatches, lpstack, li, lpos,
+                     lw, ltau, rng):
+            li, lpos = li[0], lpos[0]                   # [1, cap] → [cap]
+            lw, ltau = lw[0], ltau[0]
+            gathered = jax.tree.map(
+                lambda x: jnp.take(x, li, axis=0, mode="clip"), lclients)
+            crngs = jnp.take(jax.random.split(rng, s), lpos, axis=0)
+
+            # compute: per-participant dispatch-time params are a MAPPED
+            # vmap axis here (the sync round closes over broadcast params)
+            def client_fn(cparams, cstate, cb, cr):
+                return algo.client(task, hp, cparams, cstate, server, cb,
+                                   cr)
+
+            msgs, updated = jax.vmap(client_fn)(lpstack, gathered,
+                                                lbatches, crngs)
+            part = Participation(weights=lw, n_total=n_clients,
+                                 axes=(CLIENTS_AXIS,), staleness=ltau)
+            new_params, new_server = algo.server(task, hp, params, server,
+                                                 msgs, part)
+            new_clients = jax.tree.map(
+                lambda b, u: b.at[li].set(u, mode="drop"), lclients, updated)
+            return (new_params, new_server, new_clients,
+                    round_metrics(msgs, part))
+
+        shd = P(CLIENTS_AXIS)
+        return shard_map(
+            shard_fn, mesh=mesh,
+            in_specs=(P(), P(), shd, shd, shd, shd, shd, shd, shd, P()),
+            out_specs=(P(), P(), shd, P()),
+            axis_names={CLIENTS_AXIS}, check=False)(
+                params, server, clients, batches, pstack, local, pos, w,
+                tau, rng)
 
     return round_fn

@@ -58,6 +58,22 @@ scanned programs run over a ``[cap, ...]`` staged bank, with
 schedule while N grows to 10⁵+.  Paging (gather/scatter/prefetch)
 happens ONLY at chunk boundaries, outside the scanned graph; the next
 chunk's data rows prefetch while the current chunk computes.
+
+Buffered-async rounds (``repro.fl.schedule``)
+---------------------------------------------
+``run_scanned(cohorts=BufferedSchedule(...))`` runs the FedBuff-style
+buffered-async engine: the arrival process (dispatch round, completion
+delay, report round, buffer flush at the goal size) is resolved
+host-side into ``(cohorts, staleness)`` arrays, and the SCANNED graph
+consumes them as just another schedule — a flush round is a cohort row,
+a fill round is an all--1 row the ``lax.cond`` skips, so the whole
+stream still compiles to one ``lax.scan`` per chunk with the same
+donation discipline.  The async carry adds a params RING
+(``[window, ...]`` snapshots, ``window = max staleness + 1``, donated):
+round ``t`` snapshots its params into slot ``t % window`` and each
+flushed report trains against the slot it was dispatched from, so
+training compute happens at flush time against dispatch-time inputs —
+equivalent by round-body purity, and zero host work mid-chunk.
 """
 from __future__ import annotations
 
@@ -73,6 +89,7 @@ import numpy as np
 from repro.core import api as API
 from repro.core.algorithms import (Algorithm, HParams, Participation,
                                    get_algorithm)
+from repro.fl import schedule as SCH
 from repro.fl.store import HostStateStore, plan_chunk, round_up
 
 PyTree = Any
@@ -186,6 +203,13 @@ class FedSim:
         self._scan_jit = jax.jit(self._scan_rounds,
                                  static_argnames=("s", "scheduled"),
                                  donate_argnums=(0, 1, 2))
+        # buffered-async chunk jit: the params RING joins the donated
+        # carry (argnum 3) — snapshots single-buffer in place like the
+        # client bank
+        self._scan_async_jit = jax.jit(
+            self._scan_rounds_async,
+            static_argnames=("s", "window", "wpow"),
+            donate_argnums=(0, 1, 2, 3))
         self._full_idx = None         # cached identity-cohort device arrays
         self._full_w = None
         self._comm_cache = {}         # per-batch-struct (up, down) bytes
@@ -208,6 +232,12 @@ class FedSim:
             self._scan_sharded_jit = jax.jit(
                 self._scan_rounds_sharded,
                 static_argnames=("s", "scheduled"), donate_argnums=(0, 1, 2))
+            self._sharded_round_async_fn = Sh.make_sharded_round_async(
+                task, self.algo, hp, n_clients, mesh)
+            self._scan_async_jit = jax.jit(
+                self._scan_rounds_async_sharded,
+                static_argnames=("s", "window", "wpow"),
+                donate_argnums=(0, 1, 2, 3))
             self._banked_jit = jax.jit(self._sharded_round_banked,
                                        static_argnames=("s", "sample"),
                                        donate_argnums=(0, 1, 2))
@@ -735,6 +765,184 @@ class FedSim:
             (params, server, clients), keys, cohorts, bank, s=s,
             scheduled=scheduled)
 
+    # ---------------------------------------------- buffered-async rounds --
+
+    def _round_async(self, params, server, clients, client_batches, rng,
+                     idx, weights, tau, pstack):
+        """One buffered-async round on the vmap engine.
+
+        Like the S < N path of :meth:`_round`, except each participant
+        trains against the params SNAPSHOT it was dispatched with —
+        ``pstack`` [S, ...] rows gathered from the params ring, a MAPPED
+        vmap axis where the sync round closes over broadcast params —
+        and reports its round-age through ``Participation.staleness``.
+        The server update applies to the CURRENT params (FedBuff
+        semantics: stale deltas fold into the live model).  Compute
+        happens AT FLUSH time, which is equivalent to dispatch-time
+        training because a local update is a pure function of its
+        dispatch-time inputs and a client is never re-dispatched while
+        in flight — round-body purity buys the reordering.
+
+        ``pstack=None`` marks STRUCTURALLY zero staleness (the schedule
+        sized the ring at ``window == 1``, so every snapshot gather is
+        the identity): the client fn then closes over the live params
+        exactly like the sync round.  This is what makes zero-staleness
+        async ≡ sync BITWISE on this engine — a mapped params axis
+        batches the client matmuls differently (different FMA
+        contraction, ~1 ulp), so the identity gather must be elided, not
+        just value-equal.
+        """
+        s = idx.shape[0]
+        rngs = jax.random.split(rng, s)
+        gathered = jax.tree.map(lambda x: jnp.take(x, idx, axis=0),
+                                clients)
+
+        if pstack is None:
+            def client_fn(cstate, cbatches, crng):
+                return self.algo.client(self.task, self.hp, params, cstate,
+                                        server, cbatches, crng)
+
+            msgs, updated = jax.vmap(client_fn)(gathered, client_batches,
+                                                rngs)
+        else:
+            def client_fn(cparams, cstate, cbatches, crng):
+                return self.algo.client(self.task, self.hp, cparams,
+                                        cstate, server, cbatches, crng)
+
+            msgs, updated = jax.vmap(client_fn)(pstack, gathered,
+                                                client_batches, rngs)
+        # pstack=None proves tau == 0 structurally: report staleness as
+        # None (not a zeros array) so damping-aware mixers take their
+        # staleness-blind branch and the round graph matches the sync
+        # engine op-for-op
+        part = Participation(weights=weights, n_total=self.n,
+                             staleness=None if pstack is None else tau)
+        new_params, new_server = self.algo.server(
+            self.task, self.hp, params, server, msgs, part)
+        new_clients = jax.tree.map(
+            lambda bank, upd: bank.at[idx].set(upd), clients, updated)
+        return new_params, new_server, new_clients, round_metrics(msgs,
+                                                                  part)
+
+    def _sharded_round_async_impl(self, params, server, clients, batches,
+                                  kr, idx, weights, tau, pstack, s: int,
+                                  n_rows: int):
+        """Async round on the mesh engine: bucket cohort + staleness
+        (``bucket_cohort`` extras), pre-bucket batches AND the stale
+        params rows into shard order (the ring gather happened outside —
+        on replicated arrays), run the async shard_map round."""
+        local, pos, w, ltau = self._sharded.bucket_cohort(
+            idx, weights, n_rows, self._n_shards, tau)
+        flat_pos = pos.reshape(-1)
+        take = lambda x: jnp.take(x, flat_pos, axis=0)
+        b = jax.tree.map(take, batches)
+        ps = (jax.tree.map(
+                  lambda x: jnp.broadcast_to(x[None],
+                                             (flat_pos.shape[0], *x.shape)),
+                  params)
+              if pstack is None else jax.tree.map(take, pstack))
+        return self._sharded_round_async_fn(
+            params, server, clients, b, ps, kr, local, pos, w, ltau, s=s)
+
+    def _banked_body_async(self, round_impl, bank, *, s, window, wpow):
+        """Async twin of :meth:`_banked_body`, same key discipline
+        (``kc`` is split and discarded — async cohorts are always
+        scheduled, exactly like the sync scheduled path), plus the two
+        staleness channels: engine-level WEIGHT damping
+        ``w_i = (1 + tau_i)^-wpow`` (exactly 1.0 whenever ``tau == 0``
+        or ``wpow == 0`` — IEEE pow), and the dispatch-time params
+        gathered per participant from the ring at slot
+        ``(t - tau) % window``."""
+        def fn(key, idx, tau, t, ring, params, server, clients):
+            kc, kb, kr = jax.random.split(key, 3)
+            del kc
+            # (1 + tau)^-wpow is exactly 1.0 whenever tau == 0 or
+            # wpow == 0 — but only a COMPILE-TIME constant folds like
+            # the sync path's jnp.ones (XLA simplifies constant-weight
+            # reductions differently, ~1 ulp), so the wpow == 0 case
+            # uses the literal constant
+            weights = (jnp.ones((s,), jnp.float32) if wpow == 0.0 else
+                       (1.0 + tau.astype(jnp.float32))
+                       ** jnp.float32(-wpow))
+            batches = bank.sample(kb, idx)
+            # window == 1 proves every tau is 0: the ring gather would be
+            # the identity, so elide it (pstack=None → the round closes
+            # over live params like the sync engine — load-bearing for
+            # the zero-staleness bitwise contract)
+            pstack = None if window == 1 else jax.tree.map(
+                lambda r: jnp.take(r, (t - tau) % window, axis=0), ring)
+            return round_impl(params, server, clients, batches, kr, idx,
+                              weights, tau, pstack)
+        return fn
+
+    def _scan_body_async(self, s, window, wpow, bank, round_impl):
+        """Scan body for buffered-async chunks.  The carry grows a
+        params RING (``[window, ...]`` per leaf): round ``t`` writes the
+        round-START params into slot ``t % window`` BEFORE the skip
+        cond — a round that flushes nothing still dispatched clients,
+        and they must later train against THESE params.  ``tau <=
+        window - 1`` (the schedule sized the ring) guarantees the slot
+        read back at flush time still holds round ``t - tau``'s
+        snapshot."""
+        fn = self._banked_body_async(round_impl, bank, s=s, window=window,
+                                     wpow=wpow)
+
+        def body(carry, xs):
+            key, cohort, tau, t = xs
+            p, sv, c, ring = carry
+            if window > 1:
+                # never read at window == 1 (the gather is elided), so
+                # skip the write too — keeps the zero-staleness scan
+                # body free of extra ops around the params leaves
+                ring = jax.tree.map(
+                    lambda r, x: jax.lax.dynamic_update_index_in_dim(
+                        r, x, t % window, 0), ring, p)
+
+            def live(args):
+                p0, sv0, c0 = args
+                p1, sv1, c1, m = fn(key, cohort, tau, t, ring, p0, sv0,
+                                    c0)
+                loss = m.get("client_loss", jnp.float32(jnp.nan)) \
+                    if isinstance(m, dict) else jnp.float32(jnp.nan)
+                return p1, sv1, c1, jnp.asarray(loss, jnp.float32)
+
+            p, sv, c, loss = jax.lax.cond(
+                cohort[0] >= 0, live,
+                lambda args: (*args, jnp.float32(jnp.nan)), (p, sv, c))
+            return (p, sv, c, ring), loss
+
+        return body
+
+    def _scan_chunk_async(self, round_impl, carry, keys, cohorts, stale,
+                          ts, bank, *, s: int, window: int, wpow: float):
+        body = self._scan_body_async(s, window, wpow, bank, round_impl)
+        (p, sv, c, ring), losses = jax.lax.scan(
+            body, carry, (keys, cohorts, stale, ts))
+        return p, sv, c, ring, losses
+
+    def _scan_rounds_async(self, params, server, clients, ring, keys,
+                           cohorts, stale, ts, bank, *, s: int,
+                           window: int, wpow: float):
+        """One compiled buffered-async chunk on the vmap engine.  ``ts``
+        carries ABSOLUTE round numbers so ring slots stay aligned across
+        chunk boundaries (the driver threads the ring through)."""
+        return self._scan_chunk_async(
+            self._round_async, (params, server, clients, ring), keys,
+            cohorts, stale, ts, bank, s=s, window=window, wpow=wpow)
+
+    def _scan_rounds_async_sharded(self, params, server, clients, ring,
+                                   keys, cohorts, stale, ts, bank, *,
+                                   s: int, window: int, wpow: float):
+        """Buffered-async chunk on the mesh engine: scan outside
+        shard_map, ring replicated (params-sized state is server-side),
+        per-round bucketing of cohort + staleness + stale params rows."""
+        return self._scan_chunk_async(
+            lambda p, sv, c, b, kr, idx, w, tau, ps:
+                self._sharded_round_async_impl(
+                    p, sv, c, b, kr, idx, w, tau, ps, s, bank.n_clients),
+            (params, server, clients, ring), keys, cohorts, stale, ts,
+            bank, s=s, window=window, wpow=wpow)
+
     def run_scanned(self, rng, rounds: int, *, sample_clients: int = 0,
                     eval_fn=None, eval_every: int = 1, cohorts=None):
         """Scan-compiled multi-round driver: chunks of ``eval_every``
@@ -748,7 +956,25 @@ class FedSim:
         supplied as ``cohorts`` — a host int array [rounds, S] of sorted
         unique ids per row (a row of all -1 is an empty cohort: that
         round is skipped, matching ``round()``'s short-circuit), e.g.
-        pre-drawn by a seeded numpy oracle.
+        pre-drawn by a seeded numpy oracle — or any
+        :class:`repro.fl.schedule.CohortSchedule` (seeded generators,
+        availability traces, :class:`~repro.fl.schedule.
+        BufferedSchedule`).  Everything resolves through
+        :func:`repro.fl.schedule.resolve`, which owns the shape /
+        dead-row / sortedness validation; the raw-array path is
+        bit-for-bit what it always was.
+
+        A schedule that carries STALENESS (``BufferedSchedule``) routes
+        to the buffered-async engine: same chunked ``lax.scan``, same
+        donation discipline, plus a donated params RING of
+        ``max(staleness)+1`` snapshots so each flushed report trains
+        against its dispatch-time params; aggregation weights damp as
+        ``(1+tau)^-weight_pow`` and mixers with a declared ``damping``
+        hook see ``Participation.staleness``.  At zero staleness
+        (``BufferedSchedule(delay=0, concurrency=goal)``) this
+        reproduces the synchronous engine BITWISE on the vmap engine
+        (fp32 mixing tolerance on the mesh engine) — the contract
+        tests/test_async.py enforces.
 
         params/server/clients are donated through each chunk (the client
         bank updates in place); per-chunk boundaries run ``eval_fn`` on
@@ -787,40 +1013,25 @@ class FedSim:
             raise ValueError(f"eval_every must be >= 1 (one chunk per "
                              f"eval); got {eval_every} — for no evals, "
                              f"pass eval_every=rounds and eval_fn=None")
-        if cohorts is not None:
-            cohorts = np.asarray(cohorts, np.int32)
-            if cohorts.ndim != 2 or cohorts.shape[0] != rounds:
-                raise ValueError(f"cohorts must be [rounds={rounds}, S]; "
-                                 f"got {cohorts.shape}")
-            s = int(cohorts.shape[1])
-            live = cohorts[cohorts[:, 0] >= 0]
-            dead = cohorts[cohorts[:, 0] < 0]
-            if live.size and (np.any(np.diff(live, axis=1) <= 0)
-                              or live.min() < 0 or live.max() >= self.n):
-                raise ValueError("cohort rows must be sorted unique ids in "
-                                 f"[0, {self.n}) (or all -1 for an empty "
-                                 "round)")
-            if dead.size and not np.all(dead == -1):
-                raise ValueError("an empty cohort row must be ALL -1 — a "
-                                 "row mixing -1 with real ids is ambiguous "
-                                 "(it would be silently skipped, not "
-                                 "partially trained)")
-            scheduled = True
-        else:
-            s = (sample_clients if 0 < sample_clients < self.n else self.n)
-            scheduled = False
+        plan = SCH.resolve(cohorts, rounds=rounds, n=self.n,
+                           sample_clients=sample_clients)
         k_init, keys = round_keys(rng, rounds)
         state = self.init(k_init)
         if self._paged:
-            return self._run_scanned_paged(state, keys, rounds, bank, s,
-                                           cohorts, eval_fn, eval_every)
+            return self._run_scanned_paged(state, keys, rounds, bank, plan,
+                                           eval_fn, eval_every)
+        if plan.is_async:
+            return self._run_scanned_async(state, keys, rounds, bank, plan,
+                                           eval_fn, eval_every)
+        s, scheduled = plan.s, plan.scheduled
         scan = (self._scan_sharded_jit if self.mesh is not None
                 else self._scan_jit)
         hist = {"round": [], "metric": [], "loss": []}
         t = 0
         while t < rounds:
             chunk = min(eval_every, rounds - t)
-            co = (jnp.asarray(cohorts[t:t + chunk]) if scheduled else None)
+            co = (jnp.asarray(plan.cohorts[t:t + chunk]) if scheduled
+                  else None)
             p, sv, c, losses = scan(state.params, state.server,
                                     state.clients, keys[t:t + chunk], co,
                                     bank, s=s, scheduled=scheduled)
@@ -832,8 +1043,43 @@ class FedSim:
                 hist["loss"].append(float(losses[-1]))
         return state, hist
 
+    def _make_ring(self, params, window: int):
+        """The params ring: ``window`` snapshot slots per leaf,
+        initialized by repeating the starting params (never read before
+        round ``t`` writes slot ``t % window`` — staleness <= t is
+        validated by the schedule).  Replicated on the mesh engine."""
+        ring = jax.tree.map(lambda x: jnp.repeat(x[None], window, axis=0),
+                            params)
+        if self.mesh is not None:
+            ring = self._sharded.replicate(self.mesh, ring)
+        return ring
+
+    def _run_scanned_async(self, state: FedState, keys, rounds: int, bank,
+                           plan, eval_fn, eval_every: int):
+        """Resident buffered-async driver: the sync chunk loop plus a
+        params ring threaded (donated) through the chunks, absolute
+        round numbers riding along so ring slots stay aligned."""
+        ring = self._make_ring(state.params, plan.window)
+        hist = {"round": [], "metric": [], "loss": []}
+        t = 0
+        while t < rounds:
+            chunk = min(eval_every, rounds - t)
+            p, sv, c, ring, losses = self._scan_async_jit(
+                state.params, state.server, state.clients, ring,
+                keys[t:t + chunk], jnp.asarray(plan.cohorts[t:t + chunk]),
+                jnp.asarray(plan.staleness[t:t + chunk]),
+                jnp.arange(t, t + chunk, dtype=jnp.int32), bank,
+                s=plan.s, window=plan.window, wpow=plan.weight_pow)
+            t += chunk
+            state = FedState(params=p, server=sv, clients=c, round=t)
+            if eval_fn is not None:
+                hist["round"].append(t - 1)
+                hist["metric"].append(float(eval_fn(state.params)))
+                hist["loss"].append(float(losses[-1]))
+        return state, hist
+
     def _run_scanned_paged(self, state: FedState, keys, rounds: int, bank,
-                           s: int, cohorts, eval_fn, eval_every: int):
+                           plan, eval_fn, eval_every: int):
         """The out-of-core half of :meth:`run_scanned`.
 
         Host side per chunk: plan the union of the chunk's cohorts padded
@@ -847,7 +1093,15 @@ class FedSim:
         state write-back blocks, double-buffering the copy under compute;
         state rows cannot prefetch (the current chunk may still write
         them).
+
+        Buffered-async plans compose with paging unchanged: a chunk's
+        union is simply the union of its FLUSH rows (``plan_chunk``
+        dedupes overlapping cohorts via ``np.unique``), the remapped
+        local rows keep their -1 markers, staleness needs no remapping
+        (it is per-report, not per-row-id), and the params ring is
+        server-side state — untouched by client paging.
         """
+        s, cohorts = plan.s, plan.cohorts
         if cohorts is None:
             if s == self.n:
                 # full participation: every round's cohort is [0, N)
@@ -865,6 +1119,8 @@ class FedSim:
             t += chunk
         scan = (self._scan_sharded_jit if self.mesh is not None
                 else self._scan_jit)
+        ring = (self._make_ring(state.params, plan.window)
+                if plan.is_async else None)
         sh = self._stage_sh
         hist = {"round": [], "metric": [], "loss": []}
         bank.prefetch(plans[0][1], sharding=sh)
@@ -872,10 +1128,19 @@ class FedSim:
         for i, (chunk, union, n_live, local) in enumerate(plans):
             staged_bank = bank.gather(union, sharding=sh)
             staged_clients = store.gather(union, sharding=sh)
-            p, sv, c, losses = scan(state.params, state.server,
-                                    staged_clients, keys[t:t + chunk],
-                                    jnp.asarray(local), staged_bank,
-                                    s=s, scheduled=True)
+            if plan.is_async:
+                p, sv, c, ring, losses = self._scan_async_jit(
+                    state.params, state.server, staged_clients, ring,
+                    keys[t:t + chunk], jnp.asarray(local),
+                    jnp.asarray(plan.staleness[t:t + chunk]),
+                    jnp.arange(t, t + chunk, dtype=jnp.int32),
+                    staged_bank, s=s, window=plan.window,
+                    wpow=plan.weight_pow)
+            else:
+                p, sv, c, losses = scan(state.params, state.server,
+                                        staged_clients, keys[t:t + chunk],
+                                        jnp.asarray(local), staged_bank,
+                                        s=s, scheduled=True)
             if i + 1 < len(plans):
                 # dispatch the NEXT chunk's data staging before blocking
                 # on this chunk's write-back: the copy rides under compute

@@ -117,6 +117,13 @@ def plan_chunk(rows: np.ndarray, cap: int):
       == rows`` elementwise on live entries; -1 rows stay -1), still
       sorted unique per live row, so the staged chunk replays the exact
       cohort schedule against the ``[cap, ...]`` staged bank.
+
+    Buffered-async chunks (``repro.fl.schedule.BufferedSchedule``) have
+    OVERLAPPING cohorts — the same client can flush in several rounds of
+    one chunk.  ``np.unique`` collapses the overlap, so each client is
+    staged once and every flush round remaps onto the same staged row;
+    the in-scan scatter then applies the rounds in order, exactly like
+    the resident bank.
     """
     rows = np.asarray(rows)
     live = rows >= 0

@@ -25,7 +25,8 @@ import numpy as np
 import pytest
 
 from repro.core import api
-from repro.core.algorithms import ALGORITHMS, HParams, get_algorithm
+from repro.core.algorithms import (ALGORITHMS, HParams, Participation,
+                                   get_algorithm)
 from repro.data import (FederatedDataset, make_clustered_classification,
                         make_libsvm_like)
 from repro.data.federated import build_round_batches
@@ -131,7 +132,8 @@ def test_hparam_declarations_cover_all_reads(name, convex, dnn):
                   weight_decay=0.0123, momentum=0.77, server_lr=0.55,
                   prox_mu=0.031, beta1=0.81, beta2=0.87, tau=0.0271,
                   sketch=17, inverse_method="ns", ns_iters=7,
-                  foof_timing="start", sophia_gamma=0.09, lr=0.0917)
+                  foof_timing="start", sophia_gamma=0.09, lr=0.0917,
+                  stale_decay=0.321)
     declared = set(algo.hparams)
     hp_poisoned = dataclasses.replace(
         hp, **{k: v for k, v in poison.items() if k not in declared})
@@ -139,6 +141,44 @@ def test_hparam_declarations_cover_all_reads(name, convex, dnn):
     st, _ = _one_round(task, algo, hp, batches)
     st_p, _ = _one_round(task, algo, hp_poisoned, batches)
     _assert_states_equal(st, st_p, tag=name)
+
+
+@pytest.mark.parametrize("name", sorted(ALGORITHMS))
+def test_staleness_poison_only_declared_damping_reacts(name, convex, dnn):
+    """``Participation.staleness`` is governed by the SAME declared-hook
+    discipline as hparams: a mixer without a ``ServerMixer.damping``
+    declaration must be bitwise blind to staleness (poisoning it changes
+    nothing), and a mixer WITH the declaration must react to it.  A
+    mixer that reads ``part.staleness`` without declaring the hook fails
+    the blind half of this sweep."""
+    algo = ALGORITHMS[name]
+    task, batches, hp = _setup_for(algo, convex, dnn)
+    sim = FedSim(task, algo, hp, N)
+    st = sim.init(jax.random.PRNGKey(0))
+    idx = np.asarray(PARTICIPANTS)
+    gathered = jax.tree.map(lambda x: x[idx], st.clients)
+    cb = jax.tree.map(lambda x: x[idx], batches)
+    rngs = jax.random.split(jax.random.PRNGKey(1), idx.shape[0])
+    msgs, _ = jax.vmap(
+        lambda cs, b, r: algo.client(task, hp, st.params, cs, st.server,
+                                     b, r))(gathered, cb, rngs)
+    w = jnp.ones((idx.shape[0],), jnp.float32)
+
+    def srv(stale):
+        part = Participation(weights=w, n_total=N, staleness=stale)
+        return algo.server(task, hp, st.params, st.server, msgs, part)
+
+    base = srv(None)
+    poisoned = srv(jnp.array([3, 0, 7, 1], jnp.int32))
+    leaves = list(zip(jax.tree.leaves(base), jax.tree.leaves(poisoned)))
+    if algo.mixer.damping is None:
+        for x, y in leaves:
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                          err_msg=name)
+    else:
+        assert any(not np.array_equal(np.asarray(x), np.asarray(y))
+                   for x, y in leaves), \
+            f"{name}: declared damping hook ignored staleness"
 
 
 def test_registry_validation_errors():

@@ -1,0 +1,385 @@
+"""Buffered-async round contracts (ISSUE 8):
+
+* ``CohortSchedule`` protocol: raw-array path ≡ ``ArraySchedule`` path
+  BIT-FOR-BIT; seeded generators and registered availability traces all
+  produce one valid host array; the shape / dead-row / sortedness
+  validation lives in ``repro.fl.schedule`` (one contract for every
+  consumer);
+* ``BufferedSchedule`` event process: FIFO buffer fills and flushes at
+  exactly ``goal`` reports, staleness = flush round − dispatch round, a
+  flush row never repeats an id (a client is busy until it reports), and
+  ``resolve`` sizes the params ring at max staleness + 1;
+* the HARD equivalence contract: zero-staleness async (``delay=0,
+  concurrency == goal``) reproduces the synchronous engine BITWISE on
+  the vmap engine — params, server, the whole client bank — and to fp32
+  mixing tolerance on the 8-fake-device mesh engine (subprocess);
+* non-reporting clients are untouched: a client never flushed keeps its
+  init state row bitwise;
+* paged client/data banks compose with the async engine bitwise vs the
+  resident async run;
+* the ``bucket_cohort`` mis-bucketing bug: unsorted cohort rows silently
+  DROP participants in-graph (slot collisions), so unsorted explicit
+  schedules are rejected at the host boundary with a clear error.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.algorithms import HParams
+from repro.data import FederatedDataset, make_clustered_classification
+from repro.fl import schedule as SCH
+from repro.fl.sharded import bucket_cohort
+from repro.fl.simulate import FedSim, round_keys
+from repro.fl.tasks import DNNTask
+from repro.models.simple import MLPModel
+
+N, R = 8, 6
+
+
+@pytest.fixture(scope="module")
+def task():
+    data = make_clustered_classification(1200, 16, 4, seed=0)
+    ds = FederatedDataset.from_arrays(data, N, alpha=0.5, seed=0)
+    return DNNTask(MLPModel(in_dim=16, hidden=(32,), num_classes=4)
+                   ).with_data(ds.device_bank(steps=2, batch=16))
+
+
+@pytest.fixture(scope="module")
+def ds():
+    data = make_clustered_classification(1200, 16, 4, seed=0)
+    return FederatedDataset.from_arrays(data, N, alpha=0.5, seed=0)
+
+
+def _assert_states_equal(a, b, tag=""):
+    ca = a.clients.bank if hasattr(a.clients, "bank") else a.clients
+    cb = b.clients.bank if hasattr(b.clients, "bank") else b.clients
+    for name, x, y in (("params", a.params, b.params),
+                       ("server", a.server, b.server),
+                       ("clients", ca, cb)):
+        for u, v in zip(jax.tree.leaves(x), jax.tree.leaves(y)):
+            np.testing.assert_array_equal(np.asarray(u), np.asarray(v),
+                                          err_msg=f"{tag}:{name}")
+
+
+# ------------------------------------------------ schedule validation ----
+
+def test_validate_cohorts_contract():
+    good = np.array([[0, 2, 5], [-1, -1, -1], [1, 3, 7]], np.int32)
+    out = SCH.validate_cohorts(good, 3, N)
+    np.testing.assert_array_equal(out, good)
+    with pytest.raises(ValueError, match="rounds"):
+        SCH.validate_cohorts(good, 4, N)
+    with pytest.raises(ValueError, match="sorted unique"):
+        SCH.validate_cohorts([[5, 0, 2]], 1, N)          # unsorted
+    with pytest.raises(ValueError, match="sorted unique"):
+        SCH.validate_cohorts([[0, 2, 2]], 1, N)          # duplicate
+    with pytest.raises(ValueError, match="sorted unique"):
+        SCH.validate_cohorts([[0, 2, 8]], 1, N)          # out of range
+    with pytest.raises(ValueError, match="ALL -1"):
+        SCH.validate_cohorts([[-1, 3, 5]], 1, N)         # mixed dead row
+
+
+def test_validate_staleness_contract():
+    cohorts = np.array([[0, 2], [1, 3], [-1, -1]], np.int32)
+    taus = np.array([[0, 0], [1, 0], [0, 0]], np.int32)
+    np.testing.assert_array_equal(
+        SCH.validate_staleness(taus, cohorts), taus)
+    with pytest.raises(ValueError, match="shape"):
+        SCH.validate_staleness(np.zeros((3, 3), np.int32), cohorts)
+    with pytest.raises(ValueError, match="0 <= tau <= t"):
+        SCH.validate_staleness(np.array([[0, -1], [0, 0], [0, 0]]),
+                               cohorts)
+    with pytest.raises(ValueError, match="0 <= tau <= t"):  # predates run
+        SCH.validate_staleness(np.array([[1, 0], [0, 0], [0, 0]]),
+                               cohorts)
+
+
+def test_resolve_plans():
+    # None -> in-graph sampling plan, not scheduled, not async
+    plan = SCH.resolve(None, rounds=4, n=N, sample_clients=3)
+    assert (plan.cohorts is None and not plan.scheduled
+            and not plan.is_async and plan.s == 3)
+    # raw array -> scheduled sync plan
+    raw = np.array([[0, 2, 5]] * 4, np.int32)
+    plan = SCH.resolve(raw, rounds=4, n=N)
+    assert plan.scheduled and not plan.is_async and plan.s == 3
+    # buffered -> async plan, window = max live staleness + 1
+    sched = SCH.BufferedSchedule(goal=3, concurrency=6, delay=(1, 3),
+                                 seed=2, weight_pow=0.5)
+    rows, taus = sched.build(N, 8)
+    plan = SCH.resolve(sched, rounds=8, n=N)
+    live = rows[:, 0] >= 0
+    assert plan.is_async
+    assert plan.window == int(taus[live].max()) + 1
+    assert plan.weight_pow == 0.5
+    np.testing.assert_array_equal(plan.cohorts, rows)
+    np.testing.assert_array_equal(plan.staleness, taus)
+
+
+# -------------------------------------------------- schedule builders ----
+
+def test_sampled_schedule_valid_and_deterministic():
+    a = SCH.SampledSchedule(s=3, seed=7).build(N, 5)
+    b = SCH.SampledSchedule(s=3, seed=7).build(N, 5)
+    np.testing.assert_array_equal(a, b)
+    SCH.validate_cohorts(a, 5, N)
+    assert (a >= 0).all()
+    with pytest.raises(ValueError, match="0 < s <= n"):
+        SCH.SampledSchedule(s=9).build(N, 5)
+
+
+@pytest.mark.parametrize("name,kw", [("diurnal", dict(period=6)),
+                                     ("dropout_midround",
+                                      dict(drop_prob=0.4))])
+def test_traces_produce_valid_schedules(name, kw):
+    rows = SCH.trace(name, 5, seed=3, **kw).build(N, 24)
+    SCH.validate_cohorts(rows, 24, N)       # sorted unique or all -1
+    live = rows[:, 0] >= 0
+    assert live.any(), "trace produced no live rounds"
+    assert (~live).any(), f"{name} never lost quorum at these settings"
+
+
+def test_trace_unknown_name():
+    with pytest.raises(ValueError, match="unknown trace"):
+        SCH.trace("nope", 4)
+
+
+def test_buffered_schedule_event_process():
+    goal, conc, delay, rounds = 3, 6, 2, 12
+    rows, taus = SCH.BufferedSchedule(goal=goal, concurrency=conc,
+                                      delay=delay, seed=0).build(N, rounds)
+    SCH.validate_cohorts(rows, rounds, N)
+    SCH.validate_staleness(taus, rows)
+    live = rows[:, 0] >= 0
+    # nothing can report before `delay` rounds have passed
+    assert not live[:delay].any()
+    # first arrivals: all `conc` dispatches land at t=delay; the buffer
+    # flushes at most one goal-sized batch per round, so t=delay and
+    # t=delay+1 both flush (conc = 2*goal reports queued FIFO)
+    assert live[delay] and live[delay + 1]
+    np.testing.assert_array_equal(taus[delay], delay)
+    np.testing.assert_array_equal(taus[delay + 1], delay + 1)
+    # a flush row never repeats an id, and a client is busy from
+    # dispatch to flush: replay busy intervals from the tau record
+    for t in np.flatnonzero(live):
+        ids = rows[t]
+        assert len(set(ids.tolist())) == goal
+    busy_until = np.full(N, -1)
+    for t in np.flatnonzero(live):
+        for c, tau in zip(rows[t], taus[t]):
+            t0 = t - tau
+            assert t0 > busy_until[c], \
+                f"client {c} re-dispatched at {t0} while busy"
+            busy_until[c] = t
+
+
+def test_buffered_schedule_zero_delay_degenerates():
+    rows, taus = SCH.BufferedSchedule(goal=3, concurrency=3, delay=0,
+                                      seed=1).build(N, R)
+    assert (rows >= 0).all(), "every round flushes a fresh cohort"
+    assert (taus == 0).all()
+    assert SCH.resolve(SCH.BufferedSchedule(goal=3, concurrency=3,
+                                            delay=0, seed=1),
+                       rounds=R, n=N).window == 1
+
+
+def test_buffered_schedule_validation():
+    with pytest.raises(ValueError, match="goal"):
+        SCH.BufferedSchedule(goal=0, concurrency=3).build(N, 4)
+    with pytest.raises(ValueError, match="never reach"):
+        SCH.BufferedSchedule(goal=4, concurrency=3).build(N, 4)
+    with pytest.raises(ValueError, match="population"):
+        SCH.BufferedSchedule(goal=3, concurrency=9).build(N, 4)
+    with pytest.raises(ValueError, match="delay"):
+        SCH.BufferedSchedule(goal=3, concurrency=3,
+                             delay=(2, 1)).build(N, 4)
+
+
+# ----------------------------------- bucket_cohort mis-bucketing (bug) ----
+
+def test_bucket_cohort_unsorted_misbuckets():
+    """The in-graph rank-within-shard slot math silently DROPS a
+    participant when the cohort is unsorted (slot collision overwrites a
+    bucket entry) — the reason unsorted explicit schedules are rejected
+    at the host boundary instead of 'fixed' in-graph."""
+    ones = jnp.ones((4,), jnp.float32)
+    _, _, w_ok = bucket_cohort(jnp.array([0, 1, 6, 7]), ones, N, 4)
+    assert float(w_ok.sum()) == 4.0          # all four weights survive
+    _, _, w_bad = bucket_cohort(jnp.array([0, 6, 1, 7]), ones, N, 4)
+    assert float(w_bad.sum()) < 4.0          # collision lost reports
+
+
+def test_unsorted_explicit_schedule_rejected(task):
+    sim = FedSim(task, "fedavg", HParams(lr=0.1), N)
+    bad = np.array([[5, 0, 2]] * R, np.int32)
+    with pytest.raises(ValueError, match="sorted unique"):
+        sim.run_scanned(jax.random.PRNGKey(0), R, cohorts=bad)
+
+
+# ------------------------------------------------- engine equivalences ----
+
+def test_array_schedule_matches_raw_array_bitwise(task):
+    raw = SCH.SampledSchedule(s=3, seed=5).build(N, R)
+    rng = jax.random.PRNGKey(3)
+    st_raw, _ = FedSim(task, "fedpm_foof", HParams(lr=0.1), N).run_scanned(
+        rng, R, cohorts=raw, eval_every=2)
+    st_sch, _ = FedSim(task, "fedpm_foof", HParams(lr=0.1), N).run_scanned(
+        rng, R, cohorts=SCH.ArraySchedule(raw), eval_every=2)
+    _assert_states_equal(st_raw, st_sch, tag="array-schedule")
+
+
+@pytest.mark.parametrize("algo", ["fedavg", "scaffold", "fedpm_foof"])
+def test_zero_staleness_async_is_sync_bitwise(task, algo):
+    """THE contract: delay=0, concurrency == goal makes every round a
+    fresh zero-staleness cohort, and the async engine must then
+    reproduce the synchronous engine bitwise — params, server state and
+    the whole client bank."""
+    sched = SCH.BufferedSchedule(goal=3, concurrency=3, delay=0, seed=1)
+    rows, taus = sched.build(N, R)
+    assert (taus[rows >= 0] == 0).all()
+    rng = jax.random.PRNGKey(7)
+    hp = HParams(lr=0.1)
+    st_a, _ = FedSim(task, algo, hp, N).run_scanned(
+        rng, R, cohorts=sched, eval_every=2)
+    st_s, _ = FedSim(task, algo, hp, N).run_scanned(
+        rng, R, cohorts=rows, eval_every=2)
+    _assert_states_equal(st_a, st_s, tag=algo)
+
+
+def test_stale_run_finite_and_staleness_matters(task):
+    """A genuinely stale run (delay > 0) stays finite, and staleness is
+    LOAD-BEARING: the same cohort rows with their true staleness produce
+    a different trajectory than the sync engine pretending the reports
+    are fresh (params ring + damping hook engaged)."""
+    sched = SCH.BufferedSchedule(goal=3, concurrency=6, delay=(1, 3),
+                                 seed=2, weight_pow=0.5)
+    rows, taus = sched.build(N, R + 2)
+    assert taus[rows >= 0].max() > 0
+    rng = jax.random.PRNGKey(7)
+    hp = HParams(lr=0.1)
+    st_a, _ = FedSim(task, "fedpm_foof", hp, N).run_scanned(
+        rng, R + 2, cohorts=sched)
+    for x in jax.tree.leaves(st_a.params):
+        assert np.isfinite(np.asarray(x)).all()
+    st_s, _ = FedSim(task, "fedpm_foof", hp, N).run_scanned(
+        rng, R + 2, cohorts=rows)
+    diff = max(float(np.abs(np.asarray(x) - np.asarray(y)).max())
+               for x, y in zip(jax.tree.leaves(st_a.params),
+                               jax.tree.leaves(st_s.params)))
+    assert diff > 0
+
+
+def test_nonreporting_clients_untouched(task):
+    """A client that never flushes keeps its init state row bitwise —
+    in-flight and never-dispatched clients alike are spectators to every
+    flush round's scatter."""
+    sched = SCH.BufferedSchedule(goal=2, concurrency=2, delay=(1, 2),
+                                 seed=4)
+    rows, _ = sched.build(N, R)
+    reported = np.unique(rows[rows >= 0])
+    silent = np.setdiff1d(np.arange(N), reported)
+    assert silent.size, "seed produced full participation; pick another"
+    rng = jax.random.PRNGKey(9)
+    sim = FedSim(task, "scaffold", HParams(lr=0.1), N)
+    k_init, _ = round_keys(rng, R)
+    init_rows = jax.tree.map(lambda x: np.asarray(x)[silent],
+                             sim.init(k_init).clients)
+    st, _ = FedSim(task, "scaffold", HParams(lr=0.1), N).run_scanned(
+        rng, R, cohorts=sched)
+    for x, y in zip(jax.tree.leaves(init_rows),
+                    jax.tree.leaves(jax.tree.map(
+                        lambda x: np.asarray(x)[silent], st.clients))):
+        np.testing.assert_array_equal(x, y, err_msg="silent client moved")
+
+
+def test_paged_async_matches_resident_async(ds):
+    """Host-paged client/data banks compose with the buffered-async
+    engine: same trajectory bitwise as the resident async run (the
+    chunk union dedups the overlapping cohorts — see
+    ``repro.fl.store.plan_chunk``)."""
+    base = DNNTask(MLPModel(in_dim=16, hidden=(32,), num_classes=4))
+    res = base.with_data(ds.device_bank(steps=2, batch=16))
+    pag = base.with_data(ds.paged_bank(steps=2, batch=16))
+    sched = SCH.BufferedSchedule(goal=3, concurrency=6, delay=(1, 3),
+                                 seed=2, weight_pow=0.5)
+    rng = jax.random.PRNGKey(7)
+    hp = HParams(lr=0.1)
+    st_r, _ = FedSim(res, "fedpm_foof", hp, N).run_scanned(
+        rng, R + 2, cohorts=sched, eval_every=4)
+    st_p, _ = FedSim(pag, "fedpm_foof", hp, N).run_scanned(
+        rng, R + 2, cohorts=sched, eval_every=4)
+    _assert_states_equal(st_r, st_p, tag="paged-async")
+
+
+# ------------------------------------------- sharded engine (8 devices) ----
+
+ASYNC_SHARDED_SCRIPT = r'''
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys; sys.path.insert(0, "src")
+import jax, jax.numpy as jnp, numpy as np
+from repro.core.algorithms import HParams
+from repro.data import FederatedDataset, make_clustered_classification
+from repro.fl.simulate import FedSim
+from repro.fl.sharded import make_client_mesh
+from repro.fl.tasks import DNNTask
+from repro.models.simple import MLPModel
+from repro.fl import schedule as SCH
+
+assert jax.device_count() == 8
+mesh = make_client_mesh()
+N, R, S = 16, 6, 4
+data = make_clustered_classification(1600, 16, 4, seed=0)
+ds = FederatedDataset.from_arrays(data, N, alpha=0.5, seed=0)
+task = DNNTask(MLPModel(in_dim=16, hidden=(32,), num_classes=4)
+               ).with_data(ds.device_bank(steps=2, batch=16))
+hp = HParams(lr=0.1)
+
+def close(a, b, tag):
+    for name in ("params", "server", "clients"):
+        for u, v in zip(jax.tree.leaves(getattr(a, name)),
+                        jax.tree.leaves(getattr(b, name))):
+            np.testing.assert_allclose(np.asarray(u), np.asarray(v),
+                                       rtol=2e-6, atol=2e-6,
+                                       err_msg=f"{tag}:{name}")
+
+sched = SCH.BufferedSchedule(goal=S, concurrency=S, delay=0, seed=1)
+rows, taus = sched.build(N, R)
+assert (np.asarray(taus)[np.asarray(rows) >= 0] == 0).all()
+rng = jax.random.PRNGKey(7)
+for alg in ["scaffold", "fedpm_foof"]:
+    st_a, _ = FedSim(task, alg, hp, N, mesh=mesh).run_scanned(
+        rng, R, cohorts=sched, eval_every=3)
+    st_s, _ = FedSim(task, alg, hp, N, mesh=mesh).run_scanned(
+        rng, R, cohorts=rows, eval_every=3)
+    close(st_a, st_s, alg)
+print("ASYNC-SHARDED-EQUIV-OK")
+
+stale = SCH.BufferedSchedule(goal=S, concurrency=8, delay=(1, 3), seed=2,
+                             weight_pow=0.5)
+srows, staus = stale.build(N, R)
+assert np.asarray(staus)[np.asarray(srows) >= 0].max() > 0
+st, _ = FedSim(task, "fedpm_foof", hp, N, mesh=mesh).run_scanned(
+    rng, R, cohorts=stale)
+for x in jax.tree.leaves(st.params):
+    assert np.isfinite(np.asarray(x)).all()
+print("ASYNC-SHARDED-STALE-OK")
+print("OK")
+'''
+
+
+def test_sharded_async_contracts():
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run([sys.executable, "-c", ASYNC_SHARDED_SCRIPT],
+                         cwd=os.path.join(os.path.dirname(__file__), ".."),
+                         capture_output=True, text=True, env=env,
+                         timeout=600)
+    assert res.returncode == 0, res.stderr[-3000:]
+    for marker in ("ASYNC-SHARDED-EQUIV-OK", "ASYNC-SHARDED-STALE-OK"):
+        assert marker in res.stdout, (marker, res.stdout)
