@@ -16,11 +16,12 @@ solve, adaptive Newton–Schulz, fused Eq. 12 mixing — the three
 sharded-vs-vmap engine comparison on a forced 8-device host mesh, the
 scanned-vs-per-round dispatch ratio, the paged-vs-resident ClientStore
 overhead and exact staged-bytes ratios, the buffered-async-vs-sync
-``async_overhead`` ratio, and the comm-bytes
+``async_overhead`` ratio, the fault-quarantine ``fault_overhead``
+ratio, and the comm-bytes
 wire-transform on/off ratios — and serializes every emitted row plus
-machine-independent gate RATIOS to ``BENCH_pr8.json``.
+machine-independent gate RATIOS to ``BENCH_pr9.json``.
 ``benchmarks.bench_gate`` compares those
-ratios against the checked-in ``benchmarks/baseline_pr8.json`` and
+ratios against the checked-in ``benchmarks/baseline_pr9.json`` and
 fails tier-1 on >25% regressions (scripts/ci.sh wires both up; the
 N ≥ 10⁵ paged scale smoke runs as its OWN ci.sh stage —
 ``python -m benchmarks.bench_paging --scale`` in a fresh process, so
@@ -118,6 +119,12 @@ _GATE_SPECS = {
     # fusing into the scanned round body)
     "async_overhead": (
         "async/scanned/buffered", "async/scanned/sync", "higher", "async"),
+    # fault-quarantined scanned engine (zero-fault FaultModel) vs the
+    # plain scanned engine on the identical schedule (a blow-up means the
+    # validity/sanitize pass stopped fusing into the scanned round body)
+    "fault_overhead": (
+        "faults/scanned/quarantined", "faults/scanned/plain", "higher",
+        "faults"),
 }
 
 
@@ -148,9 +155,9 @@ def _median_gates(samples: list[dict]) -> dict:
             for k, vs in merged.items()}
 
 
-def smoke(out_path: str = "BENCH_pr8.json") -> int:
+def smoke(out_path: str = "BENCH_pr9.json") -> int:
     from benchmarks import (bench_async, bench_comm, bench_cost,
-                            bench_local_epochs, bench_paging,
+                            bench_faults, bench_local_epochs, bench_paging,
                             bench_roofline, bench_sampling, bench_scan)
     from benchmarks.common import RECORDS, dnn_setup
 
@@ -177,6 +184,11 @@ def smoke(out_path: str = "BENCH_pr8.json") -> int:
     for _ in range(2):
         failed += _run([("async", bench_async.churn)])
         samples.append(_gates(RECORDS, "async"))
+    # fault-quarantined vs plain scanned engine, plus the
+    # convergence-under-failure assert (counters exact, loss falls)
+    for _ in range(2):
+        failed += _run([("faults", bench_faults.smoke_section)])
+        samples.append(_gates(RECORDS, "faults"))
     # gate rows re-measured at default (non-smoke) sizes — the tiny smoke
     # shapes don't separate packed from per-leaf reliably — with the gate
     # ratio sampled per repetition and median-merged (see _GATE_SPECS)
@@ -198,7 +210,7 @@ def smoke(out_path: str = "BENCH_pr8.json") -> int:
     # repeating it would blow the ci.sh stage budget); its rows are
     # already steady-state means over 8 post-compile reps, and the
     # checked-in baselines carry the sharded family's wider noise
-    # envelope (see benchmarks/baseline_pr8.json meta)
+    # envelope (see benchmarks/baseline_pr9.json meta)
     failed += _run([("sharded", lambda: bench_sampling.sharded(reps=8))])
     samples.append(_gates(RECORDS, "sharded"))
 
@@ -215,9 +227,10 @@ def main() -> None:
     if "--smoke" in sys.argv:
         sys.exit(smoke())
     from benchmarks import (bench_async, bench_comm, bench_convex,
-                            bench_cost, bench_dnn, bench_femnist,
-                            bench_foof_samples, bench_local_epochs,
-                            bench_paging, bench_profiling, bench_roofline,
+                            bench_cost, bench_dnn, bench_faults,
+                            bench_femnist, bench_foof_samples,
+                            bench_local_epochs, bench_paging,
+                            bench_profiling, bench_roofline,
                             bench_sampling, bench_scan)
     print("name,us_per_call,derived")
     failed = _run([
@@ -231,6 +244,7 @@ def main() -> None:
         ("cost", bench_cost.main),
         ("scan", bench_scan.main),
         ("async", bench_async.main),
+        ("faults", bench_faults.main),
         ("paging", bench_paging.main),
         ("profiling", bench_profiling.main),
         ("roofline", bench_roofline.main),

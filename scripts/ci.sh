@@ -6,7 +6,7 @@
 #                      skipped with --fast (local pre-commit use)
 #   2. pytest          ROADMAP tier-1 command + JUnit XML for the
 #                      workflow's test-report annotation (CI_JUNIT path)
-#   3. bench smoke     benchmarks.run --smoke writes BENCH_pr8.json; its
+#   3. bench smoke     benchmarks.run --smoke writes BENCH_pr9.json; its
 #       + gate         first stage is the interpret-mode kernel smoke
 #                      (every Pallas path: gram, NS inverse, fused
 #                      invert-and-apply, bank), then the gate rows
@@ -16,7 +16,7 @@
 #                      staged-bytes, sharded-vs-vmap on a forced 8-device
 #                      host mesh); benchmarks.bench_gate fails tier-1 on
 #                      >25% ratio regressions vs the checked-in
-#                      benchmarks/baseline_pr8.json.
+#                      benchmarks/baseline_pr9.json.
 #                      CI_SKIP_BENCH_GATE=1 replaces this with the bare
 #                      kernel smoke (benchmarks.bench_cost --smoke).
 #   4. paged scale     benchmarks.bench_paging --scale in a FRESH process
@@ -77,8 +77,8 @@ if [[ "${CI_SKIP_BENCH_GATE:-0}" != 1 ]]; then
     run_stage bench-smoke "${CI_BENCH_TIMEOUT:-1500}" \
         python -m benchmarks.run --smoke
     run_stage bench-gate 120 \
-        python -m benchmarks.bench_gate BENCH_pr8.json \
-            benchmarks/baseline_pr8.json --tol 0.25
+        python -m benchmarks.bench_gate BENCH_pr9.json \
+            benchmarks/baseline_pr9.json --tol 0.25
     run_stage paged-scale "${CI_PAGED_TIMEOUT:-600}" \
         python -m benchmarks.bench_paging --scale
 else

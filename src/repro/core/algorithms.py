@@ -109,7 +109,7 @@ class HParams:
     beta2: float = 0.99
     tau: float = 1e-3               # fedadam ε
     sketch: int = 0                 # fedns sketch size (0 → d)
-    inverse_method: str = "cholesky"  # cholesky | ns | pallas_ns | pallas_chol
+    inverse_method: str = "cholesky"  # cholesky | cholesky_safe | ns | pallas_ns | pallas_chol
     ns_iters: int = 20
     foof_timing: str = "end"        # grams at round "end" (paper trick) | "start"
     sophia_gamma: float = 0.05
@@ -174,17 +174,33 @@ def _wmean(tree_stack: PyTree, part: Participation) -> PyTree:
     ONE psum, so no device ever materializes the full [S] stack.  This is
     also the engines' ``client_loss`` metric aggregation — both the vmap
     and sharded metric paths go through here.
+
+    ALL-MASKED GUARD: when every weight is zero (the fault-quarantine
+    engine's fully-rejected round) the weighted mean is 0/0 — instead of
+    the epsilon-floored zeros (or NaN) this falls back to the UNWEIGHTED
+    mean of the stack, on both the vmap and psum paths.  The normal path
+    is value-identical to the historical code (the select picks the same
+    ``num / max(den, eps)`` quotient bit-for-bit); on the sharded engine
+    the fallback's unweighted mean includes zero-weight PADDING slots —
+    acceptable by contract, because an all-masked round's aggregates are
+    only ever consumed after the engine's alive-select discards them.
     """
     wf = part.weights.astype(jnp.float32)
     num = jax.tree.map(
         lambda x: jnp.tensordot(wf, x.astype(jnp.float32), axes=1),
         tree_stack)
     den = jnp.sum(wf)
+    num0 = jax.tree.map(
+        lambda x: jnp.sum(x.astype(jnp.float32), axis=0), tree_stack)
+    cnt = jnp.float32(wf.shape[0])
     if part.axes:
-        num, den = jax.lax.psum((num, den), part.axes)
-    den = jnp.maximum(den, 1e-12)
-    return jax.tree.map(lambda n, x: (n / den).astype(x.dtype),
-                        num, tree_stack)
+        num, den, num0, cnt = jax.lax.psum((num, den, num0, cnt),
+                                           part.axes)
+    deng = jnp.maximum(den, 1e-12)
+    return jax.tree.map(
+        lambda n, n0, x: jnp.where(den > 0, n / deng,
+                                   n0 / cnt).astype(x.dtype),
+        num, num0, tree_stack)
 
 
 def batches_len(batches) -> int:

@@ -439,6 +439,30 @@ def _compose_server(mixer: ServerMixer, wire: WireTransform | None
     return server
 
 
+def decode_msgs(algo: Algorithm, msgs, params) -> Any:
+    """Apply ``algo``'s wire decode to a participant-stacked message —
+    the server-side half of the wire boundary, exposed for engines that
+    need to SEE the decoded message before mixing (the fault-quarantine
+    round validates reports after decode, then calls
+    :func:`mix_decoded`).  Identity when the registration carries no
+    wire transform."""
+    if algo.wire is not None:
+        return algo.wire.decode(msgs, params)
+    return msgs
+
+
+def mix_decoded(algo: Algorithm, task, hp, params, sstate, msgs, part):
+    """Run ``algo``'s server aggregation on an ALREADY-DECODED message
+    stack.  ``algo.server`` cannot be used for this — the composed
+    server decodes internally, and a second decode is not idempotent for
+    every transform (top-k would walk dense leaves expecting
+    ``{"v","i"}`` pairs).  Legacy algorithms built outside the registry
+    have no mixer and no wire, so their ``server`` IS the mix."""
+    if algo.mixer is not None:
+        return algo.mixer.mix(task, hp, params, sstate, msgs, part)
+    return algo.server(task, hp, params, sstate, msgs, part)
+
+
 def register(name: str, category: str, local: str | LocalUpdate,
              mixer: str | ServerMixer, *, wire: WireTransform | None = None
              ) -> Algorithm:

@@ -639,6 +639,12 @@ def _mix_engine(params, bank: GramBank, *, damping, method, ns_iters,
             from repro.kernels.cholesky import ops as chol_ops
             sol = chol_ops.chol_solve(_maybe_take(abar, use, 0), num,
                                       damping=damping)
+        elif method == "cholesky_safe":
+            # quarantine fallback: escalate damping per group matrix and
+            # degrade to the identity preconditioner before letting a
+            # non-finite factorization NaN the mixed params
+            sol = inv.solve_escalated(_maybe_take(abar, use, 0), num,
+                                      damping)
         else:
             abar_d = inv.damp(abar, damping)
             if method == "ns":

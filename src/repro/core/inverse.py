@@ -10,6 +10,11 @@ Two paths (DESIGN.md §4.1):
     the same iteration with explicit VMEM tiling; this module is its jnp
     reference and the dispatch point (set ``use_pallas=True``).
 
+``cholesky_safe`` is the fault-tolerant variant (:func:`solve_escalated`):
+damping escalation δ → 10δ → 100δ per matrix with an identity-
+preconditioner fallback, for banks that may be indefinite after a
+poisoned-report quarantine.
+
 Kernel-backed methods (``repro.kernels``): ``pallas_ns`` — the fused
 adaptive Newton–Schulz kernel (in-VMEM convergence test); ``pallas_chol``
 — the Schur-recursive blocked-Cholesky kernel (exact, matmul-rich; on CPU
@@ -57,8 +62,53 @@ def _cho_solve(ad: jax.Array, bf: jax.Array) -> jax.Array:
     return cho_solve((c, lower), bf)
 
 
+#: damping multipliers tried by the escalating solve, mildest first
+ESCALATION = (1.0, 10.0, 100.0)
+
+
+def solve_escalated(a: jax.Array, b: jax.Array, damping: float = 0.0
+                    ) -> jax.Array:
+    """Solve (A + dI) x = b with DAMPING ESCALATION — the quarantine
+    fallback for grams that are indefinite even after nominal damping
+    (a poisoned cohort's surviving bank, accumulated cancellation, a
+    near-empty weighted mean).
+
+    ``cho_factor`` on a non-SPD matrix produces NaNs instead of raising
+    (LAPACK potrf failure surfaces as non-finite factors under jit), so
+    a plain Cholesky path would silently propagate NaN into the mixed
+    params — the exact run-killing failure this guards.  Per matrix
+    (independently across leading batch dims) the solve tries damping
+    d, 10d, 100d and keeps the MILDEST finite result; if all three
+    factorizations fail it falls back to the identity preconditioner
+    ``x = b`` (degrading the preconditioned mix toward plain weighted
+    averaging — graceful, never NaN).  A zero ``damping`` escalates
+    from 1e-6 (escalating a zero is a no-op).
+
+    Built as a where-chain over DESCENDING multipliers so the mildest
+    finite candidate wins; healthy SPD inputs take the d-damped branch
+    and match the plain ``cholesky`` method's solve exactly.
+    """
+    af = a.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+    lead = jnp.broadcast_shapes(af.shape[:-2], bf.shape[:-2])
+    af = jnp.broadcast_to(af, (*lead, *af.shape[-2:]))
+    bf = jnp.broadcast_to(bf, (*lead, *bf.shape[-2:]))
+    base = float(damping) if damping > 0 else 1e-6
+    sol = bf                       # identity-preconditioner fallback
+    for mult in sorted(ESCALATION, reverse=True):
+        cand = _cho_solve(damp(af, base * mult), bf)
+        ok = jnp.all(jnp.isfinite(cand), axis=(-2, -1))[..., None, None]
+        sol = jnp.where(ok, cand, sol)
+    return sol.astype(b.dtype)
+
+
 def inverse(a: jax.Array, damping: float = 0.0, *, method: str = "cholesky",
             ns_iters: int = 20) -> jax.Array:
+    if method == "cholesky_safe":
+        n = a.shape[-1]
+        return solve_escalated(
+            a, jnp.broadcast_to(jnp.eye(n, dtype=jnp.float32),
+                                a.shape[:-2] + (n, n)), damping)
     ad = damp(a.astype(jnp.float32), damping)
     if method == "ns":
         return ns_inverse(ad, ns_iters)
@@ -76,6 +126,8 @@ def inverse(a: jax.Array, damping: float = 0.0, *, method: str = "cholesky",
 def solve(a: jax.Array, b: jax.Array, damping: float = 0.0, *,
           method: str = "cholesky", ns_iters: int = 20) -> jax.Array:
     """Solve (A + δI) x = b.  a: [..., n, n]; b: [..., n, k]."""
+    if method == "cholesky_safe":
+        return solve_escalated(a, b, damping)
     ad = damp(a.astype(jnp.float32), damping)
     bf = b.astype(jnp.float32)
     # NS paths invert the UN-broadcast ad (one iteration per distinct

@@ -1,0 +1,292 @@
+"""Fault injection + in-graph quarantine for federated rounds.
+
+A production FL fleet sees three failure families every round, and a
+second-order method is MORE exposed to each than a first-order one — a
+poisoned gram corrupts the shared preconditioner for every client:
+
+* **crashes** — a dispatched client never reports.  In the buffered-async
+  event process this is a dispatch whose report time is "never"; the
+  ``BufferedSchedule`` timeout declares it dead after ``timeout`` rounds,
+  frees its concurrency slot and re-dispatches the client (bounded by
+  ``max_retries``).  In a synchronous schedule a crash is a cohort slot
+  whose report silently drops (weight zeroed in-graph).
+* **stragglers** — heavy-tail completion delays.  Modeled as extra
+  dispatch-to-report rounds on top of the schedule's own delay; an
+  extreme straggler simply times out and becomes a crash.
+* **corrupted reports** — NaN/inf message leaves or exploding update
+  norms.  These ARE delivered; the engines' quarantine (a per-report
+  validity mask computed AFTER wire decode) zeroes the rejected report's
+  ``Participation`` weight, sanitizes its message leaves so ``0 * NaN``
+  cannot reach any reduction, restores the client's state bit-untouched,
+  and lets an all-rejected round degrade to a params-carrying no-op.
+
+:class:`FaultModel` composes with any :class:`~repro.fl.schedule.
+CohortSchedule` and resolves the whole fault story HOST-side into a
+deterministic per-report fault-code array (one int8 per cohort slot)
+riding the :class:`~repro.fl.schedule.BuiltSchedule` — the scanned
+engines consume it as just another ``lax.scan`` input, exactly like
+cohorts and staleness.  The fault rng stream is separate from the
+schedule's, so a zero-fault ``FaultModel`` replays the inner schedule's
+arrays bit-identically (and the quarantined engine it routes to is
+contract-equal to the plain engine — the ``fault_overhead`` gate's
+numerator).
+
+The pure-jax half (:func:`inject` / :func:`validity` / :func:`sanitize`)
+is shared by the vmap and mesh-sharded round bodies; injection happens
+on the ENCODED stacked messages (corruption-on-the-wire), detection on
+the DECODED messages — so quarantine provably catches poison that
+survives bf16 casts, top-k sparsification and gram sketching
+(tests/test_faults.py pins this for all three transforms).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import api as API
+from repro.fl import schedule as SCH
+
+__all__ = ["FAULT_OK", "FAULT_CRASH", "FAULT_NAN", "FAULT_EXPLODE",
+           "FaultModel", "inject", "validity", "sanitize",
+           "expected_rejections"]
+
+#: report arrived clean
+FAULT_OK = 0
+#: dispatched but never reports (host-side event; sync schedules only —
+#: a buffered crash never flushes, so code 1 never reaches a cohort row)
+FAULT_CRASH = 1
+#: report leaves poisoned with NaN
+FAULT_NAN = 2
+#: report magnitude exploded past any sane clip threshold
+FAULT_EXPLODE = 3
+
+
+# ------------------------------------------------------------ host side ----
+
+@dataclass(frozen=True)
+class FaultModel(SCH.CohortSchedule):
+    """A seeded fault process over an inner :class:`~repro.fl.schedule.
+    CohortSchedule`.
+
+    ``crash``/``straggle``/``corrupt`` are per-dispatch (buffered inner)
+    or per-report (sync inner) probabilities, drawn from
+    ``default_rng(seed)`` — a stream SEPARATE from the inner schedule's,
+    so the dispatch choices and delays are bit-identical with the fault
+    model on or off.  ``tail`` caps the heavy-tail (Pareto) straggler
+    delay in rounds; ``norm_clip`` is the quarantine's update-norm bound
+    (it must be finite for exploded-but-representable reports to be
+    caught — the finiteness check alone misses a finite 1e30 report).
+
+    Composition rules:
+
+    * buffered inner + ``crash > 0`` requires ``timeout > 0`` on the
+      inner schedule — a crashed dispatch with no timeout leaks its
+      concurrency slot forever (the pre-PR-9 ROADMAP leak, now an error
+      instead of a hang);
+    * ``straggle > 0`` requires a buffered inner — a synchronous
+      schedule has no dispatch-to-report time axis to stretch;
+    * corrupted reports mark their flush slot with a fault code; the
+      engines inject the corruption IN-GRAPH at the wire boundary and
+      quarantine it after decode, so the host array is both the
+      injection plan and the exact expected-rejection log
+      (:func:`expected_rejections`).
+    """
+    inner: SCH.CohortSchedule
+    crash: float = 0.0
+    straggle: float = 0.0
+    tail: int = 16
+    corrupt: float = 0.0
+    norm_clip: float = 1e6
+    seed: int = 0
+
+    @property
+    def weight_pow(self) -> float:   # staleness damping is the inner's
+        return float(getattr(self.inner, "weight_pow", 0.0) or 0.0)
+
+    def _validate(self):
+        for name in ("crash", "straggle", "corrupt"):
+            p = float(getattr(self, name))
+            if not 0.0 <= p <= 1.0:
+                raise ValueError(f"{name} must be a probability in "
+                                 f"[0, 1]; got {p}")
+        if not self.norm_clip > 0:
+            raise ValueError(f"norm_clip must be > 0 (finite for "
+                             f"exploding-report detection); got "
+                             f"{self.norm_clip}")
+        if self.tail < 1:
+            raise ValueError(f"tail must be >= 1 rounds; got {self.tail}")
+
+    def _sample_code(self, frng) -> int:
+        if self.corrupt and frng.random() < self.corrupt:
+            return FAULT_NAN if frng.random() < 0.5 else FAULT_EXPLODE
+        return FAULT_OK
+
+    def build(self, n: int, rounds: int):
+        self._validate()
+        if isinstance(self.inner, SCH.BufferedSchedule):
+            return self._build_buffered(n, rounds)
+        return self._build_sync(n, rounds)
+
+    def _build_buffered(self, n: int, rounds: int) -> SCH.BuiltSchedule:
+        inner = self.inner
+        if self.crash and inner.timeout == 0:
+            raise ValueError(
+                "crash > 0 on a BufferedSchedule with timeout=0: a "
+                "crashed dispatch never reports and would leak its "
+                "concurrency slot forever. Set timeout (and optionally "
+                "max_retries) on the inner schedule.")
+        lo, hi = inner._validate(n)
+        frng = np.random.default_rng(self.seed)
+
+        def sampler(c: int, t: int):
+            crashed = bool(self.crash) and frng.random() < self.crash
+            extra = 0
+            if self.straggle and frng.random() < self.straggle:
+                # heavy-tail straggler: Pareto delay, capped at `tail`
+                # (an uncapped tail would blow the params-ring window;
+                # with a timeout the cap is mostly moot — extreme
+                # stragglers die and re-dispatch)
+                extra = min(1 + int(frng.pareto(1.5)), self.tail)
+            return crashed, extra, self._sample_code(frng)
+
+        return SCH.buffered_events(
+            n, rounds, goal=inner.goal, concurrency=inner.concurrency,
+            lo=lo, hi=hi, rng=np.random.default_rng(inner.seed),
+            timeout=inner.timeout, max_retries=inner.max_retries,
+            fault_sampler=sampler)
+
+    def _build_sync(self, n: int, rounds: int) -> SCH.BuiltSchedule:
+        if self.straggle:
+            raise ValueError(
+                "straggle > 0 needs a BufferedSchedule inner — a "
+                "synchronous schedule has no dispatch-to-report delay "
+                "to stretch (model stragglers as buffered-async "
+                "staleness + timeouts).")
+        built = self.inner.build(n, rounds)
+        if isinstance(built, SCH.BuiltSchedule):
+            rows, taus = built.cohorts, built.staleness
+        elif isinstance(built, tuple):
+            rows, taus = built
+        else:
+            rows, taus = built, None
+        rows = np.asarray(rows, np.int32)
+        marks = np.zeros(rows.shape, np.int8)
+        n_failed = np.zeros(rows.shape[0], np.int32)
+        frng = np.random.default_rng(self.seed)
+        for t in range(rows.shape[0]):
+            if rows[t, 0] < 0:
+                continue                     # dead round: nothing to mark
+            for j in range(rows.shape[1]):
+                if self.crash and frng.random() < self.crash:
+                    # sync "crash": the report silently drops — the
+                    # engine zeroes its weight; counted host-side
+                    marks[t, j] = FAULT_CRASH
+                    n_failed[t] += 1
+                else:
+                    marks[t, j] = self._sample_code(frng)
+        return SCH.BuiltSchedule(
+            cohorts=rows, staleness=taus, faults=marks,
+            n_failed=n_failed,
+            n_retried=np.zeros(rows.shape[0], np.int32))
+
+
+def expected_rejections(faults: np.ndarray) -> np.ndarray:
+    """The host-side expected per-round ``n_rejected`` for a fault array:
+    corrupted marks (NAN/EXPLODE) are the reports the in-graph
+    quarantine must catch — crashes are dropped by weight, not detected
+    by validity, so they count under ``n_failed`` instead.  The
+    acceptance contract is ``hist["n_rejected"] == expected_rejections(
+    plan.faults)`` exactly (absent organic NaNs in the task itself)."""
+    f = np.asarray(faults)
+    return ((f == FAULT_NAN) | (f == FAULT_EXPLODE)).sum(
+        axis=1).astype(np.int32)
+
+
+# ------------------------------------------------------------- jax side ----
+
+def _per_slot(codes: jax.Array, x: jax.Array) -> jax.Array:
+    """Broadcast per-report codes [S] against a stacked leaf [S, ...]."""
+    return codes.reshape(codes.shape + (1,) * (x.ndim - 1))
+
+
+def inject(msgs, codes: jax.Array):
+    """Corrupt the stacked (ENCODED) client messages per fault code.
+
+    ``FAULT_NAN`` fills every inexact leaf with NaN; ``FAULT_EXPLODE``
+    maps ``x -> x * 1e30 + 1e30`` so even an all-zero leaf lands at
+    magnitude >= 1e30 — detection (and therefore the
+    counter-exactness contract) cannot depend on the report's value.
+    Code 0 slots pass through BIT-UNTOUCHED (``where`` with a false
+    predicate selects the original lane exactly), which is what makes
+    the zero-fault quarantined engine contract-equal to the plain one.
+    Integer leaves (top-k indices) are never touched.
+    """
+    def leaf(x):
+        if not jnp.issubdtype(x.dtype, jnp.inexact):
+            return x
+        c = _per_slot(codes, x)
+        x = jnp.where(c == FAULT_NAN, jnp.asarray(jnp.nan, x.dtype), x)
+        return jnp.where(c == FAULT_EXPLODE, x * 1e30 + 1e30, x)
+    return jax.tree.map(leaf, msgs)
+
+
+def _wire_part(msgs):
+    """The wire payload of a stacked message (what the norm bound
+    covers); metrics fields ride outside the wire."""
+    if isinstance(msgs, API.Message):
+        return msgs.wire_tree()
+    if isinstance(msgs, dict):
+        return {k: v for k, v in msgs.items() if k != "loss"}
+    return msgs
+
+
+def validity(msgs, norm_clip: float) -> jax.Array:
+    """Per-report validity [S] of the stacked DECODED messages:
+    every inexact leaf finite AND the wire payload's L2 norm within
+    ``norm_clip``.
+
+    The norm accumulates squares in fp32, so an exploded report
+    overflows to inf and ``inf <= clip**2`` is False — and a NaN norm
+    compares False too: poison can only ever FAIL the check.  Runs after
+    wire decode by design (satellite contract): a NaN that rode through
+    a bf16 cast, a top-k scatter or a gram-sketch reconstruction is
+    caught HERE, not assumed away at encode time.
+    """
+    leaves = [x for x in jax.tree.leaves(msgs)
+              if jnp.issubdtype(x.dtype, jnp.inexact)]
+    if not leaves:
+        return jnp.ones((), bool)
+    finite = None
+    for x in leaves:
+        f = jnp.all(jnp.isfinite(x), axis=tuple(range(1, x.ndim)))
+        finite = f if finite is None else finite & f
+    nsq = None
+    for x in jax.tree.leaves(_wire_part(msgs)):
+        if not jnp.issubdtype(x.dtype, jnp.inexact):
+            continue
+        xf = x.astype(jnp.float32)
+        s = jnp.sum(xf * xf, axis=tuple(range(1, x.ndim)))
+        nsq = s if nsq is None else nsq + s
+    ok_norm = (jnp.ones_like(finite) if nsq is None
+               else nsq <= jnp.float32(norm_clip) ** 2)
+    return finite & ok_norm
+
+
+def sanitize(msgs, valid: jax.Array):
+    """Zero every inexact leaf of rejected reports.
+
+    Weight-zeroing alone is NOT enough: ``0 * NaN == NaN`` inside the
+    ``tensordot``/matmul reductions every mixer runs, so a single
+    poisoned report would still NaN the aggregate (and the loss metric).
+    ``where`` on a true predicate returns the original lane exactly —
+    valid reports are bit-untouched.
+    """
+    def leaf(x):
+        if not jnp.issubdtype(x.dtype, jnp.inexact):
+            return x
+        return jnp.where(_per_slot(valid, x), x,
+                         jnp.zeros((), x.dtype))
+    return jax.tree.map(leaf, msgs)

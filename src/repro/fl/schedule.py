@@ -54,8 +54,9 @@ from dataclasses import dataclass
 import numpy as np
 
 __all__ = [
-    "SchedulePlan", "CohortSchedule", "ArraySchedule", "SampledSchedule",
-    "BufferedSchedule", "validate_cohorts", "validate_staleness",
+    "SchedulePlan", "BuiltSchedule", "CohortSchedule", "ArraySchedule",
+    "SampledSchedule", "BufferedSchedule", "buffered_events",
+    "validate_cohorts", "validate_staleness", "validate_faults",
     "resolve", "register_trace", "trace", "TRACES",
 ]
 
@@ -109,6 +110,25 @@ def validate_staleness(staleness, cohorts: np.ndarray) -> np.ndarray:
     return staleness
 
 
+def validate_faults(faults, cohorts: np.ndarray) -> np.ndarray:
+    """Validate a per-report fault-mark array aligned with ``cohorts``:
+    int8, same shape, codes in ``{0..3}`` (see ``repro.fl.faults``), and
+    no mark on a dead (all--1) row — a fault belongs to a report, and a
+    dead row has none."""
+    faults = np.asarray(faults, np.int8)
+    if faults.shape != cohorts.shape:
+        raise ValueError(f"faults must match cohorts shape "
+                         f"{cohorts.shape}; got {faults.shape}")
+    if faults.min(initial=0) < 0 or faults.max(initial=0) > 3:
+        raise ValueError("fault marks must be codes in {0..3} "
+                         "(OK/CRASH/NAN/EXPLODE — repro.fl.faults)")
+    dead = cohorts[:, 0] < 0
+    if np.any(faults[dead]):
+        raise ValueError("a dead (all--1) cohort row cannot carry fault "
+                         "marks — there is no report to poison")
+    return faults
+
+
 # ------------------------------------------------------------- plan ------
 
 @dataclass(frozen=True)
@@ -117,17 +137,48 @@ class SchedulePlan:
     consumes.  ``staleness is None`` means SYNCHRONOUS (today's engine,
     raw-array path bit-for-bit); otherwise the buffered-async engine
     runs with a params ring of ``window`` snapshots and aggregation
-    weights damped by ``(1 + tau) ** -weight_pow``."""
+    weights damped by ``(1 + tau) ** -weight_pow``.
+
+    ``faults`` (optional int8 [rounds, S], codes from ``repro.fl.
+    faults``) marks each report's injected fault; its presence routes
+    the scanned engines through the QUARANTINE round body (an all-zero
+    mask still compiles the quarantined graph — that is the fault
+    engine's zero-fault configuration, contract-equal to the plain
+    engine).  ``n_failed``/``n_retried`` are the event process's
+    host-side per-round counters (timeout deaths / re-dispatches of
+    previously-dead clients) — the engine surfaces them through the
+    metrics path next to the in-graph ``n_rejected``."""
     cohorts: np.ndarray | None    # int32 [rounds, S]; None => in-graph draw
     staleness: np.ndarray | None  # int32 [rounds, S]; None => synchronous
     s: int
     scheduled: bool
     window: int = 0               # params-ring length; 0 => synchronous
     weight_pow: float = 0.0
+    faults: np.ndarray | None = None      # int8 [rounds, S]
+    n_failed: np.ndarray | None = None    # int32 [rounds]
+    n_retried: np.ndarray | None = None   # int32 [rounds]
+    norm_clip: float = float("inf")       # quarantine update-norm bound
 
     @property
     def is_async(self) -> bool:
         return self.staleness is not None
+
+    @property
+    def has_faults(self) -> bool:
+        return self.faults is not None
+
+
+@dataclass(frozen=True)
+class BuiltSchedule:
+    """The rich return type of a fault-aware ``CohortSchedule.build`` —
+    everything :func:`resolve` needs beyond the classic ``(cohorts,
+    staleness)`` pair.  Plain schedules keep returning arrays/tuples;
+    :func:`resolve` accepts either."""
+    cohorts: np.ndarray
+    staleness: np.ndarray | None = None
+    faults: np.ndarray | None = None      # int8 [rounds, S]
+    n_failed: np.ndarray | None = None    # int32 [rounds]
+    n_retried: np.ndarray | None = None   # int32 [rounds]
 
 
 def resolve(spec, *, rounds: int, n: int,
@@ -141,23 +192,41 @@ def resolve(spec, *, rounds: int, n: int,
         s = sample_clients if 0 < sample_clients < n else n
         return SchedulePlan(cohorts=None, staleness=None, s=s,
                             scheduled=False)
+    faults = n_failed = n_retried = None
     if isinstance(spec, CohortSchedule):
         built = spec.build(n, rounds)
-        cohorts, stale = built if isinstance(built, tuple) else (built, None)
+        if isinstance(built, BuiltSchedule):
+            cohorts, stale = built.cohorts, built.staleness
+            faults = built.faults
+            n_failed, n_retried = built.n_failed, built.n_retried
+        elif isinstance(built, tuple):
+            cohorts, stale = built
+        else:
+            cohorts, stale = built, None
     else:
         cohorts, stale = spec, None
     cohorts = validate_cohorts(cohorts, rounds, n)
     s = int(cohorts.shape[1])
+    if faults is not None:
+        faults = validate_faults(faults, cohorts)
+    if n_failed is not None:
+        n_failed = np.asarray(n_failed, np.int32).reshape(rounds)
+    if n_retried is not None:
+        n_retried = np.asarray(n_retried, np.int32).reshape(rounds)
+    clip = float(getattr(spec, "norm_clip", float("inf")))
+    wpow = float(getattr(spec, "weight_pow", 0.0) or 0.0)
     if stale is None:
         return SchedulePlan(cohorts=cohorts, staleness=None, s=s,
-                            scheduled=True)
+                            scheduled=True, faults=faults,
+                            n_failed=n_failed, n_retried=n_retried,
+                            norm_clip=clip)
     stale = validate_staleness(stale, cohorts)
     live = cohorts[:, 0] >= 0
     window = int(stale[live].max(initial=0)) + 1 if live.any() else 1
     return SchedulePlan(
         cohorts=cohorts, staleness=stale, s=s, scheduled=True,
-        window=window,
-        weight_pow=float(getattr(spec, "weight_pow", 0.0) or 0.0))
+        window=window, weight_pow=wpow, faults=faults,
+        n_failed=n_failed, n_retried=n_retried, norm_clip=clip)
 
 
 # --------------------------------------------------------- schedules -----
@@ -283,6 +352,115 @@ def _dropout_midround(n, rounds, s, seed, *, drop_prob: float = 0.15):
 
 # ----------------------------------------------------- buffered async ----
 
+# report time of a dispatch that will NEVER report (an injected crash)
+NEVER = np.iinfo(np.int64).max
+
+
+def buffered_events(n: int, rounds: int, *, goal: int, concurrency: int,
+                    lo: int, hi: int, rng, timeout: int = 0,
+                    max_retries: int = 0,
+                    fault_sampler=None) -> BuiltSchedule:
+    """THE buffered-async event process — one implementation serving
+    both :class:`BufferedSchedule` (no faults) and ``repro.fl.faults.
+    FaultModel`` (fault hooks), so a zero-fault fault model replays the
+    plain schedule's rng stream exactly.
+
+    ``fault_sampler(client, t) -> (crashed, extra_delay, fault_code)``
+    is consulted once per dispatch (from its OWN rng stream — the
+    schedule's delay/choice draws here are untouched by its presence):
+    a crashed dispatch never reports (report time :data:`NEVER`), an
+    ``extra_delay`` stretches the completion (straggler), and a nonzero
+    ``fault_code`` marks the eventual flushed report for in-graph
+    corruption + quarantine.
+
+    ``timeout`` (0 = disabled) bounds how long a dispatch may stay in
+    flight: at the start of round ``t`` every in-flight entry with
+    ``t - dispatch_t > timeout`` is declared DEAD — its concurrency
+    slot is freed and the client becomes eligible for re-dispatch
+    (bounded by ``max_retries`` deaths per client; past the bound the
+    client is abandoned).  Without a timeout a dispatch that never
+    reports leaks its slot forever — the failure mode this fixes.
+
+    Conservation is asserted at every round (the host boundary):
+    ``dispatched == flushed + busy + dead`` where busy counts in-flight
+    entries plus buffered-but-unflushed reports (a client is busy from
+    dispatch until flush or death).
+    """
+    rows = np.full((rounds, goal), -1, np.int32)
+    taus = np.zeros((rounds, goal), np.int32)
+    marks = np.zeros((rounds, goal), np.int8)
+    n_failed = np.zeros(rounds, np.int32)
+    n_retried = np.zeros(rounds, np.int32)
+    free = np.ones(n, bool)
+    deaths = np.zeros(n, np.int32)      # timeout deaths per client
+    retry_due = np.zeros(n, bool)       # last dispatch died → next is a retry
+    inflight: list = []   # (report_t, seq, client, dispatch_t, fault_code)
+    buffer: list = []     # (client, dispatch_t, fault_code), FIFO
+    pending, seq = concurrency, 0
+    dispatched = flushed = dead = 0
+    for t in range(rounds):
+        # ---- timeouts: in-flight entries past the deadline are dead ----
+        if timeout:
+            late = [e for e in inflight if t - e[3] > timeout]
+            if late:
+                inflight = [e for e in inflight if t - e[3] <= timeout]
+                for (_, _, c, _, _) in late:
+                    deaths[c] += 1
+                    dead += 1
+                    pending += 1          # the concurrency slot is freed
+                    if deaths[c] <= max_retries:
+                        free[c] = True    # eligible for re-dispatch
+                        retry_due[c] = True
+                    # else: retry budget exhausted — abandoned for good
+                n_failed[t] += len(late)
+        # ---- dispatch replacements for flushed/dead slots --------------
+        k = min(pending, int(free.sum()))
+        if k:
+            chosen = rng.choice(np.flatnonzero(free), size=k,
+                                replace=False)
+            for c in chosen:
+                d = int(rng.integers(lo, hi + 1)) if hi > lo else lo
+                crashed, extra, code = (
+                    fault_sampler(int(c), t) if fault_sampler is not None
+                    else (False, 0, 0))
+                report = NEVER if crashed else t + d + int(extra)
+                inflight.append((report, seq, int(c), t, int(code)))
+                seq += 1
+                if retry_due[c]:
+                    retry_due[c] = False
+                    n_retried[t] += 1
+            free[chosen] = False
+            pending -= k
+            dispatched += k
+        # ---- arrivals: completed reports enter the buffer FIFO ---------
+        done = sorted(e for e in inflight if e[0] <= t)
+        if done:
+            inflight = [e for e in inflight if e[0] > t]
+            buffer.extend((c, t0, code) for (_, _, c, t0, code) in done)
+        # ---- at most one goal-sized flush per round --------------------
+        if len(buffer) >= goal:
+            batch, buffer = buffer[:goal], buffer[goal:]
+            ids = np.fromiter((c for c, _, _ in batch), np.int32)
+            age = np.fromiter((t - t0 for _, t0, _ in batch), np.int32)
+            mk = np.fromiter((m for _, _, m in batch), np.int8)
+            order = np.argsort(ids)
+            rows[t], taus[t], marks[t] = ids[order], age[order], mk[order]
+            free[ids] = True
+            pending += goal
+            flushed += goal
+        # ---- conservation invariant (host boundary) --------------------
+        busy = len(inflight) + len(buffer)
+        if dispatched != flushed + busy + dead:
+            raise AssertionError(
+                f"event-process conservation violated at round {t}: "
+                f"dispatched={dispatched} != flushed={flushed} + "
+                f"busy={busy} + dead={dead}")
+    return BuiltSchedule(
+        cohorts=rows, staleness=taus,
+        faults=marks if fault_sampler is not None else None,
+        n_failed=n_failed, n_retried=n_retried)
+
+
 @dataclass(frozen=True)
 class BufferedSchedule(CohortSchedule):
     """FedBuff-style buffered-async arrival process, resolved host-side.
@@ -296,18 +474,33 @@ class BufferedSchedule(CohortSchedule):
     is busy from dispatch until flush, so a flush row never repeats an
     id.  Rounds that flush nothing are all--1 rows.
 
-    ``build`` returns ``(cohorts, staleness)``; :func:`resolve` sizes
-    the engine's params ring at ``max(staleness) + 1``.  With
-    ``delay=0, concurrency=goal`` this degenerates to one fresh
-    zero-staleness cohort per round — the sync-equivalence configuration.
+    ``timeout`` (0 = disabled, the historical behavior) declares any
+    dispatch still unreported after ``timeout`` rounds DEAD: its
+    concurrency slot is freed and the client re-enters the dispatch
+    pool, up to ``max_retries`` deaths per client (then it is abandoned
+    — a permanently-lost device).  The event process counts per-round
+    ``n_failed`` (deaths) and ``n_retried`` (re-dispatches of
+    previously-dead clients) and enforces the conservation invariant
+    ``dispatched == flushed + busy + dead`` every round; see
+    :func:`buffered_events`.
+
+    ``build`` returns ``(cohorts, staleness)`` when ``timeout == 0``
+    (the legacy contract, bit-identical arrays) and a
+    :class:`BuiltSchedule` carrying the counters otherwise;
+    :func:`resolve` sizes the engine's params ring at
+    ``max(staleness) + 1`` either way.  With ``delay=0,
+    concurrency=goal`` this degenerates to one fresh zero-staleness
+    cohort per round — the sync-equivalence configuration.
     """
     goal: int
     concurrency: int
     delay: object = 0       # int, or inclusive (lo, hi) tuple
     seed: int = 0
     weight_pow: float = 0.0
+    timeout: int = 0        # rounds in flight before a dispatch is dead
+    max_retries: int = 0    # re-dispatch budget per client after deaths
 
-    def build(self, n: int, rounds: int):
+    def _validate(self, n: int) -> tuple[int, int]:
         if self.goal < 1:
             raise ValueError(f"goal must be >= 1; got {self.goal}")
         if self.concurrency < self.goal:
@@ -323,37 +516,19 @@ class BufferedSchedule(CohortSchedule):
         if lo < 0 or hi < lo:
             raise ValueError(f"delay must be >= 0 (int or (lo, hi) with "
                              f"lo <= hi); got {self.delay}")
-        rng = np.random.default_rng(self.seed)
-        rows = np.full((rounds, self.goal), -1, np.int32)
-        taus = np.zeros((rounds, self.goal), np.int32)
-        free = np.ones(n, bool)
-        inflight: list = []   # (report_t, seq, client, dispatch_t)
-        buffer: list = []     # (client, dispatch_t), FIFO
-        pending, seq = self.concurrency, 0
-        for t in range(rounds):
-            # dispatch replacements for whatever flushed last round
-            k = min(pending, int(free.sum()))
-            if k:
-                chosen = rng.choice(np.flatnonzero(free), size=k,
-                                    replace=False)
-                for c in chosen:
-                    d = int(rng.integers(lo, hi + 1)) if hi > lo else lo
-                    inflight.append((t + d, seq, int(c), t))
-                    seq += 1
-                free[chosen] = False
-                pending -= k
-            # arrivals: completed reports enter the buffer FIFO
-            done = sorted(e for e in inflight if e[0] <= t)
-            if done:
-                inflight = [e for e in inflight if e[0] > t]
-                buffer.extend((c, t0) for (_, _, c, t0) in done)
-            # at most one goal-sized flush per round
-            if len(buffer) >= self.goal:
-                batch, buffer = buffer[:self.goal], buffer[self.goal:]
-                ids = np.fromiter((c for c, _ in batch), np.int32)
-                age = np.fromiter((t - t0 for _, t0 in batch), np.int32)
-                order = np.argsort(ids)
-                rows[t], taus[t] = ids[order], age[order]
-                free[ids] = True
-                pending += self.goal
-        return rows, taus
+        if self.timeout < 0 or self.max_retries < 0:
+            raise ValueError(f"timeout/max_retries must be >= 0; got "
+                             f"{self.timeout}/{self.max_retries}")
+        return lo, hi
+
+    def build(self, n: int, rounds: int):
+        lo, hi = self._validate(n)
+        built = buffered_events(
+            n, rounds, goal=self.goal, concurrency=self.concurrency,
+            lo=lo, hi=hi, rng=np.random.default_rng(self.seed),
+            timeout=self.timeout, max_retries=self.max_retries)
+        if self.timeout == 0:
+            # legacy return contract (and zero extra rng draws above):
+            # timeout-free builds stay bit-identical to the PR 8 arrays
+            return built.cohorts, built.staleness
+        return built

@@ -41,8 +41,10 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.core import api as API
 from repro.core.algorithms import Participation
 from repro.distributed.axes import CLIENTS_AXIS, make_client_mesh, shard_map
+from repro.fl import faults as FLT
 from repro.fl.simulate import round_metrics
 
 PyTree = Any
@@ -50,6 +52,7 @@ PyTree = Any
 __all__ = ["CLIENTS_AXIS", "make_client_mesh", "bucket_participants",
            "bucket_cohort", "shard_clients", "replicate", "staging_sharding",
            "make_sharded_round", "make_sharded_round_async",
+           "make_sharded_round_q", "make_sharded_round_async_q",
            "bank_shard_rows"]
 
 
@@ -288,5 +291,161 @@ def make_sharded_round_async(task, algo, hp, n_clients: int,
             axis_names={CLIENTS_AXIS}, check=False)(
                 params, server, clients, batches, pstack, local, pos, w,
                 tau, rng)
+
+    return round_fn
+
+
+def _quarantine_local(algo, task, hp, n_clients, params, server, msgs,
+                      lw, lcodes, clip, ltau):
+    """Shard-local half of the in-graph quarantine (see
+    ``FedSim._aggregate_q`` for the replicated-engine twin and the full
+    contract).  Runs inside a shard_map region: inject faults into this
+    shard's local message bucket, decode, validate EVERY decoded leaf
+    (all-finite AND wire-norm ≤ ``clip``), sanitize rejected/crashed
+    slots to zero (0·NaN is NaN — zero weights alone cannot neutralize a
+    poisoned leaf inside the weighted reductions), and mix with the
+    effective weights.  ``alive`` and ``n_rejected`` are psum'd so every
+    shard takes the same carry-forward branch.  Padding slots carry
+    weight 0 and code 0; their finite throwaway messages stay valid and
+    are not counted (counting requires ``lw > 0``).
+    """
+    msgs = FLT.inject(msgs, lcodes)
+    dec = API.decode_msgs(algo, msgs, params)
+    valid = FLT.validity(dec, clip)
+    keep = valid & (lcodes != FLT.FAULT_CRASH)
+    dec = FLT.sanitize(dec, keep)
+    lw_eff = jnp.where(keep, lw, jnp.float32(0.0))
+    part = Participation(weights=lw_eff, n_total=n_clients,
+                         axes=(CLIENTS_AXIS,), staleness=ltau)
+    cand_p, cand_sv = API.mix_decoded(algo, task, hp, params, server, dec,
+                                      part)
+    alive = jax.lax.psum(jnp.sum(lw_eff), CLIENTS_AXIS) > 0
+    n_rej = jax.lax.psum(jnp.sum((~valid) & (lw > 0)),
+                         CLIENTS_AXIS).astype(jnp.int32)
+    new_p = jax.tree.map(lambda a, b: jnp.where(alive, a, b), cand_p, params)
+    new_sv = jax.tree.map(lambda a, b: jnp.where(alive, a, b), cand_sv,
+                          server)
+    metrics = round_metrics(dec, part)
+    metrics["alive"] = alive
+    metrics["n_rejected"] = n_rej
+    return new_p, new_sv, keep, metrics
+
+
+def make_sharded_round_q(task, algo, hp, n_clients: int,
+                         mesh: jax.sharding.Mesh):
+    """Quarantining twin of :func:`make_sharded_round` — the fault-
+    tolerant sync round body.
+
+    Returns ``round_fn(params, server, clients, batches, rng, local,
+    pos, w, codes, *, s, clip)`` — always pre-bucketed (``codes`` is the
+    ``[n_shards, cap]`` bucketed per-slot fault-code row; padding slots
+    carry code 0).  Differences from the plain body: client messages are
+    run through the fault injector, decoded ONCE, validated, sanitized,
+    and mixed via ``API.mix_decoded``; rejected or crashed clients keep
+    their pre-round local state bit-untouched (the keep-masked restore
+    below), and an all-rejected round degrades to a params-carrying
+    no-op via the psum'd ``alive`` select.  With an all-zero code row
+    every select collapses to its identity branch, so the zero-fault run
+    matches the plain sharded body to fp32 mixing tolerance.
+    """
+    nd = _n_shards(mesh)
+    if n_clients % nd:
+        raise ValueError(f"n_clients={n_clients} must divide over the "
+                         f"{nd}-way {CLIENTS_AXIS!r} axis")
+
+    def round_fn(params, server, clients, batches, rng, local, pos, w,
+                 codes, *, s: int, clip: float):
+        def shard_fn(params, server, lclients, lbatches, li, lpos, lw,
+                     lcodes, rng):
+            li, lpos = li[0], lpos[0]                   # [1, cap] → [cap]
+            lw, lcodes = lw[0], lcodes[0]
+            gathered = jax.tree.map(
+                lambda x: jnp.take(x, li, axis=0, mode="clip"), lclients)
+            crngs = jnp.take(jax.random.split(rng, s), lpos, axis=0)
+
+            def client_fn(cstate, cb, cr):
+                return algo.client(task, hp, params, cstate, server, cb, cr)
+
+            msgs, updated = jax.vmap(client_fn)(gathered, lbatches, crngs)
+            new_params, new_server, keep, metrics = _quarantine_local(
+                algo, task, hp, n_clients, params, server, msgs, lw,
+                lcodes, clip, None)
+            # rejected clients keep their pre-round state bit-untouched
+            cap = li.shape[0]
+            restored = jax.tree.map(
+                lambda u, g: jnp.where(
+                    keep.reshape((cap,) + (1,) * (u.ndim - 1)), u, g),
+                updated, gathered)
+            new_clients = jax.tree.map(
+                lambda b, u: b.at[li].set(u, mode="drop"), lclients,
+                restored)
+            return new_params, new_server, new_clients, metrics
+
+        shd = P(CLIENTS_AXIS)
+        return shard_map(
+            shard_fn, mesh=mesh,
+            in_specs=(P(), P(), shd, shd, shd, shd, shd, shd, P()),
+            out_specs=(P(), P(), shd, P()),
+            axis_names={CLIENTS_AXIS}, check=False)(
+                params, server, clients, batches, local, pos, w, codes, rng)
+
+    return round_fn
+
+
+def make_sharded_round_async_q(task, algo, hp, n_clients: int,
+                               mesh: jax.sharding.Mesh):
+    """Quarantining twin of :func:`make_sharded_round_async` — the
+    fault-tolerant buffered-async round body.
+
+    Returns ``round_fn(params, server, clients, batches, pstack, rng,
+    local, pos, w, tau, codes, *, s, clip)`` — always pre-bucketed, with
+    ``tau`` AND ``codes`` bucketed alongside the weights (padding slots:
+    staleness 0, code 0, weight 0).  Quarantine semantics match
+    :func:`make_sharded_round_q`; staleness flows into the mix through
+    ``Participation`` exactly as in the plain async body.
+    """
+    nd = _n_shards(mesh)
+    if n_clients % nd:
+        raise ValueError(f"n_clients={n_clients} must divide over the "
+                         f"{nd}-way {CLIENTS_AXIS!r} axis")
+
+    def round_fn(params, server, clients, batches, pstack, rng, local, pos,
+                 w, tau, codes, *, s: int, clip: float):
+        def shard_fn(params, server, lclients, lbatches, lpstack, li, lpos,
+                     lw, ltau, lcodes, rng):
+            li, lpos = li[0], lpos[0]                   # [1, cap] → [cap]
+            lw, ltau, lcodes = lw[0], ltau[0], lcodes[0]
+            gathered = jax.tree.map(
+                lambda x: jnp.take(x, li, axis=0, mode="clip"), lclients)
+            crngs = jnp.take(jax.random.split(rng, s), lpos, axis=0)
+
+            def client_fn(cparams, cstate, cb, cr):
+                return algo.client(task, hp, cparams, cstate, server, cb,
+                                   cr)
+
+            msgs, updated = jax.vmap(client_fn)(lpstack, gathered,
+                                                lbatches, crngs)
+            new_params, new_server, keep, metrics = _quarantine_local(
+                algo, task, hp, n_clients, params, server, msgs, lw,
+                lcodes, clip, ltau)
+            cap = li.shape[0]
+            restored = jax.tree.map(
+                lambda u, g: jnp.where(
+                    keep.reshape((cap,) + (1,) * (u.ndim - 1)), u, g),
+                updated, gathered)
+            new_clients = jax.tree.map(
+                lambda b, u: b.at[li].set(u, mode="drop"), lclients,
+                restored)
+            return new_params, new_server, new_clients, metrics
+
+        shd = P(CLIENTS_AXIS)
+        return shard_map(
+            shard_fn, mesh=mesh,
+            in_specs=(P(), P(), shd, shd, shd, shd, shd, shd, shd, shd,
+                      P()),
+            out_specs=(P(), P(), shd, P()),
+            axis_names={CLIENTS_AXIS}, check=False)(
+                params, server, clients, batches, pstack, local, pos, w,
+                tau, codes, rng)
 
     return round_fn

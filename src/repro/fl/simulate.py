@@ -89,6 +89,7 @@ import numpy as np
 from repro.core import api as API
 from repro.core.algorithms import (Algorithm, HParams, Participation,
                                    get_algorithm)
+from repro.fl import faults as FLT
 from repro.fl import schedule as SCH
 from repro.fl.store import HostStateStore, plan_chunk, round_up
 
@@ -210,6 +211,17 @@ class FedSim:
             self._scan_rounds_async,
             static_argnames=("s", "window", "wpow"),
             donate_argnums=(0, 1, 2, 3))
+        # fault-tolerant (quarantine) chunk jits: SEPARATE programs, not a
+        # branch inside the plain ones — the zero-fault contract is
+        # FaultModel-run ≡ plain-engine-run, and keeping the plain jits'
+        # graphs untouched is what makes that checkable bitwise
+        self._scan_q_jit = jax.jit(
+            self._scan_rounds_q, static_argnames=("s", "clip"),
+            donate_argnums=(0, 1, 2))
+        self._scan_async_q_jit = jax.jit(
+            self._scan_rounds_async_q,
+            static_argnames=("s", "window", "wpow", "clip"),
+            donate_argnums=(0, 1, 2, 3))
         self._full_idx = None         # cached identity-cohort device arrays
         self._full_w = None
         self._comm_cache = {}         # per-batch-struct (up, down) bytes
@@ -237,6 +249,17 @@ class FedSim:
             self._scan_async_jit = jax.jit(
                 self._scan_rounds_async_sharded,
                 static_argnames=("s", "window", "wpow"),
+                donate_argnums=(0, 1, 2, 3))
+            self._sharded_round_q_fn = Sh.make_sharded_round_q(
+                task, self.algo, hp, n_clients, mesh)
+            self._sharded_round_async_q_fn = Sh.make_sharded_round_async_q(
+                task, self.algo, hp, n_clients, mesh)
+            self._scan_q_jit = jax.jit(
+                self._scan_rounds_sharded_q,
+                static_argnames=("s", "clip"), donate_argnums=(0, 1, 2))
+            self._scan_async_q_jit = jax.jit(
+                self._scan_rounds_async_sharded_q,
+                static_argnames=("s", "window", "wpow", "clip"),
                 donate_argnums=(0, 1, 2, 3))
             self._banked_jit = jax.jit(self._sharded_round_banked,
                                        static_argnames=("s", "sample"),
@@ -943,6 +966,297 @@ class FedSim:
             (params, server, clients, ring), keys, cohorts, stale, ts,
             bank, s=s, window=window, wpow=wpow)
 
+    # ------------------------------------- fault-tolerant (quarantine) -----
+
+    def _aggregate_q(self, params, server, msgs, weights, codes, clip,
+                     staleness):
+        """Replicated-engine half of the in-graph QUARANTINE (the mesh
+        twin is ``sharded._quarantine_local``): inject the schedule's
+        fault codes into the encoded messages, decode ONCE, validate
+        every decoded leaf (all-finite AND wire-norm ≤ ``clip``),
+        SANITIZE rejected slots to zero, and mix with effective weights.
+
+        Sanitizing is load-bearing, not belt-and-braces: ``0 · NaN`` is
+        NaN, so a poisoned leaf inside a ``tensordot`` weighted reduction
+        survives a zero weight — the rejected slot's values themselves
+        must be replaced before any reduction sees them.  Crashed slots
+        (sync-engine crash marks; buffered crashes never reach a flush
+        row) carry finite untrained messages: they are excluded from the
+        mix via ``keep`` but NOT counted in ``n_rejected`` — that counter
+        is the in-graph validity verdict, host crash accounting lives in
+        ``plan.n_failed``.  An all-rejected round degrades to a
+        params-carrying no-op through the ``alive`` select.  With an
+        all-zero code row every select here collapses to its identity
+        branch — the zero-fault run is the plain engine's mix bit-for-bit
+        (the decode+mix composition equals ``algo.server``'s internal
+        decode-then-mix).
+        """
+        msgs = FLT.inject(msgs, codes)
+        dec = API.decode_msgs(self.algo, msgs, params)
+        valid = FLT.validity(dec, clip)
+        keep = valid & (codes != FLT.FAULT_CRASH)
+        dec = FLT.sanitize(dec, keep)
+        w_eff = jnp.where(keep, weights, jnp.float32(0.0))
+        part = Participation(weights=w_eff, n_total=self.n,
+                             staleness=staleness)
+        cand_p, cand_sv = API.mix_decoded(self.algo, self.task, self.hp,
+                                          params, server, dec, part)
+        alive = jnp.sum(w_eff) > 0
+        new_p = jax.tree.map(lambda a, b: jnp.where(alive, a, b),
+                             cand_p, params)
+        new_sv = jax.tree.map(lambda a, b: jnp.where(alive, a, b),
+                              cand_sv, server)
+        n_rej = jnp.sum((~valid) & (weights > 0)).astype(jnp.int32)
+        m = round_metrics(dec, part)
+        m["alive"] = alive
+        m["n_rejected"] = n_rej
+        return new_p, new_sv, keep, m
+
+    @staticmethod
+    def _restore_rejected(keep, updated, gathered):
+        """Rejected/crashed clients keep their pre-round state
+        BIT-UNTOUCHED: a client whose report was quarantined must not
+        commit the local state its poisoned round produced (a SCAFFOLD
+        control variate trained through a fault would drift silently)."""
+        s = keep.shape[0]
+        return jax.tree.map(
+            lambda u, g: jnp.where(
+                keep.reshape((s,) + (1,) * (u.ndim - 1)), u, g),
+            updated, gathered)
+
+    def _round_q(self, params, server, clients, client_batches, rng, idx,
+                 weights, codes, clip):
+        """Quarantining twin of the S < N :meth:`_round` path."""
+        s = idx.shape[0]
+        rngs = jax.random.split(rng, s)
+        gathered = jax.tree.map(lambda x: jnp.take(x, idx, axis=0),
+                                clients)
+
+        def client_fn(cstate, cbatches, crng):
+            return self.algo.client(self.task, self.hp, params, cstate,
+                                    server, cbatches, crng)
+
+        msgs, updated = jax.vmap(client_fn)(gathered, client_batches, rngs)
+        new_p, new_sv, keep, m = self._aggregate_q(
+            params, server, msgs, weights, codes, clip, None)
+        restored = self._restore_rejected(keep, updated, gathered)
+        new_clients = jax.tree.map(
+            lambda bank, upd: bank.at[idx].set(upd), clients, restored)
+        return new_p, new_sv, new_clients, m
+
+    def _round_async_q(self, params, server, clients, client_batches, rng,
+                       idx, weights, tau, pstack, codes, clip):
+        """Quarantining twin of :meth:`_round_async` — same pstack
+        elision (``pstack=None`` proves zero staleness structurally),
+        same quarantine semantics as :meth:`_round_q`."""
+        s = idx.shape[0]
+        rngs = jax.random.split(rng, s)
+        gathered = jax.tree.map(lambda x: jnp.take(x, idx, axis=0),
+                                clients)
+
+        if pstack is None:
+            def client_fn(cstate, cbatches, crng):
+                return self.algo.client(self.task, self.hp, params, cstate,
+                                        server, cbatches, crng)
+
+            msgs, updated = jax.vmap(client_fn)(gathered, client_batches,
+                                                rngs)
+        else:
+            def client_fn(cparams, cstate, cbatches, crng):
+                return self.algo.client(self.task, self.hp, cparams,
+                                        cstate, server, cbatches, crng)
+
+            msgs, updated = jax.vmap(client_fn)(pstack, gathered,
+                                                client_batches, rngs)
+        new_p, new_sv, keep, m = self._aggregate_q(
+            params, server, msgs, weights, codes, clip,
+            None if pstack is None else tau)
+        restored = self._restore_rejected(keep, updated, gathered)
+        new_clients = jax.tree.map(
+            lambda bank, upd: bank.at[idx].set(upd), clients, restored)
+        return new_p, new_sv, new_clients, m
+
+    def _sharded_round_q_impl(self, params, server, clients, batches, kr,
+                              idx, weights, codes, s: int, n_rows: int,
+                              clip: float):
+        """Sharded quarantine round: bucket cohort + fault codes
+        (``bucket_cohort`` extras — padding slots carry code 0 and weight
+        0), pre-bucket batches, run the quarantining shard_map round."""
+        local, pos, w, lcodes = self._sharded.bucket_cohort(
+            idx, weights, n_rows, self._n_shards, codes)
+        flat_pos = pos.reshape(-1)
+        b = jax.tree.map(lambda x: jnp.take(x, flat_pos, axis=0), batches)
+        return self._sharded_round_q_fn(params, server, clients, b, kr,
+                                        local, pos, w, lcodes, s=s,
+                                        clip=clip)
+
+    def _sharded_round_async_q_impl(self, params, server, clients, batches,
+                                    kr, idx, weights, tau, pstack, codes,
+                                    s: int, n_rows: int, clip: float):
+        """Sharded async quarantine round: staleness AND fault codes ride
+        the ``bucket_cohort`` extras channel together."""
+        local, pos, w, ltau, lcodes = self._sharded.bucket_cohort(
+            idx, weights, n_rows, self._n_shards, tau, codes)
+        flat_pos = pos.reshape(-1)
+        take = lambda x: jnp.take(x, flat_pos, axis=0)
+        b = jax.tree.map(take, batches)
+        ps = (jax.tree.map(
+                  lambda x: jnp.broadcast_to(x[None],
+                                             (flat_pos.shape[0], *x.shape)),
+                  params)
+              if pstack is None else jax.tree.map(take, pstack))
+        return self._sharded_round_async_q_fn(
+            params, server, clients, b, ps, kr, local, pos, w, ltau,
+            lcodes, s=s, clip=clip)
+
+    def _banked_body_q(self, round_impl, bank, *, s):
+        """Quarantine twin of :meth:`_banked_body`.  Fault schedules are
+        always SCHEDULED (the fault mask is slot-aligned with explicit
+        cohort rows), so ``kc`` is split and discarded exactly like the
+        scheduled sync path — batch draws and round rngs stay identical
+        to the plain engine's."""
+        def fn(key, idx, codes, params, server, clients):
+            kc, kb, kr = jax.random.split(key, 3)
+            del kc
+            weights = jnp.ones((s,), jnp.float32)
+            batches = bank.sample(kb, idx)
+            return round_impl(params, server, clients, batches, kr, idx,
+                              weights, codes)
+        return fn
+
+    def _scan_body_q(self, s, bank, round_impl):
+        """Scan body for quarantined sync chunks: ys are ``(loss,
+        n_rejected)`` per round.  A dead round (all--1 cohort row) skips
+        like the plain body and reports 0 rejections; an all-rejected
+        LIVE round reports NaN loss (the ``alive`` flag masks the
+        carried-forward metric, which aggregates nothing)."""
+        fn = self._banked_body_q(round_impl, bank, s=s)
+
+        def body(carry, xs):
+            key, cohort, codes = xs
+
+            def live(args):
+                p, sv, c, m = fn(key, cohort, codes, *args)
+                loss = jnp.where(
+                    m["alive"],
+                    jnp.asarray(m.get("client_loss", jnp.float32(jnp.nan)),
+                                jnp.float32),
+                    jnp.float32(jnp.nan))
+                return p, sv, c, loss, m["n_rejected"]
+
+            p, sv, c, loss, nrej = jax.lax.cond(
+                cohort[0] >= 0, live,
+                lambda args: (*args, jnp.float32(jnp.nan), jnp.int32(0)),
+                carry)
+            return (p, sv, c), (loss, nrej)
+
+        return body
+
+    def _scan_rounds_q(self, params, server, clients, keys, cohorts,
+                       faults, bank, *, s: int, clip: float):
+        """One compiled quarantined chunk on the vmap engine (``clip`` is
+        static — one program per (chunk, S, clip))."""
+        body = self._scan_body_q(
+            s, bank,
+            lambda p, sv, c, b, kr, idx, w, codes: self._round_q(
+                p, sv, c, b, kr, idx, w, codes, clip))
+        (p, sv, c), (losses, nrej) = jax.lax.scan(
+            body, (params, server, clients), (keys, cohorts, faults))
+        return p, sv, c, losses, nrej
+
+    def _scan_rounds_sharded_q(self, params, server, clients, keys,
+                               cohorts, faults, bank, *, s: int,
+                               clip: float):
+        """Quarantined chunk on the mesh engine."""
+        body = self._scan_body_q(
+            s, bank,
+            lambda p, sv, c, b, kr, idx, w, codes:
+                self._sharded_round_q_impl(p, sv, c, b, kr, idx, w, codes,
+                                           s, bank.n_clients, clip))
+        (p, sv, c), (losses, nrej) = jax.lax.scan(
+            body, (params, server, clients), (keys, cohorts, faults))
+        return p, sv, c, losses, nrej
+
+    def _banked_body_async_q(self, round_impl, bank, *, s, window, wpow):
+        """Quarantine twin of :meth:`_banked_body_async` — identical key
+        discipline, staleness weights, and ring-gather elision."""
+        def fn(key, idx, tau, t, codes, ring, params, server, clients):
+            kc, kb, kr = jax.random.split(key, 3)
+            del kc
+            weights = (jnp.ones((s,), jnp.float32) if wpow == 0.0 else
+                       (1.0 + tau.astype(jnp.float32))
+                       ** jnp.float32(-wpow))
+            batches = bank.sample(kb, idx)
+            pstack = None if window == 1 else jax.tree.map(
+                lambda r: jnp.take(r, (t - tau) % window, axis=0), ring)
+            return round_impl(params, server, clients, batches, kr, idx,
+                              weights, tau, pstack, codes)
+        return fn
+
+    def _scan_body_async_q(self, s, window, wpow, bank, round_impl):
+        """Quarantined buffered-async scan body: the ring write stays
+        BEFORE the skip cond (a flushless round still dispatched
+        clients), ys are ``(loss, n_rejected)``."""
+        fn = self._banked_body_async_q(round_impl, bank, s=s,
+                                       window=window, wpow=wpow)
+
+        def body(carry, xs):
+            key, cohort, tau, t, codes = xs
+            p, sv, c, ring = carry
+            if window > 1:
+                ring = jax.tree.map(
+                    lambda r, x: jax.lax.dynamic_update_index_in_dim(
+                        r, x, t % window, 0), ring, p)
+
+            def live(args):
+                p0, sv0, c0 = args
+                p1, sv1, c1, m = fn(key, cohort, tau, t, codes, ring, p0,
+                                    sv0, c0)
+                loss = jnp.where(
+                    m["alive"],
+                    jnp.asarray(m.get("client_loss", jnp.float32(jnp.nan)),
+                                jnp.float32),
+                    jnp.float32(jnp.nan))
+                return p1, sv1, c1, loss, m["n_rejected"]
+
+            p, sv, c, loss, nrej = jax.lax.cond(
+                cohort[0] >= 0, live,
+                lambda args: (*args, jnp.float32(jnp.nan), jnp.int32(0)),
+                (p, sv, c))
+            return (p, sv, c, ring), (loss, nrej)
+
+        return body
+
+    def _scan_rounds_async_q(self, params, server, clients, ring, keys,
+                             cohorts, stale, ts, faults, bank, *, s: int,
+                             window: int, wpow: float, clip: float):
+        """Quarantined buffered-async chunk on the vmap engine."""
+        body = self._scan_body_async_q(
+            s, window, wpow, bank,
+            lambda p, sv, c, b, kr, idx, w, tau, ps, codes:
+                self._round_async_q(p, sv, c, b, kr, idx, w, tau, ps,
+                                    codes, clip))
+        (p, sv, c, ring), (losses, nrej) = jax.lax.scan(
+            body, (params, server, clients, ring),
+            (keys, cohorts, stale, ts, faults))
+        return p, sv, c, ring, losses, nrej
+
+    def _scan_rounds_async_sharded_q(self, params, server, clients, ring,
+                                     keys, cohorts, stale, ts, faults,
+                                     bank, *, s: int, window: int,
+                                     wpow: float, clip: float):
+        """Quarantined buffered-async chunk on the mesh engine."""
+        body = self._scan_body_async_q(
+            s, window, wpow, bank,
+            lambda p, sv, c, b, kr, idx, w, tau, ps, codes:
+                self._sharded_round_async_q_impl(
+                    p, sv, c, b, kr, idx, w, tau, ps, codes, s,
+                    bank.n_clients, clip))
+        (p, sv, c, ring), (losses, nrej) = jax.lax.scan(
+            body, (params, server, clients, ring),
+            (keys, cohorts, stale, ts, faults))
+        return p, sv, c, ring, losses, nrej
+
     def run_scanned(self, rng, rounds: int, *, sample_clients: int = 0,
                     eval_fn=None, eval_every: int = 1, cohorts=None):
         """Scan-compiled multi-round driver: chunks of ``eval_every``
@@ -1021,8 +1335,14 @@ class FedSim:
             return self._run_scanned_paged(state, keys, rounds, bank, plan,
                                            eval_fn, eval_every)
         if plan.is_async:
+            if plan.has_faults:
+                return self._run_scanned_async_q(state, keys, rounds, bank,
+                                                 plan, eval_fn, eval_every)
             return self._run_scanned_async(state, keys, rounds, bank, plan,
                                            eval_fn, eval_every)
+        if plan.has_faults:
+            return self._run_scanned_q(state, keys, rounds, bank, plan,
+                                       eval_fn, eval_every)
         s, scheduled = plan.s, plan.scheduled
         scan = (self._scan_sharded_jit if self.mesh is not None
                 else self._scan_jit)
@@ -1078,6 +1398,71 @@ class FedSim:
                 hist["loss"].append(float(losses[-1]))
         return state, hist
 
+    def _fault_hist(self, plan, rounds: int) -> dict:
+        """History skeleton for fault-tolerant runs: the host-side event
+        counters land whole (they were resolved before round 0), the
+        in-graph ``n_rejected`` stream is appended per chunk."""
+        z = np.zeros(rounds, np.int32)
+        return {"round": [], "metric": [], "loss": [],
+                "n_failed": (np.asarray(plan.n_failed)
+                             if plan.n_failed is not None else z),
+                "n_retried": (np.asarray(plan.n_retried)
+                              if plan.n_retried is not None else z.copy())}
+
+    def _run_scanned_q(self, state: FedState, keys, rounds: int, bank,
+                       plan, eval_fn, eval_every: int):
+        """Resident sync driver for FAULT schedules: the plain chunk loop
+        dispatching the quarantined jit, fault-code rows riding along and
+        the per-round ``n_rejected`` stream collected into the history
+        next to the host-side ``n_failed``/``n_retried`` counters."""
+        hist = self._fault_hist(plan, rounds)
+        nrej_chunks = []
+        t = 0
+        while t < rounds:
+            chunk = min(eval_every, rounds - t)
+            p, sv, c, losses, nrej = self._scan_q_jit(
+                state.params, state.server, state.clients,
+                keys[t:t + chunk], jnp.asarray(plan.cohorts[t:t + chunk]),
+                jnp.asarray(plan.faults[t:t + chunk]), bank,
+                s=plan.s, clip=plan.norm_clip)
+            nrej_chunks.append(np.asarray(nrej))
+            t += chunk
+            state = FedState(params=p, server=sv, clients=c, round=t)
+            if eval_fn is not None:
+                hist["round"].append(t - 1)
+                hist["metric"].append(float(eval_fn(state.params)))
+                hist["loss"].append(float(losses[-1]))
+        hist["n_rejected"] = np.concatenate(nrej_chunks)
+        return state, hist
+
+    def _run_scanned_async_q(self, state: FedState, keys, rounds: int,
+                             bank, plan, eval_fn, eval_every: int):
+        """Resident buffered-async driver for FAULT schedules — the
+        async chunk loop plus fault-code rows and the counter stream."""
+        ring = self._make_ring(state.params, plan.window)
+        hist = self._fault_hist(plan, rounds)
+        nrej_chunks = []
+        t = 0
+        while t < rounds:
+            chunk = min(eval_every, rounds - t)
+            p, sv, c, ring, losses, nrej = self._scan_async_q_jit(
+                state.params, state.server, state.clients, ring,
+                keys[t:t + chunk], jnp.asarray(plan.cohorts[t:t + chunk]),
+                jnp.asarray(plan.staleness[t:t + chunk]),
+                jnp.arange(t, t + chunk, dtype=jnp.int32),
+                jnp.asarray(plan.faults[t:t + chunk]), bank,
+                s=plan.s, window=plan.window, wpow=plan.weight_pow,
+                clip=plan.norm_clip)
+            nrej_chunks.append(np.asarray(nrej))
+            t += chunk
+            state = FedState(params=p, server=sv, clients=c, round=t)
+            if eval_fn is not None:
+                hist["round"].append(t - 1)
+                hist["metric"].append(float(eval_fn(state.params)))
+                hist["loss"].append(float(losses[-1]))
+        hist["n_rejected"] = np.concatenate(nrej_chunks)
+        return state, hist
+
     def _run_scanned_paged(self, state: FedState, keys, rounds: int, bank,
                            plan, eval_fn, eval_every: int):
         """The out-of-core half of :meth:`run_scanned`.
@@ -1122,13 +1507,28 @@ class FedSim:
         ring = (self._make_ring(state.params, plan.window)
                 if plan.is_async else None)
         sh = self._stage_sh
-        hist = {"round": [], "metric": [], "loss": []}
+        # fault plans compose with paging like staleness does: the fault
+        # mask is slot-aligned with the cohort rows, so the remapped local
+        # positions need no code remapping — the codes ride along verbatim
+        hist = (self._fault_hist(plan, rounds) if plan.has_faults
+                else {"round": [], "metric": [], "loss": []})
+        nrej_chunks = []
         bank.prefetch(plans[0][1], sharding=sh)
         t = 0
         for i, (chunk, union, n_live, local) in enumerate(plans):
             staged_bank = bank.gather(union, sharding=sh)
             staged_clients = store.gather(union, sharding=sh)
-            if plan.is_async:
+            if plan.is_async and plan.has_faults:
+                p, sv, c, ring, losses, nrej = self._scan_async_q_jit(
+                    state.params, state.server, staged_clients, ring,
+                    keys[t:t + chunk], jnp.asarray(local),
+                    jnp.asarray(plan.staleness[t:t + chunk]),
+                    jnp.arange(t, t + chunk, dtype=jnp.int32),
+                    jnp.asarray(plan.faults[t:t + chunk]),
+                    staged_bank, s=s, window=plan.window,
+                    wpow=plan.weight_pow, clip=plan.norm_clip)
+                nrej_chunks.append(np.asarray(nrej))
+            elif plan.is_async:
                 p, sv, c, ring, losses = self._scan_async_jit(
                     state.params, state.server, staged_clients, ring,
                     keys[t:t + chunk], jnp.asarray(local),
@@ -1136,6 +1536,13 @@ class FedSim:
                     jnp.arange(t, t + chunk, dtype=jnp.int32),
                     staged_bank, s=s, window=plan.window,
                     wpow=plan.weight_pow)
+            elif plan.has_faults:
+                p, sv, c, losses, nrej = self._scan_q_jit(
+                    state.params, state.server, staged_clients,
+                    keys[t:t + chunk], jnp.asarray(local),
+                    jnp.asarray(plan.faults[t:t + chunk]), staged_bank,
+                    s=s, clip=plan.norm_clip)
+                nrej_chunks.append(np.asarray(nrej))
             else:
                 p, sv, c, losses = scan(state.params, state.server,
                                         staged_clients, keys[t:t + chunk],
@@ -1152,6 +1559,8 @@ class FedSim:
                 hist["round"].append(t - 1)
                 hist["metric"].append(float(eval_fn(state.params)))
                 hist["loss"].append(float(losses[-1]))
+        if plan.has_faults:
+            hist["n_rejected"] = np.concatenate(nrej_chunks)
         return state, hist
 
     # ------------------------------------------------------------ loop -----
