@@ -3,9 +3,9 @@ baseline and fail tier-1 on >tol regressions.
 
 Usage (scripts/ci.sh wires this up)::
 
-    python -m benchmarks.run --smoke            # writes BENCH_pr9.json
-    python -m benchmarks.bench_gate BENCH_pr9.json \
-        benchmarks/baseline_pr9.json --tol 0.25
+    python -m benchmarks.run --smoke            # writes BENCH_pr10.json
+    python -m benchmarks.bench_gate BENCH_pr10.json \
+        benchmarks/baseline_pr10.json --tol 0.25
 
 Both files carry a ``gates`` section of machine-independent RATIOS
 (packed-vs-per-leaf speedup, K-sweep growth, sharded-vs-vmap overhead,
@@ -18,8 +18,8 @@ pass).
 
 Refresh the baseline with ``--update-baseline``::
 
-    python -m benchmarks.bench_gate BENCH_pr9.json \
-        benchmarks/baseline_pr9.json --update-baseline
+    python -m benchmarks.bench_gate BENCH_pr10.json \
+        benchmarks/baseline_pr10.json --update-baseline
 
 which copies the current run's gates over the baseline file — but FIRST
 checks the current run against the existing baseline and REFUSES to
@@ -100,7 +100,7 @@ def update_baseline(current: dict, baseline: dict, baseline_path: str,
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("current", help="BENCH_pr9.json from this run")
+    ap.add_argument("current", help="BENCH_pr10.json from this run")
     ap.add_argument("baseline", help="checked-in baseline json")
     ap.add_argument("--tol", type=float, default=0.25,
                     help="allowed fractional regression (default 0.25)")

@@ -16,9 +16,23 @@ Two questions, two sections:
   fraction of the resident footprint.  Run it in a FRESH process
   (``python -m benchmarks.bench_paging --scale``, its own CI stage) so
   other benches' leftover device arrays can't pollute the watermark.
+
+PR 10 adds the DISK rung (``repro.fl.coldstore``), two more sections:
+
+* :func:`coldtier_section` — the mmap tier's price over host-paged at
+  the smoke size (``coldtier_overhead`` timing gate) and the exact
+  resident-vs-staged byte ratio through the disk tier
+  (``coldtier_bytes_ratio`` gate).
+* :func:`scale_cold` (``--scale --tier mmap``, fresh process) — the
+  N = 10⁶ residency rung: a million stateless clients stream from an
+  on-disk dataset with host RSS asserted BOUNDED (the cold bytes never
+  enter the process), then N = 2.5·10⁵ STATEFUL scaffold clients with
+  sparse zero-init mmap state and the device watermark assert, plus a
+  scatter-overlap on/off timing pair on the stateful rung.
 """
 from __future__ import annotations
 
+import os
 import sys
 import time
 
@@ -142,11 +156,235 @@ def scale(n_clients=100_000, s=64, rounds=8, eval_every=2, d=16) -> int:
     return 0
 
 
+def coldtier_section(rounds=32, n_clients=256, s=16, eval_every=8, d=32,
+                     reps=3):
+    """mmap cold tier vs host-paged: scanned us/round + exact bytes.
+
+    Same shape as :func:`smoke_section` one tier further out — scaffold
+    keeps state gather/scatter on the clock, and the staged chunks are
+    bytewise identical across tiers, so the timing ratio isolates pure
+    disk-tier cost (page faults + the pinned staging hop)."""
+    ds = _convex_ds(n=4 * n_clients, d=d, n_clients=n_clients)
+    task = ConvexTask(LogisticModel(d=d, lam=1e-3))
+    hp = HParams(lr=0.3)
+
+    def scanned_once(sim, seed):
+        t0 = time.perf_counter()
+        st, _ = sim.run_scanned(jax.random.PRNGKey(seed), rounds,
+                                sample_clients=s, eval_every=eval_every)
+        jax.block_until_ready(st.params)
+        return (time.perf_counter() - t0) / rounds * 1e6
+
+    from repro.data.streaming import StreamingFederatedDataset
+    sfd = StreamingFederatedDataset.from_dataset(ds)
+    with sfd.mmap_bank(steps=1, batch=0, owned=True) as mbank:
+        out = {}
+        for tag, bank in (("hostpaged", ds.paged_bank(steps=1, batch=0)),
+                          ("mmap", mbank)):
+            sim = FedSim(task.with_data(bank), "scaffold", hp, n_clients)
+            scanned_once(sim, 0)                      # compile
+            out[tag] = (sim, min(scanned_once(sim, r) for r in range(reps)))
+        us_h, us_m = out["hostpaged"][1], out["mmap"][1]
+        emit("coldtier/scanned/hostpaged", us_h,
+             f"rounds={rounds},S={s}/{n_clients},chunk={eval_every}")
+        emit("coldtier/scanned/mmap", us_m,
+             f"overhead_vs_hostpaged={us_m / us_h:.2f}x")
+
+        # exact bytes through the DISK tier: resident rows vs one staged
+        # chunk — the out-of-core property itself, one rung further out
+        sim_m = out["mmap"][0]
+        st_m = sim_m.init(jax.random.PRNGKey(0))
+        state_row = sum(int(np.prod(np.shape(x))) * 4
+                        for x in jax.tree.leaves(
+                            sim_m.algo.init_client(task, st_m.params)))
+        resident_rows = _bank_bytes(
+            _convex_ds(n=4 * n_clients, d=d,
+                       n_clients=n_clients).device_bank(steps=1, batch=0)
+        ) + n_clients * state_row
+        sim_m.round(st_m, None, jax.random.PRNGKey(1), sample_clients=s)
+        staged_rows = mbank.last_staged_bytes \
+            + st_m.clients.last_staged_bytes
+        emit("coldtier/bytes/resident_rows", float(resident_rows),
+             f"N={n_clients} data+state rows on device")
+        emit("coldtier/bytes/staged_rows", float(staged_rows),
+             f"one S={s} chunk from disk; "
+             f"ratio={resident_rows / staged_rows:.2f}x")
+
+
+def _rss_kb(field: str = "RssAnon") -> int:
+    """A resident-set line from /proc/self/status, in kB.
+
+    ``RssAnon`` is the residency metric the cold-tier asserts on:
+    process-OWNED memory (heap, device buffers on the CPU backend) that
+    cannot be reclaimed.  ``RssFile`` — the mapped cold-file pages — is
+    reported but not asserted: those pages are clean page cache the
+    kernel drops under pressure (and on this kernel a single faulted
+    row maps a whole 2 MB large folio, so the number tracks fault
+    count × folio size, not memory the process is holding)."""
+    with open("/proc/self/status") as f:
+        for line in f:
+            if line.startswith(field):
+                return int(line.split()[1])
+    return 0
+
+
+def _stream_convex(directory, n_clients, per_client, d, seed=0):
+    """Write an N-client convex dataset STRAIGHT to disk in blocks —
+    the [n_samples, d] features never exist in process memory."""
+    from repro.data.streaming import StreamingFederatedDataset
+    rng = np.random.default_rng(seed)
+    w = rng.normal(size=d).astype(np.float32) / np.sqrt(d)
+    n = n_clients * per_client
+    wr = StreamingFederatedDataset.writer(
+        directory, x_shape=(d,), x_dtype=np.float32, y_shape=(),
+        y_dtype=np.float32, m=per_client)
+    block = 1 << 15
+    for lo in range(0, n, block):
+        x = rng.normal(size=(min(block, n - lo), d)).astype(np.float32)
+        y = np.sign(x @ w + 0.1 * rng.normal(size=len(x))
+                    ).astype(np.float32)
+        y[y == 0] = 1.0
+        wr.add_samples(x, y)
+    idx = np.arange(n, dtype=np.int64).reshape(n_clients, per_client)
+    sizes = np.full(n_clients, per_client, np.int32)
+    for lo in range(0, n_clients, block):
+        wr.add_clients(idx[lo:lo + block], sizes[lo:lo + block])
+    return wr.finalize()
+
+
+def scale_cold() -> int:
+    """The DISK residency rungs (fresh process: ``--scale --tier mmap``).
+
+    Rung 1 — N = 10⁶ STATELESS (fedavg): the cold bytes live on disk
+    and must stay there; asserts the run's ANONYMOUS host-RSS growth
+    (process-owned memory, sampled at every chunk boundary) is under
+    half the cold footprint — copying the dataset into the process,
+    the failure mode this tier exists to prevent, would blow straight
+    past it.  Rung 2 — N = 2.5·10⁵ STATEFUL (scaffold): sparse
+    zero-init mmap state, the device watermark assert from the host
+    rung, and a scatter-overlap on/off timing pair (min of 2 passes
+    each)."""
+    import tempfile
+    task32 = ConvexTask(LogisticModel(d=32, lam=1e-3))
+    ok = True
+
+    def host_cohorts(n, s, rounds, seed=0):
+        """Host-drawn explicit cohorts: at this N the in-graph sampler
+        (``jax.random.permutation`` over [N], vmapped over rounds) would
+        dominate BOTH watermarks being asserted — O(N·rounds) device
+        intermediates and arena RSS — and the rungs measure residency,
+        not the sampler."""
+        rng = np.random.default_rng(seed)
+        return np.stack([np.sort(rng.choice(n, s, replace=False))
+                         for _ in range(rounds)]).astype(np.int32)
+
+    # ---- rung 1: N = 1e6 stateless, bounded anonymous host RSS ----
+    n1 = 1_000_000
+    with tempfile.TemporaryDirectory(prefix="coldscale-") as tmp:
+        sfd = _stream_convex(tmp, n1, per_client=4, d=32)
+        cold = sum(os.path.getsize(os.path.join(tmp, f))
+                   for f in os.listdir(tmp))
+        with sfd.mmap_bank(steps=1, batch=0) as bank:
+            sim = FedSim(task32.with_data(bank), "fedavg", HParams(lr=0.3),
+                         n1)
+            anon0, file0 = _rss_kb("RssAnon"), _rss_kb("RssFile")
+            peak_anon = anon0
+
+            def anon_watermark(params):
+                nonlocal peak_anon
+                peak_anon = max(peak_anon, _rss_kb("RssAnon"))
+                return 0.0
+
+            t0 = time.perf_counter()
+            st, _ = sim.run_scanned(jax.random.PRNGKey(0), 6,
+                                    cohorts=host_cohorts(n1, 64, 6),
+                                    eval_every=2, eval_fn=anon_watermark)
+            jax.block_until_ready(st.params)
+            us = (time.perf_counter() - t0) / 6 * 1e6
+            anon_delta = (peak_anon - anon0) * 1024
+            file_delta = (_rss_kb("RssFile") - file0) * 1024
+        emit("coldtier/scale/n1e6_round_us", us,
+             f"N={n1},S=64,chunk=2,fedavg,stateless")
+        emit("coldtier/scale/n1e6_anon_delta_bytes", float(anon_delta),
+             f"cold_disk={cold}B,mapped_file_delta={file_delta}B")
+        assert st.clients.stateless
+        if anon_delta * 2 > cold:
+            print(f"COLDTIER-SCALE-FAIL: anonymous RSS grew {anon_delta}B "
+                  f"against {cold}B of cold disk — the dataset is being "
+                  "copied into the process", file=sys.stderr)
+            ok = False
+
+    # ---- rung 2: N = 2.5e5 stateful, device watermark + overlap ----
+    n2, s, rounds, eval_every, d = 250_000, 64, 8, 2, 16
+    task16 = ConvexTask(LogisticModel(d=d, lam=1e-3))
+    with tempfile.TemporaryDirectory(prefix="coldscale-") as tmp:
+        sfd = _stream_convex(tmp, n2, per_client=1, d=d)
+        peak = 0
+
+        def watermark(params):
+            nonlocal peak
+            live = sum(int(np.prod(a.shape)) * np.dtype(a.dtype).itemsize
+                       for a in jax.live_arrays())
+            peak = max(peak, live)
+            return 0.0
+
+        cohorts = host_cohorts(n2, s, rounds, seed=1)
+        us_by_overlap = {}
+        for tag, overlap in (("overlap_on", True), ("overlap_off", False)):
+            with sfd.mmap_bank(steps=1, batch=0) as bank:
+                sim = FedSim(task16.with_data(bank), "scaffold",
+                             HParams(lr=0.3), n2, scatter_overlap=overlap)
+                sim.run_scanned(jax.random.PRNGKey(0), 2,
+                                cohorts=cohorts[:2],
+                                eval_every=eval_every)   # compile + warmup
+                best = np.inf
+                for _ in range(2):                       # min-of-passes
+                    t0 = time.perf_counter()
+                    st, _ = sim.run_scanned(jax.random.PRNGKey(1), rounds,
+                                            cohorts=cohorts,
+                                            eval_every=eval_every,
+                                            eval_fn=watermark)
+                    jax.block_until_ready(st.params)
+                    best = min(best,
+                               (time.perf_counter() - t0) / rounds * 1e6)
+                    st.clients.close()
+                us_by_overlap[tag] = best
+                state_row = sum(
+                    int(np.prod(np.shape(x))) * 4 for x in jax.tree.leaves(
+                        sim.algo.init_client(task16, st.params)))
+                resident = bank.host_bytes() + n2 * state_row
+                assert not st.clients.stateless, "rung 2 must be STATEFUL"
+        on, off = us_by_overlap["overlap_on"], us_by_overlap["overlap_off"]
+        emit("coldtier/scale/overlap_on", on,
+             f"N={n2},S={s},chunk={eval_every},scaffold,mmap state")
+        emit("coldtier/scale/overlap_off", off,
+             f"sync scatter; on/off={on / off:.2f}x")
+        emit("coldtier/scale/device_peak_bytes", float(peak),
+             f"resident_equiv={resident}B")
+        if peak * 4 > resident:
+            print(f"COLDTIER-SCALE-FAIL: device watermark {peak}B is not "
+                  f"bounded by the cohort (resident equiv {resident}B)",
+                  file=sys.stderr)
+            ok = False
+
+    if ok:
+        print(f"COLDTIER-SCALE-OK: N={n1} streamed from disk with "
+              f"anon_delta={anon_delta}B; N={n2} stateful at {peak}B "
+              "device watermark")
+    return 0 if ok else 1
+
+
 def main():
     if "--scale" in sys.argv:
         print("name,us_per_call,derived")
-        sys.exit(scale())
+        tier = (sys.argv[sys.argv.index("--tier") + 1]
+                if "--tier" in sys.argv else "host")
+        if tier not in ("host", "mmap"):
+            print(f"unknown --tier {tier!r} (host|mmap)", file=sys.stderr)
+            sys.exit(2)
+        sys.exit(scale_cold() if tier == "mmap" else scale())
     smoke_section()
+    coldtier_section()
 
 
 if __name__ == "__main__":

@@ -23,7 +23,7 @@ from repro.models.simple import LogisticModel, MLPModel
 
 
 #: every ``emit`` also lands here — ``benchmarks.run --smoke`` serializes
-#: the registry (plus derived regression-gate ratios) to BENCH_pr9.json
+#: the registry (plus derived regression-gate ratios) to BENCH_pr10.json
 RECORDS: dict[str, dict] = {}
 
 

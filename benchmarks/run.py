@@ -15,17 +15,20 @@ solve, adaptive Newton–Schulz, fused Eq. 12 mixing — the three
 ``pallas_*_speedup`` gates), the K-sweep factor-once amortization, the
 sharded-vs-vmap engine comparison on a forced 8-device host mesh, the
 scanned-vs-per-round dispatch ratio, the paged-vs-resident ClientStore
-overhead and exact staged-bytes ratios, the buffered-async-vs-sync
+overhead and exact staged-bytes ratios, the disk-tier
+``coldtier_overhead`` / ``coldtier_bytes_ratio`` pair (mmap store vs
+host-paged at the same shapes), the buffered-async-vs-sync
 ``async_overhead`` ratio, the fault-quarantine ``fault_overhead``
 ratio, and the comm-bytes
 wire-transform on/off ratios — and serializes every emitted row plus
-machine-independent gate RATIOS to ``BENCH_pr9.json``.
+machine-independent gate RATIOS to ``BENCH_pr10.json``.
 ``benchmarks.bench_gate`` compares those
-ratios against the checked-in ``benchmarks/baseline_pr9.json`` and
+ratios against the checked-in ``benchmarks/baseline_pr10.json`` and
 fails tier-1 on >25% regressions (scripts/ci.sh wires both up; the
-N ≥ 10⁵ paged scale smoke runs as its OWN ci.sh stage —
-``python -m benchmarks.bench_paging --scale`` in a fresh process, so
-the ``jax.live_arrays()`` device watermark it asserts isn't polluted
+N ≥ 10⁵ paged scale smokes run as their OWN ci.sh stages —
+``python -m benchmarks.bench_paging --scale [--tier mmap]`` in fresh
+processes, so the watermarks they assert (``jax.live_arrays()`` on the
+host tier, peak ``RssAnon`` on the N = 10⁶ disk tier) aren't polluted
 by other benches' leftovers).
 """
 from __future__ import annotations
@@ -100,6 +103,17 @@ _GATE_SPECS = {
     "paging_overhead": (
         "paging/scanned/paged", "paging/scanned/resident", "higher",
         "paging"),
+    # disk-tier ClientStore (repro.fl.coldstore): the mmap rung's price
+    # over host-paged at the same shapes (a blow-up means cold reads
+    # stopped being row-granular — e.g. a stage faulting whole leaves)
+    "coldtier_overhead": (
+        "coldtier/scanned/mmap", "coldtier/scanned/hostpaged", "higher",
+        "coldtier"),
+    # EXACT device bytes through the disk tier: resident rows ÷ one
+    # staged chunk (the out-of-core property, one rung further out)
+    "coldtier_bytes_ratio": (
+        "coldtier/bytes/resident_rows", "coldtier/bytes/staged_rows",
+        "lower", "coldtier"),
     # EXACT device bytes: resident [N, ...] rows ÷ one staged chunk.  A
     # collapse means the paged path silently stages (close to) the whole
     # population — the out-of-core property itself regressed.
@@ -155,7 +169,7 @@ def _median_gates(samples: list[dict]) -> dict:
             for k, vs in merged.items()}
 
 
-def smoke(out_path: str = "BENCH_pr9.json") -> int:
+def smoke(out_path: str = "BENCH_pr10.json") -> int:
     from benchmarks import (bench_async, bench_comm, bench_cost,
                             bench_faults, bench_local_epochs, bench_paging,
                             bench_roofline, bench_sampling, bench_scan)
@@ -180,6 +194,11 @@ def smoke(out_path: str = "BENCH_pr9.json") -> int:
     for _ in range(2):
         failed += _run([("paging", bench_paging.smoke_section)])
         samples.append(_gates(RECORDS, "paging"))
+    # disk-tier (mmap) vs host-paged store: timing ratio (median over
+    # repetitions) plus the exact resident/staged row-bytes ratio
+    for _ in range(2):
+        failed += _run([("coldtier", bench_paging.coldtier_section)])
+        samples.append(_gates(RECORDS, "coldtier"))
     # buffered-async vs synchronous replay of the same flush schedule
     for _ in range(2):
         failed += _run([("async", bench_async.churn)])
@@ -210,7 +229,7 @@ def smoke(out_path: str = "BENCH_pr9.json") -> int:
     # repeating it would blow the ci.sh stage budget); its rows are
     # already steady-state means over 8 post-compile reps, and the
     # checked-in baselines carry the sharded family's wider noise
-    # envelope (see benchmarks/baseline_pr9.json meta)
+    # envelope (see benchmarks/baseline_pr10.json meta)
     failed += _run([("sharded", lambda: bench_sampling.sharded(reps=8))])
     samples.append(_gates(RECORDS, "sharded"))
 

@@ -6,17 +6,18 @@
 #                      skipped with --fast (local pre-commit use)
 #   2. pytest          ROADMAP tier-1 command + JUnit XML for the
 #                      workflow's test-report annotation (CI_JUNIT path)
-#   3. bench smoke     benchmarks.run --smoke writes BENCH_pr9.json; its
+#   3. bench smoke     benchmarks.run --smoke writes BENCH_pr10.json; its
 #       + gate         first stage is the interpret-mode kernel smoke
 #                      (every Pallas path: gram, NS inverse, fused
 #                      invert-and-apply, bank), then the gate rows
 #                      (exact comm-bytes wire-transform on/off ratios,
 #                      packed-vs-per-leaf, scanned-vs-per-round dispatch,
 #                      K-sweep, paged-vs-resident ClientStore overhead +
-#                      staged-bytes, sharded-vs-vmap on a forced 8-device
+#                      staged-bytes, the disk-tier mmap-vs-host-paged
+#                      pair, sharded-vs-vmap on a forced 8-device
 #                      host mesh); benchmarks.bench_gate fails tier-1 on
 #                      >25% ratio regressions vs the checked-in
-#                      benchmarks/baseline_pr9.json.
+#                      benchmarks/baseline_pr10.json.
 #                      CI_SKIP_BENCH_GATE=1 replaces this with the bare
 #                      kernel smoke (benchmarks.bench_cost --smoke).
 #   4. paged scale     benchmarks.bench_paging --scale in a FRESH process
@@ -27,6 +28,14 @@
 #                      fraction of the resident-equivalent footprint —
 #                      the out-of-core property itself, N >> S, asserted
 #                      end-to-end.  Skipped with CI_SKIP_BENCH_GATE=1.
+#   5. coldtier scale  benchmarks.bench_paging --scale --tier mmap, also
+#                      a FRESH process: N = 10^6 stateless clients
+#                      streamed from a disk-backed StreamingFederatedDataset
+#                      with peak RssAnon asserted against the cold bytes,
+#                      then N = 2.5*10^5 STATEFUL scaffold clients through
+#                      the mmap ClientStore with write-behind scatter
+#                      overlap on/off timed and the device watermark
+#                      asserted.  Skipped with CI_SKIP_BENCH_GATE=1.
 #
 # Every stage runs under `timeout`; exit 124 is reported as a TIMEOUT
 # (infra budget exceeded), distinct from a test/bench FAILURE.
@@ -77,10 +86,12 @@ if [[ "${CI_SKIP_BENCH_GATE:-0}" != 1 ]]; then
     run_stage bench-smoke "${CI_BENCH_TIMEOUT:-1500}" \
         python -m benchmarks.run --smoke
     run_stage bench-gate 120 \
-        python -m benchmarks.bench_gate BENCH_pr9.json \
-            benchmarks/baseline_pr9.json --tol 0.25
+        python -m benchmarks.bench_gate BENCH_pr10.json \
+            benchmarks/baseline_pr10.json --tol 0.25
     run_stage paged-scale "${CI_PAGED_TIMEOUT:-600}" \
         python -m benchmarks.bench_paging --scale
+    run_stage coldtier-scale "${CI_COLD_TIMEOUT:-900}" \
+        python -m benchmarks.bench_paging --scale --tier mmap
 else
     run_stage kernel-smoke "${CI_BENCH_TIMEOUT:-600}" \
         python -m benchmarks.bench_cost --smoke

@@ -6,3 +6,6 @@ from repro.data.federated import (
     FederatedDataset, DeviceDataBank, HostPagedBank, build_round_batches,
     steps_per_epoch,
 )
+from repro.data.streaming import (
+    StreamingFederatedDataset, StreamWriter, bucket_boundaries,
+)

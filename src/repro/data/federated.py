@@ -28,6 +28,11 @@ Both banks implement the :class:`repro.fl.store.ClientStore` protocol
   ``prefetch`` pre-stages the next chunk's rows while the current chunk
   computes (double-buffering over the scanned chunk boundary); data is
   read-only, so ``scatter`` is a no-op.
+
+One rung further out, :meth:`FederatedDataset.mmap_bank` spills the
+dataset to disk (``repro.data.streaming``) and opens the mmap-backed
+``MmapPagedBank`` twin (``repro.fl.coldstore``) — same protocol, cold
+storage on disk instead of host RAM.
 """
 from __future__ import annotations
 
@@ -113,6 +118,26 @@ class FederatedDataset:
             idx=idx.astype(np.int64), sizes=sizes,
             spec=_BankSpec(steps=steps, batch=batch,
                            min_size=int(sizes.min())))
+
+    def mmap_bank(self, steps: int, batch: int, *, directory=None,
+                  boundaries=None):
+        """Spill the dataset to disk and open the DISK-tier ClientStore —
+        a :class:`repro.fl.coldstore.MmapPagedBank` staging chunk unions
+        straight from the on-disk maps (see
+        :class:`repro.data.streaming.StreamingFederatedDataset`).
+
+        ``directory=None`` writes a fresh temp dir that the returned
+        bank OWNS (removed on ``close()``/gc/interpreter exit, together
+        with any paired :meth:`~repro.fl.coldstore.MmapPagedBank.
+        state_store` placed under it); an explicit ``directory``
+        persists.  ``boundaries`` enables bucketed staging widths
+        (:func:`repro.data.streaming.bucket_boundaries`)."""
+        from repro.data.streaming import StreamingFederatedDataset
+        owned = directory is None
+        sfd = StreamingFederatedDataset.from_dataset(
+            self, directory=directory)
+        return sfd.mmap_bank(steps, batch, boundaries=boundaries,
+                             owned=owned)
 
     def client_full_batches(self, k_steps: int) -> dict:
         """[N, K, M, ...] — every step sees the client's full shard (Test 1:
@@ -304,6 +329,15 @@ class HostPagedBank:
         key = self._key(rows, sharding)
         if key not in self._cache:
             self._cache[key] = self._stage(rows, sharding)
+
+    def state_store(self, one_client, n: int):
+        """Build the matching STATE tier for this bank's residency rung
+        (``FedSim.init`` calls this so data and state page together).
+        Host-paged data pairs with the host-numpy
+        :class:`repro.fl.store.HostStateStore`; the disk-tier subclass
+        overrides this with its mmap twin."""
+        from repro.fl.store import HostStateStore
+        return HostStateStore.broadcast(one_client, n)
 
     def one_client_struct(self) -> dict:
         """ShapeDtypeStruct pytree of ONE client's per-round batches —

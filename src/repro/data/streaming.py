@@ -1,0 +1,257 @@
+"""On-disk federated datasets: manifest + raw-array files, opened lazily.
+
+A :class:`StreamingFederatedDataset` is the DISK form of a partitioned
+federated dataset — the same four arrays a :class:`repro.data.federated.
+HostPagedBank` holds in host numpy (shared features ``x``/``y``, the
+``[N, M]`` cyclic-padded per-client index table, ``[N]`` true shard
+sizes), stored as raw little-endian files beside a ``manifest.json`` that
+records shapes and dtypes.  Nothing is loaded at ``open`` time: each
+array is an ``np.memmap`` materialized on first touch, so a 10⁶-client
+dataset costs an ``open`` + four ``mmap`` calls until a chunk's rows
+fault pages in.  :meth:`mmap_bank` wraps the maps in a
+:class:`repro.fl.coldstore.MmapPagedBank` — the disk rung of the
+ClientStore residency ladder.
+
+Datasets are WRITTEN in blocks (:meth:`writer` → :class:`StreamWriter`)
+so the producer never holds more than one block in RAM — the ingest path
+for shard sources that don't fit in memory — or converted whole from an
+in-memory :class:`~repro.data.federated.FederatedDataset` with
+:meth:`from_dataset` (block-copied, same bound).
+
+Bucketing-by-shard-size: ragged FEMNIST-style shards make the padded
+``[N, M]`` index table wasteful to STAGE — a chunk whose union holds
+only small shards still pads to the global max M.  :func:`
+bucket_boundaries` builds a geometric ladder of staging widths;
+passing it to :meth:`mmap_bank` lets the bank trim each staged chunk to
+the smallest bucket covering the union's true max shard size (see
+``MmapPagedBank._stage`` for the value-invariance argument).
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from dataclasses import dataclass, field
+from functools import cached_property
+
+import numpy as np
+
+__all__ = ["StreamingFederatedDataset", "StreamWriter", "bucket_boundaries"]
+
+FORMAT = "repro-streamfed-v1"
+
+#: rows per block when converting an in-memory dataset (bounds writer RSS)
+BLOCK_ROWS = 1 << 14
+
+_FILES = {"x": "x.mmap", "y": "y.mmap", "idx": "idx.mmap",
+          "sizes": "sizes.mmap"}
+
+
+def bucket_boundaries(max_size: int, *, min_m: int = 8,
+                      factor: float = 1.5) -> tuple:
+    """Geometric ladder of staging widths ``(min_m, …, max_size)``.
+
+    Each bucket is ≤ ``factor`` × the previous, so trimming to a bucket
+    wastes at most ``factor − 1`` of the staged width while keeping the
+    number of distinct staged shapes — and hence compiled chunk
+    programs — logarithmic in ``max_size``."""
+    if max_size < 1:
+        raise ValueError(f"max_size must be >= 1, got {max_size}")
+    out, b = [], min(min_m, max_size)
+    while b < max_size:
+        out.append(b)
+        b = max(b + 1, int(b * factor))
+    out.append(max_size)
+    return tuple(out)
+
+
+def _normalize(meta: dict) -> dict:
+    for k in ("x_shape", "y_shape"):
+        meta[k] = tuple(meta[k])
+    return meta
+
+
+@dataclass
+class StreamingFederatedDataset:
+    """A federated dataset on disk: four raw-array files + a manifest.
+
+    ``meta`` keys: ``format``, ``n_samples``, ``n_clients``, ``m`` (max
+    shard length, the index table's padded width), ``x_shape``/``x_dtype``
+    (per-SAMPLE trailing shape, e.g. ``(16,)`` float32) and ``y_shape``/
+    ``y_dtype``.  The array properties are lazy read-only memmaps.
+    """
+    directory: str
+    meta: dict
+
+    # ------------------------------------------------------------- open --
+
+    @classmethod
+    def open(cls, directory: str) -> "StreamingFederatedDataset":
+        with open(os.path.join(directory, "manifest.json")) as f:
+            meta = json.load(f)
+        if meta.get("format") != FORMAT:
+            raise ValueError(f"{directory}: not a {FORMAT} manifest "
+                             f"(format={meta.get('format')!r})")
+        return cls(directory=directory, meta=_normalize(meta))
+
+    @property
+    def n_clients(self) -> int:
+        return int(self.meta["n_clients"])
+
+    @property
+    def n_samples(self) -> int:
+        return int(self.meta["n_samples"])
+
+    def _map(self, name: str, dtype, shape) -> np.memmap:
+        return np.memmap(os.path.join(self.directory, _FILES[name]),
+                         dtype=dtype, mode="r", shape=shape)
+
+    @cached_property
+    def x(self) -> np.memmap:
+        return self._map("x", self.meta["x_dtype"],
+                         (self.n_samples, *self.meta["x_shape"]))
+
+    @cached_property
+    def y(self) -> np.memmap:
+        return self._map("y", self.meta["y_dtype"],
+                         (self.n_samples, *self.meta["y_shape"]))
+
+    @cached_property
+    def idx(self) -> np.memmap:
+        return self._map("idx", np.int64,
+                         (self.n_clients, int(self.meta["m"])))
+
+    @cached_property
+    def sizes(self) -> np.memmap:
+        return self._map("sizes", np.int32, (self.n_clients,))
+
+    # ------------------------------------------------------------ write --
+
+    @classmethod
+    def writer(cls, directory: str, *, x_shape, x_dtype, y_shape, y_dtype,
+               m: int) -> "StreamWriter":
+        """Open a block-at-a-time writer (the out-of-core ingest path)."""
+        return StreamWriter(directory=directory, x_shape=tuple(x_shape),
+                            x_dtype=np.dtype(x_dtype),
+                            y_shape=tuple(y_shape),
+                            y_dtype=np.dtype(y_dtype), m=int(m))
+
+    @classmethod
+    def from_dataset(cls, ds, *, directory: str | None = None
+                     ) -> "StreamingFederatedDataset":
+        """Spill an in-memory :class:`repro.data.federated.
+        FederatedDataset` to disk, block by block (writer RSS stays one
+        block regardless of dataset size).  ``directory=None`` → a fresh
+        temp dir; the files persist until the caller (or an owning
+        :class:`~repro.fl.coldstore.MmapPagedBank`) removes them."""
+        if directory is None:
+            directory = tempfile.mkdtemp(prefix="repro-streamfed-")
+        idx, sizes = ds._padded_index()
+        w = cls.writer(directory, x_shape=ds.x.shape[1:], x_dtype=ds.x.dtype,
+                       y_shape=ds.y.shape[1:], y_dtype=ds.y.dtype,
+                       m=idx.shape[1])
+        for lo in range(0, len(ds.x), BLOCK_ROWS):
+            w.add_samples(ds.x[lo:lo + BLOCK_ROWS],
+                          ds.y[lo:lo + BLOCK_ROWS])
+        for lo in range(0, len(idx), BLOCK_ROWS):
+            w.add_clients(idx[lo:lo + BLOCK_ROWS],
+                          sizes[lo:lo + BLOCK_ROWS])
+        return w.finalize()
+
+    # ------------------------------------------------------------- bank --
+
+    def bucket_boundaries(self, *, min_m: int = 8,
+                          factor: float = 1.5) -> tuple:
+        """Staging-width ladder for this dataset's M (see
+        :func:`bucket_boundaries`)."""
+        return bucket_boundaries(int(self.meta["m"]), min_m=min_m,
+                                 factor=factor)
+
+    def mmap_bank(self, steps: int, batch: int, *, boundaries=None,
+                  owned: bool = False):
+        """Open the disk-tier ClientStore over this dataset's files: a
+        :class:`repro.fl.coldstore.MmapPagedBank` staging chunk unions
+        straight from the maps.  ``owned=True`` hands the bank the
+        dataset's directory to finalize (temp-dir datasets);
+        ``boundaries`` turns on bucketed staging widths."""
+        # lazy: repro.fl.coldstore imports this module's sibling
+        # federated.py — importing it at module scope would cycle
+        from repro.fl.coldstore import MmapPagedBank
+        from repro.data.federated import _BankSpec
+        sizes = self.sizes
+        return MmapPagedBank(
+            x=self.x, y=self.y, idx=self.idx, sizes=sizes,
+            spec=_BankSpec(steps=steps, batch=batch,
+                           min_size=int(np.asarray(sizes).min())),
+            boundaries=boundaries,
+            directory=self.directory if owned else None)
+
+
+@dataclass
+class StreamWriter:
+    """Block-appending writer for :class:`StreamingFederatedDataset`.
+
+    ``add_samples`` / ``add_clients`` append raw bytes through buffered
+    file handles (never building the full arrays), ``finalize`` validates
+    the index table against the sample count, writes the manifest and
+    returns the opened dataset."""
+    directory: str
+    x_shape: tuple
+    x_dtype: np.dtype
+    y_shape: tuple
+    y_dtype: np.dtype
+    m: int
+    n_samples: int = 0
+    n_clients: int = 0
+    _max_idx: int = field(default=-1, repr=False)
+    _files: dict = field(default_factory=dict, repr=False)
+
+    def __post_init__(self):
+        os.makedirs(self.directory, exist_ok=True)
+        self._files = {k: open(os.path.join(self.directory, v), "wb")
+                       for k, v in _FILES.items()}
+
+    def _append(self, name: str, block: np.ndarray, dtype, trailing):
+        block = np.ascontiguousarray(block, dtype=dtype)
+        if block.shape[1:] != tuple(trailing):
+            raise ValueError(f"{name} block has trailing shape "
+                             f"{block.shape[1:]}, expected {trailing}")
+        self._files[name].write(block.tobytes())
+        return len(block)
+
+    def add_samples(self, x_block, y_block) -> None:
+        nx = self._append("x", x_block, self.x_dtype, self.x_shape)
+        ny = self._append("y", y_block, self.y_dtype, self.y_shape)
+        if nx != ny:
+            raise ValueError(f"x block ({nx}) and y block ({ny}) disagree")
+        self.n_samples += nx
+
+    def add_clients(self, idx_block, sizes_block) -> None:
+        idx_block = np.ascontiguousarray(idx_block, dtype=np.int64)
+        ni = self._append("idx", idx_block, np.int64, (self.m,))
+        ns = self._append("sizes", np.asarray(sizes_block).reshape(-1),
+                          np.int32, ())
+        if ni != ns:
+            raise ValueError(f"idx block ({ni}) and sizes block ({ns}) "
+                             "disagree")
+        if idx_block.size:
+            self._max_idx = max(self._max_idx, int(idx_block.max()))
+        self.n_clients += ni
+
+    def finalize(self) -> StreamingFederatedDataset:
+        for f in self._files.values():
+            f.close()
+        if self._max_idx >= self.n_samples:
+            raise ValueError(f"index table references sample "
+                             f"{self._max_idx} but only {self.n_samples} "
+                             "samples were written")
+        meta = {"format": FORMAT, "n_samples": self.n_samples,
+                "n_clients": self.n_clients, "m": self.m,
+                "x_shape": list(self.x_shape),
+                "x_dtype": self.x_dtype.name,
+                "y_shape": list(self.y_shape),
+                "y_dtype": self.y_dtype.name}
+        with open(os.path.join(self.directory, "manifest.json"), "w") as f:
+            json.dump(meta, f, indent=1)
+        return StreamingFederatedDataset(directory=self.directory,
+                                         meta=_normalize(meta))

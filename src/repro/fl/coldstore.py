@@ -1,0 +1,283 @@
+"""The DISK rung of the ClientStore residency ladder: mmap cold tiers.
+
+``repro.fl.store`` moved per-client rows from device to host numpy; this
+module moves them one tier further out, onto disk, behind the SAME
+``gather``/``scatter``/``prefetch`` protocol — at N = 10⁶ clients even
+the host-numpy cold bank (state rows + per-client index tables) outgrows
+RAM, while a chunk of rounds still touches only ``cap = chunk · S`` hot
+rows.  Two classes, each subclassing its host-tier twin so every
+contract in ``repro.fl.store`` holds verbatim one tier further out:
+
+* :class:`MmapStateStore` — client-state rows in one ``np.memmap`` file
+  per flattened leaf.  ``gather`` reads only the requested rows' pages
+  (through a reusable pinned host staging buffer on accelerator
+  backends), ``scatter``/``scatter_async`` dirty only the written rows'
+  pages, and an all-zero init state (``broadcast`` of zeros — SCAFFOLD
+  control variates, momenta) creates SPARSE files: 10⁶ clients of cold
+  state cost ~nothing on disk until rows are actually written.
+* :class:`MmapPagedBank` — the data-bank twin: ``x``/``y``/``idx``/
+  ``sizes`` are read-only memmaps over a
+  :class:`repro.data.streaming.StreamingFederatedDataset`'s files.  The
+  staging code path is the HOST bank's (memmaps are ndarray subclasses),
+  so a staged chunk is bytewise what the host-paged tier stages — the
+  mmap ≡ host-paged ≡ resident equivalence is by construction, not by
+  tolerance.  Optional ``boundaries`` turns on bucketing-by-shard-size:
+  ragged FEMNIST-style shards stop padding every staged chunk to the
+  global max shard length M (see :meth:`MmapPagedBank._stage`).
+
+Lifecycle: cold files are TEMPORARY by default (``tempfile.mkdtemp``)
+and owned by the store/bank that created them — a ``weakref.finalize``
+removes the directory on garbage collection and at interpreter exit, and
+both classes are context managers whose ``close()`` tears the files down
+eagerly, so an exception mid-``run_scanned`` cannot leak ``.mmap`` files
+past the owning ``with`` block (tests/test_coldstore.py pins this).
+Deleting files whose maps are still open is safe on POSIX (the pages
+live until unmapped).
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+import weakref
+from dataclasses import dataclass
+
+import jax
+import numpy as np
+
+from repro.data.federated import DeviceDataBank, HostPagedBank
+from repro.fl.store import HostStateStore, PyTree, _put
+
+__all__ = ["MmapStateStore", "MmapPagedBank"]
+
+#: rows per block when materializing a cold bank (bounds the writer's
+#: transient RSS — one block, never the [N, ...] bank)
+BLOCK_ROWS = 1 << 14
+
+
+def _leaf_path(directory: str, i: int) -> str:
+    return os.path.join(directory, f"state_leaf{i}.mmap")
+
+
+class MmapStateStore(HostStateStore):
+    """Disk-backed client-state bank: ``HostStateStore`` over memmap
+    leaves.
+
+    Same semantics tier-for-tier (it IS a ``HostStateStore`` whose
+    ``bank`` leaves are ``np.memmap``): chunk-boundary ``gather`` stages
+    hot rows to device, ``scatter``/``scatter_async`` write updated rows
+    back in place (dirtying only those rows' pages), ``prefetch`` is
+    read-ahead with the in-flight hazard rule, stateless stores hold no
+    leaves and page zero bytes — from disk or anywhere else.
+
+    Staging reads go through a PINNED reusable host buffer per (leaf,
+    row-count) on accelerator backends (``np.take(leaf, rows, out=buf)``
+    collects the cold pages into one contiguous pinned region, then one
+    ``device_put`` DMAs it); on the CPU backend the buffer is skipped —
+    ``jax.device_put`` may alias host memory there, and a reused aliased
+    buffer would corrupt the staged view.  ``_stage`` blocks until the
+    H2D copies complete before the buffer can be reused.
+    """
+
+    def __init__(self, bank: PyTree, n: int | None = None, *,
+                 directory: str | None = None, _owned: bool = False):
+        # skip HostStateStore.__init__: its ascontiguousarray
+        # normalization would pull every cold leaf into RAM
+        self.bank = bank
+        leaves = jax.tree.leaves(self.bank)
+        self._n = int(leaves[0].shape[0]) if leaves else int(n or 0)
+        self._init_runtime()
+        self._pin = {} if jax.default_backend() != "cpu" else None
+        self.directory = directory
+        self._finalizer = (
+            weakref.finalize(self, shutil.rmtree, directory,
+                             ignore_errors=True)
+            if _owned and directory is not None else None)
+
+    @classmethod
+    def broadcast(cls, one_client: PyTree, n: int, *,
+                  directory: str | None = None) -> "MmapStateStore":
+        """Build the ``[N, ...]`` COLD bank from one client's init state.
+
+        One memmap file per flattened leaf under ``directory`` (a fresh
+        temp dir when omitted; either way the store owns and finalizes
+        the files).  An all-zero init leaf writes NOTHING — ``mode="w+"``
+        ftruncates a sparse file of zeros — so zero-init state (the
+        common case: control variates, momenta) costs no disk blocks and
+        no write pass over N; nonzero init is written in ``BLOCK_ROWS``
+        blocks to bound the writer's dirty-page footprint.  A stateless
+        tree creates no files and owns no directory."""
+        leaves, treedef = jax.tree.flatten(one_client)
+        if not leaves:
+            return cls(jax.tree.unflatten(treedef, []), n=n)
+        owned = True
+        if directory is None:
+            directory = tempfile.mkdtemp(prefix="repro-coldstate-")
+        else:
+            os.makedirs(directory, exist_ok=True)
+        bank = []
+        for i, leaf in enumerate(leaves):
+            row = np.ascontiguousarray(np.asarray(leaf))
+            mm = np.memmap(_leaf_path(directory, i), dtype=row.dtype,
+                           mode="w+", shape=(n, *row.shape))
+            if row.size and np.any(row):
+                for lo in range(0, n, BLOCK_ROWS):
+                    mm[lo:lo + BLOCK_ROWS] = row
+                mm.flush()
+            bank.append(mm)
+        return cls(jax.tree.unflatten(treedef, bank), n=n,
+                   directory=directory, _owned=owned)
+
+    def _stage(self, rows: np.ndarray, sharding) -> PyTree:
+        if self._pin is None:
+            return super()._stage(rows, sharding)
+        leaves, treedef = jax.tree.flatten(self.bank)
+        staged = []
+        for i, leaf in enumerate(leaves):
+            key = (i, len(rows))
+            buf = self._pin.get(key)
+            if buf is None:
+                buf = self._pin[key] = np.empty(
+                    (len(rows), *leaf.shape[1:]), leaf.dtype)
+            np.take(leaf, rows, axis=0, out=buf)
+            staged.append(_put(buf, sharding))
+        staged = jax.tree.unflatten(treedef, staged)
+        # the H2D copies must finish before the next stage reuses a buffer
+        jax.block_until_ready(staged)
+        return staged
+
+    def disk_bytes(self) -> int:
+        """Logical cold bytes on disk (sparse holes count as data —
+        this is the RESIDENT-equivalent size, what the tier keeps off
+        host and device)."""
+        return self.host_bytes()
+
+    def copy(self) -> "MmapStateStore":
+        """Deep copy onto a NEW set of cold files (same tier — branching
+        a 10⁶-client bank must not materialize it in RAM)."""
+        self.fence()
+        leaves, treedef = jax.tree.flatten(self.bank)
+        if not leaves:
+            return MmapStateStore(jax.tree.unflatten(treedef, []),
+                                  n=self._n)
+        directory = tempfile.mkdtemp(prefix="repro-coldstate-")
+        out = []
+        for i, leaf in enumerate(leaves):
+            mm = np.memmap(_leaf_path(directory, i), dtype=leaf.dtype,
+                           mode="w+", shape=leaf.shape)
+            for lo in range(0, leaf.shape[0], BLOCK_ROWS):
+                mm[lo:lo + BLOCK_ROWS] = leaf[lo:lo + BLOCK_ROWS]
+            mm.flush()
+            out.append(mm)
+        return MmapStateStore(jax.tree.unflatten(treedef, out), n=self._n,
+                              directory=directory, _owned=True)
+
+    def close(self) -> None:
+        """Drain pending writes, then delete the store's files (idempotent;
+        also runs via ``weakref.finalize`` at gc/interpreter exit)."""
+        self.fence()
+        if self._pool is not None:
+            self._pool.shutdown(wait=True)
+            self._pool = None
+        self._cache.clear()
+        if self._finalizer is not None:
+            self._finalizer()
+
+    def __enter__(self) -> "MmapStateStore":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+@dataclass
+class MmapPagedBank(HostPagedBank):
+    """Disk-backed federated data bank: ``HostPagedBank`` over memmaps.
+
+    Built by :meth:`repro.data.streaming.StreamingFederatedDataset.
+    mmap_bank` (or the :meth:`repro.data.federated.FederatedDataset.
+    mmap_bank` convenience): ``x``/``y``/``idx``/``sizes`` are read-only
+    ``np.memmap`` views over the dataset's on-disk files, and staging is
+    the inherited host-tier code path — ``idx[rows]`` faults in only the
+    touched index pages, the ``x[take]`` fancy-gather reads only the
+    union's sample pages, and the staged ``DeviceDataBank`` is bytewise
+    the host-paged tier's.  ``state_store`` pairs the matching state
+    tier so ``FedSim.init`` keeps the whole cold side on disk.
+
+    ``boundaries`` (sorted ints, last ≥ the global max shard length M)
+    turns on bucketing-by-shard-size: a staged chunk's ``[U, M]`` index
+    rows are TRIMMED to the smallest boundary covering the union's max
+    TRUE shard size, so a chunk of small FEMNIST-style shards stops
+    staging (and paying H2D for) the global-max padding.  Trimming is
+    value-invariant — cyclic-pad positions at or past a client's true
+    size are never sampled (``batch > 0`` draws below ``sizes``;
+    ``batch == 0`` slices ``[:min_size]``) — but it changes the staged
+    M, which keys one compiled chunk program per bucket.  It is
+    therefore OFF by default: the bitwise mmap ≡ resident contract pins
+    the staged M to the resident bank's.
+
+    ``directory`` non-None means the bank OWNS that directory (it was
+    materialized for this bank): ``close()``/gc/interpreter-exit remove
+    it, including any paired state stores placed under it.  A bank
+    opened over a persistent dataset passes ``directory=None`` and
+    ``close()`` is a cache drop.
+    """
+    boundaries: tuple | None = None
+    directory: str | None = None
+
+    def __post_init__(self):
+        super().__post_init__()
+        if self.boundaries is not None:
+            bs = tuple(int(b) for b in self.boundaries)
+            if not bs or list(bs) != sorted(set(bs)):
+                raise ValueError("boundaries must be sorted unique ints; "
+                                 f"got {self.boundaries!r}")
+            m = int(self.idx.shape[1])
+            if bs[-1] < m:
+                raise ValueError(f"last bucket boundary {bs[-1]} does not "
+                                 f"cover the max shard length M={m}")
+            self.boundaries = bs
+        self._finalizer = (
+            weakref.finalize(self, shutil.rmtree, self.directory,
+                             ignore_errors=True)
+            if self.directory is not None else None)
+
+    def _stage(self, rows, sharding) -> DeviceDataBank:
+        if self.boundaries is None:
+            return super()._stage(rows, sharding)
+        rows = np.asarray(rows)
+        sizes = np.asarray(self.sizes[rows])
+        need = int(sizes.max(initial=1))
+        if self.spec.batch == 0:
+            need = max(need, self.spec.min_size)
+        m = next(b for b in self.boundaries if b >= need)
+        take = np.asarray(self.idx[rows])[:, :m]
+        put = ((lambda a: jax.device_put(a, sharding))
+               if sharding is not None else jax.numpy.asarray)
+        return DeviceDataBank(x=put(self.x[take]), y=put(self.y[take]),
+                              sizes=put(sizes), spec=self.spec)
+
+    def state_store(self, one_client: PyTree, n: int) -> MmapStateStore:
+        """The matching STATE tier (``FedSim.init`` calls this): a
+        :class:`MmapStateStore` whose files live under this bank's
+        directory when the bank owns one — one ``close()`` tears down
+        the whole cold tier — else in their own temp dir (finalized
+        independently).  Stateless trees create no files at all."""
+        if not jax.tree.leaves(one_client):
+            return MmapStateStore.broadcast(one_client, n)
+        directory = (tempfile.mkdtemp(prefix="state-", dir=self.directory)
+                     if self.directory is not None else None)
+        return MmapStateStore.broadcast(one_client, n, directory=directory)
+
+    def close(self) -> None:
+        """Drop staged caches and delete owned files (idempotent; also
+        runs via ``weakref.finalize`` at gc/interpreter exit)."""
+        self._cache.clear()
+        if self._finalizer is not None:
+            self._finalizer()
+
+    def __enter__(self) -> "MmapPagedBank":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

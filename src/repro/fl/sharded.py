@@ -46,14 +46,23 @@ from repro.core.algorithms import Participation
 from repro.distributed.axes import CLIENTS_AXIS, make_client_mesh, shard_map
 from repro.fl import faults as FLT
 from repro.fl.simulate import round_metrics
+# staged_host_rows is the scatter-overlap hook for mesh staging: the
+# write-behind drain (repro.fl.store.HostStateStore.scatter_async)
+# assembles a staged chunk's updated rows back on host SHARD-BY-SHARD —
+# each addressable shard D2H-copies its own staging_sharding slice, so
+# the background thread never dispatches a compiled slice/gather while
+# the main thread is enqueueing the next chunk's programs.  It lives in
+# repro.fl.store (the dependency points store → here otherwise) and is
+# re-exported from this module as part of the mesh-staging surface.
+from repro.fl.store import staged_host_rows
 
 PyTree = Any
 
 __all__ = ["CLIENTS_AXIS", "make_client_mesh", "bucket_participants",
            "bucket_cohort", "shard_clients", "replicate", "staging_sharding",
-           "make_sharded_round", "make_sharded_round_async",
-           "make_sharded_round_q", "make_sharded_round_async_q",
-           "bank_shard_rows"]
+           "staged_host_rows", "make_sharded_round",
+           "make_sharded_round_async", "make_sharded_round_q",
+           "make_sharded_round_async_q", "bank_shard_rows"]
 
 
 def _n_shards(mesh: jax.sharding.Mesh) -> int:

@@ -188,12 +188,17 @@ class FedSim:
     """Federated simulation of N clients with algorithm ``algo``."""
 
     def __init__(self, task, algo: str | Algorithm, hp: HParams,
-                 n_clients: int, *, mesh=None):
+                 n_clients: int, *, mesh=None, scatter_overlap: bool = True):
         self.task = task
         self.algo = get_algorithm(algo) if isinstance(algo, str) else algo
         self.hp = hp
         self.n = n_clients
         self.mesh = mesh
+        #: paged driver: drain each chunk's state write-back on a
+        #: background thread under the next chunk's compute (stores that
+        #: implement ``scatter_async``/``fence``); False forces the
+        #: synchronous scatter (the overlap on/off bench axis)
+        self.scatter_overlap = scatter_overlap
         # one jit object; XLA caches a program per participant count S
         # (``full`` is static: the full-cohort program has no gather/scatter).
         # params/server/clients are DONATED: the scatter aliases the [N, ...]
@@ -279,9 +284,14 @@ class FedSim:
         server = self.algo.init_server(self.task, self.hp, params)
         one_client = self.algo.init_client(self.task, params)
         if self._paged:
-            # paged mode: the [N, ...] bank lives HOST-side; stateless
+            # paged mode: the [N, ...] bank lives COLD-side, on the same
+            # residency rung as the data bank — a disk-tier bank pairs a
+            # disk-tier state store (MmapPagedBank.state_store), anything
+            # else falls back to the host-numpy store; stateless
             # algorithms get an empty store (zero paging cost)
-            clients = HostStateStore.broadcast(one_client, self.n)
+            factory = getattr(self.task.data, "state_store", None)
+            clients = (factory(one_client, self.n) if factory is not None
+                       else HostStateStore.broadcast(one_client, self.n))
         else:
             clients = jax.tree.map(
                 lambda x: jnp.broadcast_to(x, (self.n, *x.shape)),
@@ -1473,11 +1483,15 @@ class FedSim:
         random cohort; pad slots repeat the last live id, dead rows no
         cohort references and no scatter writes), stage the union's data
         and state rows, run the chunk's scan SCHEDULED over the remapped
-        cohort positions, scatter the live rows back.  The next chunk's
-        data rows prefetch (async ``device_put``) before this chunk's
-        state write-back blocks, double-buffering the copy under compute;
-        state rows cannot prefetch (the current chunk may still write
-        them).
+        cohort positions, scatter the live rows back.  Both copy
+        directions overlap the next chunk's compute: the next chunk's
+        data and state rows prefetch (async ``device_put``; state
+        read-ahead skips rows the write-behind still has in flight), and
+        with ``scatter_overlap`` the state write-back itself retires on
+        the store's drain thread (``scatter_async``), fenced before any
+        re-gather of in-flight rows — so paged ≡ resident is unchanged
+        by the overlap.  ``scatter_overlap=False`` (or a store without
+        ``scatter_async``) keeps the synchronous scatter.
 
         Buffered-async plans compose with paging unchanged: a chunk's
         union is simply the union of its FLUSH rows (``plan_chunk``
@@ -1513,6 +1527,7 @@ class FedSim:
         hist = (self._fault_hist(plan, rounds) if plan.has_faults
                 else {"round": [], "metric": [], "loss": []})
         nrej_chunks = []
+        overlap = self.scatter_overlap and hasattr(store, "scatter_async")
         bank.prefetch(plans[0][1], sharding=sh)
         t = 0
         for i, (chunk, union, n_live, local) in enumerate(plans):
@@ -1552,13 +1567,26 @@ class FedSim:
                 # dispatch the NEXT chunk's data staging before blocking
                 # on this chunk's write-back: the copy rides under compute
                 bank.prefetch(plans[i + 1][1], sharding=sh)
-            store.scatter(union[:n_live], c)
+            if overlap:
+                # write-behind: the drain thread retires this chunk's
+                # state rows under the next chunk's compute; the store
+                # fences any re-gather/prefetch of in-flight rows
+                store.scatter_async(union[:n_live], c)
+            else:
+                store.scatter(union[:n_live], c)
+            if i + 1 < len(plans):
+                # read-ahead the next chunk's STATE rows too (skipped
+                # internally for rows the write-behind still has in
+                # flight — the stale-read hazard rule)
+                store.prefetch(plans[i + 1][1], sharding=sh)
             t += chunk
             state = FedState(params=p, server=sv, clients=store, round=t)
             if eval_fn is not None:
                 hist["round"].append(t - 1)
                 hist["metric"].append(float(eval_fn(state.params)))
                 hist["loss"].append(float(losses[-1]))
+        if overlap:
+            store.fence()       # retire the last chunk's write-back
         if plan.has_faults:
             hist["n_rejected"] = np.concatenate(nrej_chunks)
         return state, hist

@@ -35,7 +35,34 @@ classes implement it:
   happens ONLY at chunk boundaries, outside the scanned graph — the
   round body stays pure and the per-chunk program is the same
   ``lax.scan`` the resident path compiles, just over a ``[U, ...]``
-  staged bank instead of ``[N, ...]``.
+  staged bank instead of ``[N, ...]``.  The DISK rung of the same
+  ladder — ``np.memmap`` cold files behind identical gather/scatter
+  semantics — is :mod:`repro.fl.coldstore` (``MmapStateStore`` /
+  ``MmapPagedBank``); it subclasses the host tier, so every contract
+  below holds verbatim one tier further out.
+
+Write-behind scatter (the overlap extension)
+--------------------------------------------
+The protocol proper is the three calls above; paged STATE stores
+additionally implement the write-behind pair
+
+    scatter_async(rows, staged) -> None   (enqueue the write-back)
+    fence(rows=None)            -> None   (wait for in-flight writes)
+
+``scatter_async`` hands the chunk's updated rows to a single FIFO drain
+thread: the device→host copy blocks on the chunk's compute THERE, while
+the driver's host loop moves on to plan and stage the next chunk — the
+write side of the chunk boundary overlaps compute exactly like the data
+bank's read-side ``prefetch`` has since the host tier shipped.  Ordering
+is preserved by construction (one worker, submission order), and
+:meth:`HostStateStore.gather`/:meth:`~HostStateStore.scatter` FENCE any
+in-flight writes that intersect their rows before touching the bank, so
+a chunk that re-gathers rows the previous chunk is still writing blocks
+until those rows have landed — paged ≡ resident stays bitwise on vmap
+and fp32 on the mesh with overlap enabled.  ``prefetch`` on a state
+store is read-ahead staging with the same hazard rule: rows that
+intersect an in-flight write are skipped (the later ``gather`` restages
+them fresh) rather than staged stale.
 
 Stateless algorithms (the FedAvg/FedAdam family — see
 ``repro.core.api.Algorithm.stateless``) have an EMPTY client-state tree:
@@ -54,6 +81,7 @@ cohort schedule, not the population.
 """
 from __future__ import annotations
 
+from concurrent.futures import ThreadPoolExecutor
 from typing import Any, Protocol, runtime_checkable
 
 import jax
@@ -63,7 +91,7 @@ import numpy as np
 PyTree = Any
 
 __all__ = ["ClientStore", "HostStateStore", "plan_chunk", "device_bytes",
-           "round_up"]
+           "round_up", "staged_host_rows"]
 
 
 @runtime_checkable
@@ -145,6 +173,37 @@ def _put(x: np.ndarray, sharding):
         else jnp.asarray(x)
 
 
+def staged_host_rows(x, k: int) -> np.ndarray:
+    """Host copy of the first ``k`` rows of a staged device leaf.
+
+    Mesh-sharded ``jax.Array`` leaves are assembled shard-by-shard (each
+    addressable shard D2H-copies its own slice), so no compiled slice or
+    cross-device gather is ever dispatched — which is what lets the
+    write-behind drain thread (:meth:`HostStateStore.scatter_async`) call
+    this off the main thread.  Replicated and plain-numpy leaves fall
+    through to a single copy.  Blocks until the rows' producing compute
+    has finished (the D2H copy waits on the buffer).
+    """
+    if k <= 0:
+        return np.asarray(x)[:0]
+    if not isinstance(x, jax.Array):
+        return np.asarray(x)[:k]
+    out = None
+    for s in x.addressable_shards:
+        first = s.index[0] if s.index else slice(None)
+        start = int(first.start or 0) if isinstance(first, slice) else 0
+        if start >= k:
+            continue
+        data = np.asarray(s.data)
+        if start == 0 and data.shape[0] >= k:
+            return np.ascontiguousarray(data[:k])
+        if out is None:
+            out = np.empty((k, *x.shape[1:]), x.dtype)
+        take = min(start + data.shape[0], k) - start
+        out[start:start + take] = data[:take]
+    return out if out is not None else np.asarray(x)[:k]
+
+
 class HostStateStore:
     """Host-paged client-state bank: the paged twin of the resident
     donated ``[N, ...]`` pytree in ``FedState.clients``.
@@ -161,6 +220,14 @@ class HostStateStore:
     source of truth for client state across chunks, exactly like the
     donated resident bank.  Branch with :meth:`copy` (the paged analog
     of ``FedState.copy``).
+
+    Write-behind: :meth:`scatter_async` enqueues the write-back on a
+    single FIFO drain thread so the D2H copy blocks on the chunk's
+    compute off the main thread; :meth:`fence` waits for in-flight
+    writes, and :meth:`gather`/:meth:`scatter` fence any pending writes
+    intersecting their rows before touching the bank (see the module
+    docstring).  :meth:`prefetch` is read-ahead staging for the next
+    chunk's rows, skipped for rows an in-flight write still owns.
     """
 
     is_resident = False
@@ -171,8 +238,16 @@ class HostStateStore:
         leaves = jax.tree.leaves(self.bank)
         # a stateless store has no leaves to read N from — take it as given
         self._n = int(leaves[0].shape[0]) if leaves else int(n or 0)
+        self._init_runtime()
+
+    def _init_runtime(self) -> None:
+        """Per-instance staging state shared with the disk-tier subclass
+        (which skips ``__init__``'s pull-into-RAM normalization)."""
         #: exact device bytes of the most recent gather (bench/tests)
         self.last_staged_bytes = 0
+        self._cache: dict = {}        # prefetch key -> (rows, staged tree)
+        self._pending: list = []      # [(rows, future)] in submission order
+        self._pool: ThreadPoolExecutor | None = None
 
     @classmethod
     def broadcast(cls, one_client: PyTree, n: int) -> "HostStateStore":
@@ -194,30 +269,115 @@ class HostStateStore:
     def host_bytes(self) -> int:
         return device_bytes(self.bank)
 
+    def _stage(self, rows: np.ndarray, sharding) -> PyTree:
+        return jax.tree.map(lambda x: _put(x[rows], sharding), self.bank)
+
     def gather(self, rows, *, sharding=None) -> PyTree:
-        """Stage ``rows`` to device as a ``[len(rows), ...]`` pytree."""
+        """Stage ``rows`` to device as a ``[len(rows), ...]`` pytree,
+        consuming a matching :meth:`prefetch` if one is staged.  Fences
+        any in-flight ``scatter_async`` writes intersecting ``rows``
+        first — a re-gather never observes a half-landed chunk."""
         rows = np.asarray(rows)
-        staged = jax.tree.map(lambda x: _put(x[rows], sharding), self.bank)
+        self.fence(rows)
+        hit = self._cache.pop((rows.tobytes(), sharding), None)
+        staged = hit[1] if hit is not None else self._stage(rows, sharding)
         self.last_staged_bytes = device_bytes(staged)
         return staged
+
+    def _write_back(self, rows: np.ndarray, staged: PyTree) -> None:
+        k = int(rows.shape[0])
+        jax.tree.map(
+            lambda host, dev: host.__setitem__(
+                rows, staged_host_rows(dev, k)),
+            self.bank, staged)
 
     def scatter(self, rows, staged: PyTree) -> None:
         """Write ``staged`` device rows back to the host bank in place.
         ``rows`` must be the LIVE (unpadded) prefix of the gathered ids;
-        extra trailing staged rows (capacity padding) are ignored."""
+        extra trailing staged rows (capacity padding) are ignored.
+        Blocks until the write has landed (fencing queued async writes
+        first, so writes land in program order)."""
         rows = np.asarray(rows)
+        self.fence(rows)
+        self._invalidate(rows)
         if rows.size == 0 or self.stateless:
             return
-        k = int(rows.shape[0])
-        jax.tree.map(
-            lambda host, dev: host.__setitem__(rows, np.asarray(dev[:k])),
-            self.bank, staged)
+        self._write_back(rows, staged)
+
+    def scatter_async(self, rows, staged: PyTree) -> None:
+        """Enqueue :meth:`scatter` on the store's single drain thread and
+        return immediately: the device→host copy blocks on the chunk's
+        compute THERE while the caller stages the next chunk.  One FIFO
+        worker keeps writes in submission order; :meth:`fence` (or any
+        gather/scatter touching the same rows) waits for them."""
+        rows = np.asarray(rows)
+        self._invalidate(rows)
+        if rows.size == 0 or self.stateless:
+            return
+        if self._pool is None:
+            self._pool = ThreadPoolExecutor(
+                max_workers=1, thread_name_prefix="clientstore-drain")
+        self._pending.append(
+            (rows.copy(), self._pool.submit(self._write_back, rows.copy(),
+                                            staged)))
+
+    def fence(self, rows=None) -> None:
+        """Block until in-flight :meth:`scatter_async` writes have landed.
+
+        ``rows=None`` drains the whole queue (the paged driver's final
+        barrier before a run returns its state); otherwise only pending
+        writes whose row sets INTERSECT ``rows`` are waited on — the
+        correctness fence before re-gathering rows the previous chunk
+        may still be writing.  Exceptions from a background write-back
+        surface here (and completed entries are reaped eagerly)."""
+        if not self._pending:
+            return
+        rows = None if rows is None else np.asarray(rows)
+        keep = []
+        try:
+            for prows, fut in self._pending:
+                if (rows is None or fut.done()
+                        or np.intersect1d(prows, rows).size):
+                    fut.result()
+                else:
+                    keep.append((prows, fut))
+        finally:
+            # a failed write-back must not stay queued (it would re-raise
+            # from every later fence, including close())
+            self._pending = keep
+
+    def _invalidate(self, rows: np.ndarray) -> None:
+        """Drop read-ahead entries overlapping freshly-written rows."""
+        if self._cache:
+            self._cache = {
+                key: (crows, staged)
+                for key, (crows, staged) in self._cache.items()
+                if not np.intersect1d(crows, rows).size}
 
     def prefetch(self, rows, *, sharding=None) -> None:
-        """No-op: state rows carry a chunk-to-chunk write dependency (the
-        next chunk's rows may have been updated by the current one), so
-        they stage synchronously after the previous scatter.  Only the
-        read-only data bank double-buffers across the boundary."""
+        """Read-ahead staging of ``rows`` for a later :meth:`gather` with
+        the same arguments (``device_put`` dispatches asynchronously, so
+        the copy rides under the current chunk's compute — the state
+        bank's analog of the data bank's double-buffering).
+
+        Safe by the hazard rule: rows that intersect an in-flight
+        ``scatter_async`` are NOT staged (the values on host are stale
+        until the write lands) — the later gather fences and restages
+        them fresh; a subsequent scatter to prefetched rows invalidates
+        the staged entry.  Until this shipped, state prefetch was a
+        documented no-op while the data bank double-buffered — the
+        asymmetry tests/test_store.py now pins the other way."""
+        if self.stateless:
+            return
+        rows = np.asarray(rows)
+        key = (rows.tobytes(), sharding)
+        if key in self._cache:
+            return
+        for prows, fut in self._pending:
+            if not fut.done() and np.intersect1d(prows, rows).size:
+                return
+        self._cache[key] = (rows.copy(), self._stage(rows, sharding))
 
     def copy(self) -> "HostStateStore":
+        self.fence()
         return HostStateStore(jax.tree.map(np.copy, self.bank), n=self._n)

@@ -1,0 +1,416 @@
+"""Cold-tier contract sweep: the DISK rung of the residency ladder.
+
+Mirrors tests/test_store.py one tier further out (``repro.fl.coldstore``
++ ``repro.data.streaming``): mmap ≡ host-paged ≡ resident — BITWISE on
+the vmap engine (the staged chunks are bytewise identical, so the
+compiled programs are too), fp32 on the 8-device mesh subprocess leg —
+stateless registrations page zero bytes from disk, the scatter-overlap
+fence keeps consecutive chunks that share cohort rows exact, and cold
+files never outlive their owner (``close()``/``with``/gc/interpreter
+exit, including a failed ``run_scanned``).
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.algorithms import HParams
+from repro.data import FederatedDataset, StreamingFederatedDataset, \
+    bucket_boundaries, make_clustered_classification
+from repro.data.streaming import StreamWriter
+from repro.fl.coldstore import MmapPagedBank, MmapStateStore
+from repro.fl.simulate import FedSim
+from repro.fl.store import ClientStore, HostStateStore, device_bytes
+from repro.fl.tasks import DNNTask
+from repro.models.simple import MLPModel
+
+N, R = 12, 5
+
+
+@pytest.fixture(scope="module")
+def ds():
+    data = make_clustered_classification(1200, 16, 4, seed=0)
+    return FederatedDataset.from_arrays(data, N, alpha=0.5, seed=0)
+
+
+@pytest.fixture(scope="module")
+def task(ds):
+    return DNNTask(MLPModel(in_dim=16, hidden=(32,), num_classes=4))
+
+
+@pytest.fixture(scope="module")
+def sfd(ds, tmp_path_factory):
+    """The module dataset spilled once to disk (persistent for the
+    module: banks opened over it pass ``owned=False``)."""
+    return StreamingFederatedDataset.from_dataset(
+        ds, directory=str(tmp_path_factory.mktemp("streamfed")))
+
+
+def _exact(a, b, tag):
+    """Cold ≡ warm BITWISE: staged chunks are bytewise identical, so on
+    one device the compiled programs — and their outputs — are too."""
+    bank = lambda c: c.bank if isinstance(c, HostStateStore) else c
+    for name, x, y in (("params", a.params, b.params),
+                       ("server", a.server, b.server),
+                       ("clients", bank(a.clients), bank(b.clients))):
+        for u, v in zip(jax.tree.leaves(x), jax.tree.leaves(y)):
+            np.testing.assert_array_equal(np.asarray(u), np.asarray(v),
+                                          err_msg=f"{tag}:{name}")
+
+
+# ------------------------------------------------- streaming dataset -------
+
+def test_streaming_roundtrip(ds, sfd):
+    idx, sizes = ds._padded_index()
+    assert sfd.n_clients == N and sfd.n_samples == len(ds.x)
+    for mm, want in ((sfd.x, ds.x), (sfd.y, ds.y),
+                     (sfd.idx, idx.astype(np.int64)), (sfd.sizes, sizes)):
+        assert isinstance(mm, np.memmap) and not mm.flags.writeable
+        np.testing.assert_array_equal(np.asarray(mm), want)
+    # reopen from the manifest alone
+    again = StreamingFederatedDataset.open(sfd.directory)
+    assert again.meta == sfd.meta
+    np.testing.assert_array_equal(np.asarray(again.x), ds.x)
+
+
+def test_stream_writer_blocks(tmp_path):
+    """Block-at-a-time ingest lands bytewise what a whole-array spill
+    lands, and the writer validates shapes and the index table."""
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((20, 3)).astype(np.float32)
+    y = rng.integers(0, 4, 20).astype(np.int32)
+    idx = rng.integers(0, 20, (6, 5)).astype(np.int64)
+    sizes = np.full(6, 5, np.int32)
+    w = StreamingFederatedDataset.writer(
+        str(tmp_path / "d"), x_shape=(3,), x_dtype=np.float32,
+        y_shape=(), y_dtype=np.int32, m=5)
+    for lo in (0, 7, 14):
+        w.add_samples(x[lo:lo + 7], y[lo:lo + 7])
+    w.add_clients(idx[:2], sizes[:2])
+    w.add_clients(idx[2:], sizes[2:])
+    out = w.finalize()
+    np.testing.assert_array_equal(np.asarray(out.x), x)
+    np.testing.assert_array_equal(np.asarray(out.y), y)
+    np.testing.assert_array_equal(np.asarray(out.idx), idx)
+    np.testing.assert_array_equal(np.asarray(out.sizes), sizes)
+
+    w2 = StreamingFederatedDataset.writer(
+        str(tmp_path / "bad"), x_shape=(3,), x_dtype=np.float32,
+        y_shape=(), y_dtype=np.int32, m=5)
+    with pytest.raises(ValueError, match="trailing shape"):
+        w2.add_samples(np.zeros((2, 4), np.float32), np.zeros(2, np.int32))
+    w2.add_samples(x[:4], y[:4])
+    w2.add_clients(np.full((1, 5), 17, np.int64), np.array([5], np.int32))
+    with pytest.raises(ValueError, match="references sample"):
+        w2.finalize()                                # idx 17 >= 4 samples
+
+
+def test_open_rejects_foreign_manifest(tmp_path):
+    import json
+    (tmp_path / "manifest.json").write_text(json.dumps({"format": "nope"}))
+    with pytest.raises(ValueError, match="not a repro-streamfed"):
+        StreamingFederatedDataset.open(str(tmp_path))
+
+
+def test_bucket_boundaries_ladder():
+    bs = bucket_boundaries(40)
+    assert bs[0] == 8 and bs[-1] == 40
+    assert list(bs) == sorted(set(bs))
+    assert all(b2 <= max(b1 + 1, int(b1 * 1.5)) for b1, b2 in
+               zip(bs, bs[1:]))                      # geometric, no gaps
+    assert bucket_boundaries(5) == (5,)              # max below min_m
+    with pytest.raises(ValueError, match="max_size"):
+        bucket_boundaries(0)
+
+
+# ------------------------------------------------------- mmap data bank ----
+
+def test_mmap_bank_stages_bitwise_vs_host(ds, sfd):
+    host = ds.paged_bank(steps=2, batch=16)
+    bank = sfd.mmap_bank(steps=2, batch=16)
+    assert isinstance(bank, ClientStore) and not bank.is_resident
+    assert isinstance(bank, MmapPagedBank)
+    assert bank.n_clients == N and bank.spec == host.spec
+    rows = np.array([1, 3, 8])
+    a, b = host.gather(rows), bank.gather(rows)
+    for u, v in ((a.x, b.x), (a.y, b.y), (a.sizes, b.sizes)):
+        np.testing.assert_array_equal(np.asarray(u), np.asarray(v))
+    assert bank.last_staged_bytes == host.last_staged_bytes > 0
+    # prefetch is consumed, like the host tier's
+    bank.prefetch(rows)
+    cached = bank._cache[(rows.tobytes(), None)]
+    assert bank.gather(rows) is cached and bank._cache == {}
+
+
+def test_bucketed_staging_trims_padding(ds, sfd):
+    """With ``boundaries``, a union of small shards stages a narrower
+    [U, M'] chunk — and the staged values (incl. in-graph sampling) are
+    IDENTICAL, because cyclic-pad positions past a client's true size
+    are never sampled."""
+    sizes = np.asarray(sfd.sizes)
+    m = int(sfd.meta["m"])
+    rows = np.argsort(sizes)[:4].astype(np.int64)    # the smallest shards
+    need = int(sizes[rows].max())
+    assert need < m, "fixture must be ragged for this test"
+    bs = sfd.bucket_boundaries()
+    full = sfd.mmap_bank(steps=2, batch=16)
+    bank = sfd.mmap_bank(steps=2, batch=16, boundaries=bs)
+    a, b = full.gather(rows), bank.gather(rows)
+    want_m = next(x for x in bs if x >= need)
+    assert b.x.shape[1] == want_m < a.x.shape[1] == m
+    assert bank.last_staged_bytes < full.last_staged_bytes
+    key = jax.random.PRNGKey(5)
+    parts = jnp.arange(len(rows), dtype=jnp.int32)   # staged-local cohort
+    for u, v in zip(jax.tree.leaves(a.sample(key, parts)),
+                    jax.tree.leaves(b.sample(key, parts))):
+        np.testing.assert_array_equal(np.asarray(u), np.asarray(v))
+
+
+def test_bucket_boundaries_validated(sfd):
+    with pytest.raises(ValueError, match="sorted unique"):
+        sfd.mmap_bank(steps=2, batch=16, boundaries=(16, 8, 200))
+    with pytest.raises(ValueError, match="does not cover"):
+        sfd.mmap_bank(steps=2, batch=16, boundaries=(8, 16))
+
+
+def test_mmap_bank_owned_dir_lifecycle(ds):
+    bank = ds.mmap_bank(steps=2, batch=16)           # fresh temp dir, owned
+    d = bank.directory
+    assert d is not None and os.path.isdir(d)
+    store = bank.state_store({"c": jnp.ones((3,))}, N)
+    assert store.directory.startswith(d + os.sep)    # paired under the bank
+    bank.close()
+    assert not os.path.exists(d)                     # state files went too
+    bank.close()                                     # idempotent
+
+
+# ------------------------------------------------------ mmap state store ---
+
+def test_mmap_state_roundtrip_copy_close():
+    one = {"m": jnp.arange(3.0), "v": jnp.ones((2, 2))}
+    with MmapStateStore.broadcast(one, n=6) as store:
+        assert isinstance(store, ClientStore) and not store.is_resident
+        assert isinstance(store, HostStateStore)     # the host contract, held
+        assert store.n_clients == 6 and not store.stateless
+        for leaf in jax.tree.leaves(store.bank):
+            assert isinstance(leaf, np.memmap)
+        rows = np.array([1, 4])
+        staged = store.gather(rows)
+        np.testing.assert_array_equal(np.asarray(staged["m"]),
+                                      np.tile(np.arange(3.0), (2, 1)))
+        assert store.last_staged_bytes == device_bytes(staged) > 0
+        twin = store.copy()                          # branches NEW cold files
+        assert twin.directory != store.directory
+        store.scatter(rows, jax.tree.map(lambda x: x + 1.0, staged))
+        np.testing.assert_array_equal(store.bank["m"][1], [1, 2, 3])
+        np.testing.assert_array_equal(store.bank["m"][0], [0, 1, 2])
+        np.testing.assert_array_equal(twin.bank["m"][4], [0, 1, 2])
+        d, dt = store.directory, twin.directory
+        twin.close()
+        assert not os.path.exists(dt)
+    assert not os.path.exists(d)
+
+
+def test_mmap_state_write_behind_fence():
+    with MmapStateStore.broadcast({"c": jnp.zeros((2,))}, n=8) as store:
+        rows = np.array([2, 5])
+        store.scatter_async(rows, {"c": jnp.ones((2, 2))})
+        store.prefetch(rows)                         # in flight: must skip
+        store.fence(rows)
+        np.testing.assert_array_equal(store.bank["c"][2], 1.0)
+        np.testing.assert_array_equal(                # re-gather post-fence
+            np.asarray(store.gather(rows)["c"]), np.ones((2, 2)))
+
+
+def test_mmap_zero_init_is_sparse(tmp_path):
+    logical = 4096 * 64 * 4                          # 1 MiB per leaf
+    probe = tmp_path / "probe"
+    with open(probe, "wb") as f:
+        f.truncate(logical)
+    if os.stat(probe).st_blocks * 512 >= logical:
+        pytest.skip("filesystem does not store sparse files")
+    store = MmapStateStore.broadcast(
+        {"zero": np.zeros((64,), np.float32),
+         "ones": np.ones((64,), np.float32)}, n=4096)
+    # dict leaves flatten key-sorted: leaf0 = "ones" (dense), leaf1 = "zero"
+    stat = {f: os.stat(os.path.join(store.directory, f))
+            for f in os.listdir(store.directory)}
+    assert stat["state_leaf1.mmap"].st_size == logical
+    assert stat["state_leaf1.mmap"].st_blocks * 512 < logical // 4
+    assert stat["state_leaf0.mmap"].st_blocks * 512 >= logical
+    store.close()
+
+
+def test_stateless_mmap_store_pages_zero_from_disk(ds, task):
+    store = MmapStateStore.broadcast((), n=100_000)
+    assert store.stateless and store.disk_bytes() == 0
+    assert store.directory is None                   # no files at all
+    store.gather(np.arange(64))
+    assert store.last_staged_bytes == 0
+    # end to end: a stateless registration through the full mmap tier
+    bank = ds.mmap_bank(steps=2, batch=16)
+    with bank:
+        sim = FedSim(task.with_data(bank), "fedavg", HParams(lr=0.1), N)
+        st = sim.init(jax.random.PRNGKey(0))
+        assert isinstance(st.clients, MmapStateStore) and st.clients.stateless
+        assert not any("state" in f for f in os.listdir(bank.directory))
+        sim.run_scanned(jax.random.PRNGKey(1), 2, sample_clients=4,
+                        eval_every=1)
+        assert st.clients.last_staged_bytes == 0
+
+
+# ----------------------------------- mmap ≡ host-paged ≡ resident (vmap) ---
+
+@pytest.mark.parametrize("algo,hp", [
+    ("scaffold", HParams(lr=0.1)),                   # stateful clients
+    ("fedpm_foof", HParams(lr=0.3, damping=1.0)),    # preconditioned mixing
+])
+def test_mmap_scanned_equals_resident_bitwise(task, ds, sfd, algo, hp):
+    rng = jax.random.PRNGKey(0)
+    res = task.with_data(ds.device_bank(steps=2, batch=16))
+    got_r, _ = FedSim(res, algo, hp, N).run_scanned(
+        rng, R, sample_clients=5, eval_every=2)
+    got_h, _ = FedSim(task.with_data(ds.paged_bank(steps=2, batch=16)),
+                      algo, hp, N).run_scanned(
+        rng, R, sample_clients=5, eval_every=2)
+    got_m, _ = FedSim(task.with_data(sfd.mmap_bank(steps=2, batch=16)),
+                      algo, hp, N).run_scanned(
+        rng, R, sample_clients=5, eval_every=2)
+    assert isinstance(got_m.clients, MmapStateStore)
+    _exact(got_m, got_h, f"{algo}:mmap-vs-hostpaged")
+    _exact(got_m, got_r, f"{algo}:mmap-vs-resident")
+
+
+def test_overlap_fence_shared_cohort_rows(task, ds, sfd):
+    """eval_every=1 under full participation: EVERY consecutive chunk
+    pair shares every cohort row, so each gather re-reads rows the
+    write-behind may still be draining — the fence must make overlap-on
+    indistinguishable from the synchronous scatter."""
+    rng = jax.random.PRNGKey(3)
+    hp = HParams(lr=0.1)
+    out = {}
+    for tag, overlap in (("on", True), ("off", False)):
+        sim = FedSim(task.with_data(sfd.mmap_bank(steps=2, batch=16)),
+                     "scaffold", hp, N, scatter_overlap=overlap)
+        assert sim.scatter_overlap is overlap
+        out[tag], _ = sim.run_scanned(rng, 4, eval_every=1)
+        assert out[tag].clients._pending == []       # final fence drained
+    _exact(out["on"], out["off"], "overlap-fence")
+
+
+# ------------------------------------------------------------- cleanup -----
+
+def test_no_mmap_leak_after_failed_run(ds, task, tmp_path):
+    """An exception mid-``run_scanned`` must not leak cold files past the
+    owning ``with`` block (the satellite-2 contract)."""
+    sfd = StreamingFederatedDataset.from_dataset(
+        ds, directory=str(tmp_path / "d"))
+    boom = RuntimeError("eval exploded")
+
+    def eval_fn(params):
+        raise boom
+
+    with pytest.raises(RuntimeError, match="eval exploded"):
+        with sfd.mmap_bank(steps=2, batch=16, owned=True) as bank:
+            sim = FedSim(task.with_data(bank), "scaffold",
+                         HParams(lr=0.1), N)
+            sim.run_scanned(jax.random.PRNGKey(0), 4, sample_clients=4,
+                            eval_every=1, eval_fn=eval_fn)
+    assert not list(tmp_path.rglob("*.mmap"))
+    assert not (tmp_path / "d").exists()
+
+
+EXIT_CLEANUP_SCRIPT = r'''
+import sys; sys.path.insert(0, "src")
+import numpy as np, jax.numpy as jnp
+from repro.data import FederatedDataset, make_clustered_classification
+from repro.fl.coldstore import MmapStateStore
+
+data = make_clustered_classification(240, 16, 4, seed=0)
+ds = FederatedDataset.from_arrays(data, 6, alpha=0.5, seed=0)
+bank = ds.mmap_bank(steps=2, batch=16)                  # owns a temp dir
+store = MmapStateStore.broadcast({"c": jnp.ones((3,))}, n=6)
+print("DIRS", bank.directory, store.directory)
+bank.gather(np.arange(3)); store.gather(np.arange(3))
+# no close(): weakref.finalize must fire at interpreter exit
+'''
+
+
+def test_cold_files_removed_at_interpreter_exit():
+    res = subprocess.run([sys.executable, "-c", EXIT_CLEANUP_SCRIPT],
+                         cwd=os.path.join(os.path.dirname(__file__), ".."),
+                         capture_output=True, text=True, timeout=300)
+    assert res.returncode == 0, res.stderr[-3000:]
+    line = next(ln for ln in res.stdout.splitlines() if ln.startswith("DIRS"))
+    dirs = line.split()[1:]
+    assert len(dirs) == 2
+    for d in dirs:
+        assert not os.path.exists(d), d
+
+
+# ------------------------------------------- sharded engine (8 devices) ----
+
+COLD_SHARDED_SCRIPT = r'''
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys; sys.path.insert(0, "src")
+import jax, jax.numpy as jnp, numpy as np
+from repro.core.algorithms import HParams
+from repro.data import FederatedDataset, make_clustered_classification
+from repro.fl.coldstore import MmapStateStore
+from repro.fl.simulate import FedSim
+from repro.fl.sharded import make_client_mesh, staging_sharding
+from repro.fl.tasks import DNNTask
+from repro.models.simple import MLPModel
+
+assert jax.device_count() == 8
+mesh = make_client_mesh()
+N, R = 16, 4
+data = make_clustered_classification(1600, 16, 4, seed=0)
+ds = FederatedDataset.from_arrays(data, N, alpha=0.5, seed=0)
+task = DNNTask(MLPModel(in_dim=16, hidden=(32,), num_classes=4))
+hp = HParams(lr=0.1)
+
+def close(a, b, tag):
+    ca = a.clients.bank if hasattr(a.clients, "bank") else a.clients
+    cb = b.clients.bank if hasattr(b.clients, "bank") else b.clients
+    for name, x, y in (("params", a.params, b.params),
+                       ("server", a.server, b.server), ("clients", ca, cb)):
+        for u, v in zip(jax.tree.leaves(x), jax.tree.leaves(y)):
+            np.testing.assert_allclose(np.asarray(u), np.asarray(v),
+                                       rtol=2e-6, atol=2e-6,
+                                       err_msg=f"{tag}:{name}")
+
+rng = jax.random.PRNGKey(0)
+pag = task.with_data(ds.paged_bank(steps=2, batch=16))
+got_h, _ = FedSim(pag, "scaffold", hp, N, mesh=mesh).run_scanned(
+    rng, R, sample_clients=6, eval_every=2)
+with ds.mmap_bank(steps=2, batch=16) as bank:
+    sim = FedSim(task.with_data(bank), "scaffold", hp, N, mesh=mesh)
+    got_m, _ = sim.run_scanned(rng, R, sample_clients=6, eval_every=2)
+    assert isinstance(got_m.clients, MmapStateStore)
+    close(got_m, got_h, "cold-sharded")
+    print("COLD-SHARDED-EQUIV-OK")
+    # staged chunks land SHARD-LOCAL straight from the maps
+    staged = bank.gather(np.arange(8), sharding=staging_sharding(mesh))
+    assert len(staged.x.sharding.device_set) == 8
+    assert all(s.data.shape[0] == 1 for s in staged.x.addressable_shards)
+    print("COLD-SHARDED-PLACEMENT-OK")
+print("OK")
+'''
+
+
+def test_cold_sharded_contracts():
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run([sys.executable, "-c", COLD_SHARDED_SCRIPT],
+                         cwd=os.path.join(os.path.dirname(__file__), ".."),
+                         capture_output=True, text=True, env=env,
+                         timeout=600)
+    assert res.returncode == 0, res.stderr[-3000:]
+    for marker in ("COLD-SHARDED-EQUIV-OK", "COLD-SHARDED-PLACEMENT-OK"):
+        assert marker in res.stdout, (marker, res.stdout)

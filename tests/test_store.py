@@ -126,6 +126,78 @@ def test_host_state_store_copy_branches():
     np.testing.assert_array_equal(twin.bank["c"], 0.0)
 
 
+def test_state_store_prefetch_read_ahead():
+    """State-row ``prefetch`` is REAL read-ahead (stages into the cache,
+    consumed by the next matching gather) — not the pre-PR10 no-op."""
+    store = HostStateStore.broadcast({"c": jnp.arange(3.0)}, n=6)
+    rows = np.array([1, 4])
+    store.prefetch(rows)
+    key = (rows.tobytes(), None)
+    assert key in store._cache
+    cached = store._cache[key][1]
+    assert store.gather(rows)["c"] is cached["c"]    # consumed the stage
+    assert store._cache == {}
+
+
+def test_state_store_scatter_invalidates_prefetch():
+    """A scatter touching prefetched rows drops the stale stage; disjoint
+    prefetches survive."""
+    store = HostStateStore.broadcast({"c": jnp.zeros((2,))}, n=8)
+    hot, cold = np.array([1, 4]), np.array([6, 7])
+    store.prefetch(hot)
+    store.prefetch(cold)
+    store.scatter(np.array([4]), {"c": jnp.ones((1, 2))})
+    assert (hot.tobytes(), None) not in store._cache
+    assert (cold.tobytes(), None) in store._cache
+    np.testing.assert_array_equal(store.gather(hot)["c"][1], 1.0)
+
+
+def test_state_store_scatter_async_and_fence():
+    """Write-behind: ``scatter_async`` returns before the rows land;
+    ``fence`` (row-filtered or full) retires the write, and ``gather`` of
+    intersecting rows fences implicitly."""
+    store = HostStateStore.broadcast({"c": jnp.zeros((2,))}, n=8)
+    rows = np.array([2, 5])
+    store.scatter_async(rows, {"c": jnp.ones((2, 2))})
+    store.fence(np.array([3]))                       # disjoint: may keep it
+    store.fence(rows)                                # intersecting: waits
+    assert store._pending == []
+    np.testing.assert_array_equal(store.bank["c"][2], 1.0)
+    store.scatter_async(rows, {"c": jnp.full((2, 2), 2.0)})
+    np.testing.assert_array_equal(store.gather(rows)["c"],  # implicit fence
+                                  np.full((2, 2), 2.0))
+    store.scatter_async(rows, {"c": jnp.full((2, 2), 3.0)})
+    store.fence()                                    # rows=None: drain all
+    assert store._pending == []
+    np.testing.assert_array_equal(store.bank["c"][5], 3.0)
+
+
+def test_state_store_prefetch_skips_in_flight_rows():
+    """Read-ahead must not cache rows an un-fenced write-behind may still
+    be writing (the stale-read hazard rule)."""
+    from concurrent.futures import Future
+    store = HostStateStore.broadcast({"c": jnp.zeros((2,))}, n=8)
+    fut = Future()                                   # never resolves: in flight
+    store._pending.append((np.array([4]), fut))
+    store.prefetch(np.array([4, 6]))                 # intersects: skipped
+    assert store._cache == {}
+    store.prefetch(np.array([6, 7]))                 # disjoint: cached
+    assert (np.array([6, 7]).tobytes(), None) in store._cache
+    fut.set_result(None)
+    store.fence()
+
+
+def test_state_store_fence_reraises_worker_error():
+    from concurrent.futures import Future
+    store = HostStateStore.broadcast({"c": jnp.zeros((2,))}, n=8)
+    fut = Future()
+    fut.set_exception(RuntimeError("drain failed"))
+    store._pending.append((np.array([1]), fut))
+    with pytest.raises(RuntimeError, match="drain failed"):
+        store.fence()
+    assert store._pending == []
+
+
 def test_stateless_store_pages_nothing():
     assert get_algorithm("fedavg").stateless
     assert not get_algorithm("scaffold").stateless
